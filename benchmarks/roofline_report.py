@@ -1,0 +1,68 @@
+"""Roofline report over the dry-run results (deliverable g).
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun) and emits one
+row per (arch x shape x mesh) cell with the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(results_dir: str = RESULTS, mesh: str = None, tag=""):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        d = json.load(open(f))
+        if d.get("status") != "ok":
+            continue
+        parts = d["cell"].split("/")
+        if tag and (len(parts) < 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) > 3:
+            continue
+        if mesh and d.get("mesh") != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def rows(results_dir: str = RESULTS):
+    out = []
+    for d in load_cells(results_dir):
+        step_us = max(d["compute_s"], d["memory_s"], d["collective_s"]) * 1e6
+        out.append((f"roofline/{d['cell']}", step_us,
+                    f"compute_s={d['compute_s']:.3e} "
+                    f"memory_s={d['memory_s']:.3e} "
+                    f"collective_s={d['collective_s']:.3e} "
+                    f"bound={d['bound']} "
+                    f"useful_frac={d['useful_flops_frac']:.2f} "
+                    f"roofline_frac={d['roofline_frac']:.3f}"))
+    if not out:
+        out.append(("roofline/none", 0.0,
+                    "run `python -m repro.launch.dryrun` first"))
+    return out
+
+
+def markdown_table(results_dir: str = RESULTS, mesh: str = "single",
+                   tag: str = "") -> str:
+    cells = load_cells(results_dir, mesh=mesh, tag=tag)
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | bound | "
+        "MODEL/HLO flops | roofline_frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for d in sorted(cells, key=lambda d: (d["arch"], d["shape"])):
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['compute_s']:.3e} | "
+            f"{d['memory_s']:.3e} | {d['collective_s']:.3e} | "
+            f"{d['bound']} | {d['useful_flops_frac']:.2f} | "
+            f"{d['roofline_frac']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,24 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, paper_tables, roofline_report
+    print("name,us_per_call,derived")
+    failures = 0
+    suites = list(paper_tables.ALL) + list(kernel_bench.ALL) + \
+        [roofline_report.rows]
+    for fn in suites:
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.2f},{derived}")
+        except Exception as e:  # keep the suite running; report at the end
+            failures += 1
+            print(f"{fn.__name__},0.00,ERROR {type(e).__name__}: {e}",
+                  file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,81 @@
+"""Quickstart: the paper's full workflow in one script, CPU-runnable.
+
+1. train a small LM (fp32/bf16),
+2. post-training int8 quantization (the paper's technique),
+3. latency-bounded batched serving (Table 4 policy),
+4. the TPU v1 analytical model: roofline + design sweep highlights.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+import os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import batching as bt
+from repro.core import perfmodel as pm
+from repro.core.qlinear import W8A16
+from repro.core.quant import quantize_tree, tree_weight_bytes
+from repro.data import SyntheticLMData
+from repro.models import registry as R
+from repro.optim import make_optimizer
+from repro.runtime import steps as ST
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    cfg = get_config("starcoder2-3b").reduced()
+    print(f"== 1. train {cfg.name} ({cfg.n_layers}L d={cfg.d_model}) ==")
+    params = R.init(key, cfg)
+    opt = make_optimizer("adamw", lr=3e-3)
+    state = opt.init(params)
+    step = jax.jit(ST.make_train_step(cfg, opt), donate_argnums=(0, 1))
+    data = SyntheticLMData(cfg.vocab, 64, 8, seed=0)
+    losses = []
+    for t in range(40):
+        tokens, labels = data.batch_at(t)
+        batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+        params, state, m = step(params, state, batch,
+                                jax.random.fold_in(key, t))
+        losses.append(float(m["loss"]))
+        if t % 10 == 0:
+            print(f"  step {t:3d}  loss {losses[-1]:.3f}")
+    print(f"  loss {np.mean(losses[:5]):.3f} -> {np.mean(losses[-5:]):.3f}")
+
+    print("== 2. post-training int8 quantization ==")
+    fp_bytes = tree_weight_bytes(params)
+    qparams = quantize_tree(params, min_size=2048)
+    print(f"  weights {fp_bytes/1e6:.1f} MB -> "
+          f"{tree_weight_bytes(qparams)/1e6:.1f} MB")
+    tokens, _ = data.batch_at(99)
+    b = {"tokens": jnp.asarray(tokens)}
+    fp = R.apply_forward(params, cfg, b)
+    qi = R.apply_forward(qparams, cfg, b, mode=W8A16)
+    agree = float(jnp.mean(jnp.argmax(fp, -1) == jnp.argmax(qi, -1)))
+    print(f"  int8 vs fp top-1 agreement: {agree:.1%}")
+
+    print("== 3. latency-bounded serving (Table 4 policy) ==")
+    for model, cap in ((bt.TABLE4_CPU, 64), (bt.TABLE4_GPU, 64),
+                       (bt.TABLE4_TPU, 250)):
+        bsz, lat, ips, frac = bt.table4_row(model, 7e-3, max_batch=cap)
+        print(f"  {model.name:8s} batch={bsz:4d} p99={lat*1e3:5.1f} ms "
+              f"IPS={ips:9,.0f} ({frac:.0%} of max)")
+
+    print("== 4. TPU v1 analytical model highlights ==")
+    print(f"  peak {pm.TPU_V1.peak_ops/1e12:.0f} TOPS, ridge "
+          f"{pm.TPU_V1.ridge_ops_per_byte:.0f} ops/byte (paper: 92, ~1350)")
+    for name in ("MLP0", "CNN0"):
+        r = pm.simulate(pm.APP_BY_NAME[name])
+        print(f"  {name}: modeled {r.tops:.1f} TOPS "
+              f"(paper {pm.APP_BY_NAME[name].paper_tops})")
+    g = pm.tpu_prime_gains()
+    print(f"  TPU' (GDDR5): GM {g['gddr5_gm']:.1f}x / WM "
+          f"{g['gddr5_wm']:.1f}x (paper: 2.6 / 3.9)")
+
+
+if __name__ == "__main__":
+    main()

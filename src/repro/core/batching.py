@@ -1,0 +1,189 @@
+"""Latency-aware batching — the paper's Table 4 discipline as a scheduler.
+
+The paper's central serving observation: inference is 99th-percentile
+response-time bound, and batch size is the lever that trades latency for
+throughput.  CPUs/GPUs must drop to batch 16 to meet MLP0's 7 ms limit
+(reaching only 42%/37% of their peak IPS) while the TPU still runs batch 200
+(80% of peak).
+
+This module provides:
+
+- ``LatencyModel``: p99(B) = queue/host constant + per-batch service time,
+  either calibrated from two measured points (paper platforms) or derived
+  from `core.perfmodel` / measured step times (our serving runtime),
+- ``choose_batch``: largest batch meeting a deadline — Table 4's policy,
+- ``BatchQueue``: a deterministic virtual-time request-batching simulator
+  used by the serving example and the property tests: requests accumulate
+  until either (a) the batch that *would* form can no longer finish by the
+  earliest request's deadline, or (b) the chosen max batch is reached.
+  Deterministic execution (static shapes, no speculation) is what makes the
+  p99 predictable — the TPU argument, applied to the serving runtime.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import heapq
+from typing import Callable, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyModel:
+    """p99 latency and throughput as a function of batch size.
+
+    latency(B)  = fixed + per_item * B     (service + host + queue margin)
+    ips(B)      = B / (service_fixed + service_per_item * B)
+    """
+    name: str
+    fixed_s: float
+    per_item_s: float
+    service_fixed_s: float
+    service_per_item_s: float
+
+    def p99_latency(self, batch: int) -> float:
+        return self.fixed_s + self.per_item_s * batch
+
+    def service_time(self, batch: int) -> float:
+        return self.service_fixed_s + self.service_per_item_s * batch
+
+    def ips(self, batch: int) -> float:
+        return batch / self.service_time(batch)
+
+    @classmethod
+    def from_two_points(cls, name: str,
+                        p1: Tuple[int, float, float],
+                        p2: Tuple[int, float, float]) -> "LatencyModel":
+        """Calibrate from two (batch, p99_s, ips) measurements (Table 4)."""
+        (b1, l1, i1), (b2, l2, i2) = p1, p2
+        per_item = (l2 - l1) / (b2 - b1)
+        fixed = l1 - per_item * b1
+        s1, s2 = b1 / i1, b2 / i2
+        sper = (s2 - s1) / (b2 - b1)
+        sfix = s1 - sper * b1
+        return cls(name, fixed, per_item, sfix, sper)
+
+
+# Table 4, calibrated from the paper's two measured rows per platform.
+TABLE4_CPU = LatencyModel.from_two_points(
+    "Haswell", (16, 7.2e-3, 5482), (64, 21.3e-3, 13194))
+TABLE4_GPU = LatencyModel.from_two_points(
+    "K80", (16, 6.7e-3, 13461), (64, 8.3e-3, 36465))
+TABLE4_TPU = LatencyModel.from_two_points(
+    "TPU", (200, 7.0e-3, 225000), (250, 10.0e-3, 280000))
+
+
+def choose_batch(model: LatencyModel, deadline_s: float,
+                 max_batch: int = 4096) -> int:
+    """Largest batch whose modeled p99 meets the deadline (0 if none)."""
+    lo, hi, best = 1, max_batch, 0
+    while lo <= hi:
+        mid = (lo + hi) // 2
+        if model.p99_latency(mid) <= deadline_s:
+            best, lo = mid, mid + 1
+        else:
+            hi = mid - 1
+    return best
+
+
+def table4_row(model: LatencyModel, deadline_s: float = 7e-3,
+               max_batch: int = 4096):
+    """(chosen batch, p99, IPS at chosen batch, % of max IPS) — one Table 4
+    comparison row.  Max IPS evaluated at the platform's saturating batch."""
+    b = choose_batch(model, deadline_s, max_batch)
+    ips = model.ips(b) if b else 0.0
+    ips_max = model.ips(max_batch)
+    return b, model.p99_latency(b) if b else float("inf"), ips, ips / ips_max
+
+
+# ---------------------------------------------------------------------------
+# Virtual-time batch queue (serving runtime component)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    arrival_s: float
+    deadline_s: float          # absolute
+    rid: int = 0
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    start_s: float
+    finish_s: float
+    rids: Tuple[int, ...]
+    deadlines_met: bool
+
+
+class BatchQueue:
+    """Deterministic virtual-time batching simulator.
+
+    Policy: when the engine is free and requests are pending, form the
+    largest batch B <= max_batch such that now + service_time(B) meets the
+    earliest pending deadline; launch immediately if waiting for one more
+    request would break that bound, otherwise wait for more arrivals up to
+    `max_wait_s`.  This is the Table 4 trade, made online.
+    """
+
+    def __init__(self, service_time: Callable[[int], float],
+                 max_batch: int = 256, max_wait_s: float = 2e-3):
+        self.service_time = service_time
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+
+    def run(self, requests: Sequence[Request]) -> List[BatchRecord]:
+        pending: List[Request] = []
+        records: List[BatchRecord] = []
+        reqs = sorted(requests, key=lambda r: r.arrival_s)
+        i, now = 0, 0.0
+        while i < len(reqs) or pending:
+            # admit everything that has arrived by `now`
+            while i < len(reqs) and reqs[i].arrival_s <= now:
+                bisect.insort(pending, reqs[i],
+                              key=lambda r: r.deadline_s)
+                i += 1
+            if not pending:
+                now = reqs[i].arrival_s
+                continue
+            earliest = pending[0].deadline_s
+            b = min(len(pending), self.max_batch)
+            # shrink until the batch finishes by the earliest deadline
+            while b > 1 and now + self.service_time(b) > earliest:
+                b -= 1
+            # can we afford to wait for more work?
+            next_arrival = reqs[i].arrival_s if i < len(reqs) else None
+            can_wait = (
+                b < self.max_batch and next_arrival is not None
+                and next_arrival - now <= self.max_wait_s
+                and next_arrival + self.service_time(
+                    min(b + 1, self.max_batch)) <= earliest)
+            if can_wait:
+                now = next_arrival
+                continue
+            batch = pending[:b]
+            del pending[:b]
+            finish = now + self.service_time(b)
+            records.append(BatchRecord(
+                now, finish, tuple(r.rid for r in batch),
+                all(finish <= r.deadline_s for r in batch)))
+            now = finish
+        return records
+
+
+def p99(latencies: Sequence[float]) -> float:
+    if not latencies:
+        return 0.0
+    xs = sorted(latencies)
+    idx = min(len(xs) - 1, int(0.99 * len(xs)))
+    return xs[idx]
+
+
+def poisson_arrivals(rate_per_s: float, n: int, deadline_s: float,
+                     seed: int = 0) -> List[Request]:
+    """Deterministic pseudo-Poisson arrival process (no wall clock)."""
+    import random
+    rng = random.Random(seed)
+    t, out = 0.0, []
+    for rid in range(n):
+        t += rng.expovariate(rate_per_s)
+        out.append(Request(arrival_s=t, deadline_s=t + deadline_s, rid=rid))
+    return out

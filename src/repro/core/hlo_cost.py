@@ -1,0 +1,519 @@
+"""Trip-count-aware cost analysis over post-SPMD HLO text.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` counts a ``while`` body
+ONCE, so any scan-over-layers model (all of ours) under-reports FLOPs/bytes
+by ~n_layers — useless for rooflines.  This module re-derives the three
+roofline inputs by walking the HLO text recursively:
+
+- flops: dot (2 * result_elems * contraction) and convolution ops, found in
+  any computation including inside fusions, multiplied up through while-loop
+  trip counts (parsed from the loop condition's comparison constant — JAX
+  scans always count 0..N);
+- bytes: XLA's bytes-accessed convention at *fusion boundaries*
+  (sum of operand + result sizes for every materializing op), so
+  register/VMEM reuse inside a fusion is not double-counted;
+- collective bytes: operand sizes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute, also trip-multiplied.
+
+The compiled module is the per-device program (shapes are shard shapes), so
+totals are per-chip; callers multiply by chip count for the global figure.
+
+Known approximations (documented, conservative):
+- elementwise/transcendental flops ignored (matmul-dominated workloads);
+- `conditional` branches take the max-cost branch;
+- a while whose bound cannot be parsed contributes trip=1 (warned in the
+  result so it is visible rather than silent).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "u2": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# one typed shape, e.g. bf16[8,128]{1,0} or f32[] or (tuples handled apart)
+_SHAPE_RE = re.compile(r"([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(.*?\)|\S+(?:\[[\d,]*\])?"
+    r"(?:\{[\d,]*\})?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\((.*?)\)\s*->")
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = tuple(int(d) for d in m.group(2).split(",") if d)
+        out.append((dt, dims))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_list(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _elems(dims: Tuple[int, ...]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str            # operand list + attrs (raw tail of the line)
+
+    def operands(self) -> List[str]:
+        # rest begins AFTER the opcode's opening paren -> depth starts at 1
+        depth, args, cur = 1, [], []
+        for ch in self.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if ch == "," and depth == 1:
+                args.append("".join(cur).strip())
+                cur = []
+            else:
+                cur.append(ch)
+        if cur and "".join(cur).strip():
+            args.append("".join(cur).strip())
+        names = []
+        for a in args:
+            a = a.strip()
+            m = re.search(r"%([\w\.\-]+)\s*$", a)
+            names.append(m.group(1) if m else a.lstrip("%"))
+        return names
+
+    def attr(self, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w\.\-]+)", self.rest)
+        return m.group(1) if m else None
+
+    def attr_list(self, key: str) -> List[int]:
+        m = re.search(key + r"=\{([\d,]*)\}", self.rest)
+        if not m:
+            return []
+        return [int(x) for x in m.group(1).split(",") if x]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: Dict[str, Instr]
+    order: List[str]
+    param_types: Dict[str, str]
+
+    def shape_of(self, operand: str) -> Optional[str]:
+        if operand in self.instrs:
+            return self.instrs[operand].type_str
+        return self.param_types.get(operand)
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                params = {}
+                for pm in re.finditer(r"([\w\.\-]+):\s*([^,()]+(?:\([^)]*\))?)",
+                                      m.group(2)):
+                    params[pm.group(1)] = pm.group(2).strip()
+                cur = Computation(m.group(1), {}, [], params)
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if im:
+            ins = Instr(im.group(1), im.group(2), im.group(3), im.group(4))
+            cur.instrs[ins.name] = ins
+            cur.order.append(ins.name)
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "custom-call",
+}
+
+# Ops that are pure element-wise dataflow: on TPU these fuse into the
+# producing/consuming matmul or reduction kernel, so in the tpu-fused byte
+# model a fusion containing ONLY these contributes no extra HBM traffic
+# (its bytes are already counted at the neighbouring matmul/reduce/copy).
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "negate", "abs", "sign",
+    "maximum", "minimum", "compare", "select", "and", "or", "xor", "not",
+    "convert", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "logistic", "rsqrt", "sqrt", "cbrt", "power", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "clamp", "is-finite",
+    "broadcast", "reshape", "bitcast", "copy", "transpose", "iota",
+    "constant", "parameter", "tuple", "get-tuple-element", "slice", "pad",
+    "concatenate", "reverse", "erf", "atan2", "expm1", "log1p", "real",
+    "imag", "remainder", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "stochastic-convert", "reduce-precision",
+    "bitcast-convert", "popcnt", "clz", "map",
+}
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {op: 0.0 for op in COLLECTIVE_OPS})
+    unparsed_whiles: int = 0
+
+    def add(self, other: "CostTotals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] += v * mult
+        self.unparsed_whiles += other.unparsed_whiles
+
+
+class HloCostModel:
+    """mode="tpu-fused" (default): bytes use the TPU fusion model — pure
+    element-wise fusions are free (they fuse into neighbours on TPU), while
+    matmuls, reductions, (dynamic-)slices/updates, gathers/scatters, copies
+    and collectives pay operand+result traffic.  mode="raw": every CPU
+    fusion boundary pays (XLA bytes-accessed convention on this backend) —
+    reported alongside for transparency."""
+
+    def __init__(self, text: str, mode: str = "tpu-fused"):
+        self.comps = parse_hlo(text)
+        self.mode = mode
+        self._cache: Dict[str, CostTotals] = {}
+        self._fusion_free: Dict[str, bool] = {}
+        entry = None
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_HDR_RE.match(line)
+                entry = m.group(1) if m else None
+                break
+        if entry is None:  # fall back: last computation
+            entry = list(self.comps)[-1]
+        self.entry = entry
+
+    def _is_elementwise_only(self, comp_name: str) -> bool:
+        """True if the computation (and its callees) contain only
+        element-wise dataflow ops."""
+        if comp_name in self._fusion_free:
+            return self._fusion_free[comp_name]
+        comp = self.comps.get(comp_name)
+        ok = True
+        if comp is not None:
+            for iname in comp.order:
+                ins = comp.instrs[iname]
+                if ins.opcode == "fusion":
+                    callee = ins.attr("calls")
+                    if callee and not self._is_elementwise_only(callee):
+                        ok = False
+                        break
+                    continue
+                if ins.opcode not in _ELEMENTWISE:
+                    ok = False
+                    break
+        self._fusion_free[comp_name] = ok
+        return ok
+
+    # -- per-op costs -----------------------------------------------------
+
+    def _dot_flops(self, comp: Computation, ins: Instr) -> float:
+        shapes = _shape_list(ins.type_str)
+        if not shapes:
+            return 0.0
+        out_elems = _elems(shapes[0][1])
+        ops = ins.operands()
+        lhs_shape = comp.shape_of(ops[0]) if ops else None
+        contract = 1
+        if lhs_shape:
+            ls = _shape_list(lhs_shape)
+            if ls:
+                dims = ls[0][1]
+                cdims = ins.attr_list("lhs_contracting_dims")
+                for c in cdims:
+                    if c < len(dims):
+                        contract *= dims[c]
+        return 2.0 * out_elems * contract
+
+    def _conv_flops(self, comp: Computation, ins: Instr) -> float:
+        shapes = _shape_list(ins.type_str)
+        if not shapes:
+            return 0.0
+        out_elems = _elems(shapes[0][1])
+        ops = ins.operands()
+        if len(ops) < 2:
+            return 0.0
+        rhs_shape = comp.shape_of(ops[1])
+        if not rhs_shape:
+            return 0.0
+        rs = _shape_list(rhs_shape)
+        if not rs:
+            return 0.0
+        kernel_elems = _elems(rs[0][1])
+        out_feat = rs[0][1][-1] if rs[0][1] else 1
+        return 2.0 * out_elems * (kernel_elems / max(1, out_feat))
+
+    def _op_bytes(self, comp: Computation, ins: Instr) -> float:
+        """Operand+result bytes with slice-aware charging.
+
+        A dynamic-slice reads only its result-sized window, not the whole
+        operand (critical: scan-saved activation stacks (L, B, S, D) and
+        stacked layer weights are consumed one layer-slice per iteration).
+        Likewise dynamic-update-slice writes only the update region
+        (in-place KV-cache updates).  Fusion operands consumed exclusively
+        via dynamic-slice inside the fusion are charged at slice size.
+        """
+        op = ins.opcode
+        if op == "dynamic-slice":
+            return 2.0 * _type_bytes(ins.type_str)
+        if op == "dynamic-update-slice":
+            ops = ins.operands()
+            upd = comp.shape_of(ops[1]) if len(ops) > 1 else None
+            if upd:
+                return 2.0 * _type_bytes(upd)
+            return float(_type_bytes(ins.type_str))
+        if op == "gather":
+            return 2.0 * _type_bytes(ins.type_str)
+        if op == "scatter":
+            ops = ins.operands()
+            upd = comp.shape_of(ops[2]) if len(ops) > 2 else None
+            return 2.0 * _type_bytes(upd) if upd else \
+                float(_type_bytes(ins.type_str))
+        callee = ins.attr("calls") if op == "fusion" else None
+        sliced = self._sliced_params(callee) if callee else {}
+        dus = self._dus_root(callee) if callee else None
+        if dus is not None:
+            # in-place cache update: write = update region; the updated
+            # buffer param is aliased, not re-read.
+            upd_bytes, alias_idx = dus
+            total = float(upd_bytes)
+            if alias_idx is not None:
+                sliced = dict(sliced)
+                sliced[alias_idx] = 0.0
+        else:
+            total = float(_type_bytes(ins.type_str))
+        for i, opnd in enumerate(ins.operands()):
+            if i in sliced:
+                total += sliced[i]
+                continue
+            sh = comp.shape_of(opnd)
+            if sh:
+                total += _type_bytes(sh)
+        return total
+
+    def _dus_root(self, callee: str):
+        """If the fusion's root is a dynamic-update-slice (possibly behind
+        bitcasts), return (update_bytes, aliased_param_index)."""
+        key = "__dus__" + callee
+        if key in self._fusion_free:
+            return self._fusion_free[key]
+        result = None
+        comp = self.comps.get(callee)
+        if comp is not None and comp.order:
+            root = comp.instrs[comp.order[-1]]
+            seen = 0
+            while root.opcode in ("bitcast", "copy") and seen < 4:
+                ops = root.operands()
+                if not ops or ops[0] not in comp.instrs:
+                    break
+                root = comp.instrs[ops[0]]
+                seen += 1
+            if root.opcode == "dynamic-update-slice":
+                ops = root.operands()
+                upd = comp.shape_of(ops[1]) if len(ops) > 1 else None
+                alias_idx = None
+                if ops and ops[0] in comp.instrs and \
+                        comp.instrs[ops[0]].opcode == "parameter":
+                    m = re.match(r"\s*(\d+)", comp.instrs[ops[0]].rest)
+                    if m:
+                        alias_idx = int(m.group(1))
+                if upd:
+                    result = (2.0 * _type_bytes(upd), alias_idx)
+        self._fusion_free[key] = result
+        return result
+
+    def _sliced_params(self, callee: str) -> Dict[int, float]:
+        """param index -> charged bytes, for fusion params consumed only
+        through dynamic-slice inside the fusion body."""
+        key = "__sliced__" + callee
+        if key in self._fusion_free:   # reuse dict as generic cache
+            return self._fusion_free[key]
+        out: Dict[int, float] = {}
+        comp = self.comps.get(callee)
+        if comp is not None:
+            pname_to_idx = {}
+            for iname in comp.order:
+                ins = comp.instrs[iname]
+                if ins.opcode == "parameter":
+                    m = re.match(r"\s*(\d+)", ins.rest)
+                    if m:
+                        pname_to_idx[iname] = int(m.group(1))
+            for pname, idx in pname_to_idx.items():
+                consumers = [comp.instrs[i] for i in comp.order
+                             if pname in comp.instrs[i].operands()]
+                if consumers and all(c.opcode == "dynamic-slice"
+                                     for c in consumers):
+                    out[idx] = sum(_type_bytes(c.type_str)
+                                   for c in consumers)
+        self._fusion_free[key] = out
+        return out
+
+    def _trip_count(self, cond_name: str) -> Optional[int]:
+        """Max s32/s64 constant in the cond computation closure."""
+        seen, stack, best = set(), [cond_name], None
+        while stack:
+            cname = stack.pop()
+            if cname in seen or cname not in self.comps:
+                continue
+            seen.add(cname)
+            comp = self.comps[cname]
+            for iname in comp.order:
+                ins = comp.instrs[iname]
+                if ins.opcode == "constant" and \
+                        ins.type_str.split("[")[0] in ("s32", "s64", "u32"):
+                    m = re.search(r"constant\((-?\d+)\)", "constant(" +
+                                  ins.rest)
+                    if m:
+                        v = int(m.group(1))
+                        best = v if best is None else max(best, v)
+                if ins.opcode == "fusion":
+                    callee = ins.attr("calls")
+                    if callee:
+                        stack.append(callee)
+        return best
+
+    # -- recursive roll-up -------------------------------------------------
+
+    def cost_of(self, comp_name: str) -> CostTotals:
+        if comp_name in self._cache:
+            return self._cache[comp_name]
+        total = CostTotals()
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return total
+        self._cache[comp_name] = total   # breaks cycles defensively
+        for iname in comp.order:
+            ins = comp.instrs[iname]
+            op = ins.opcode
+            if op == "while":
+                body = ins.attr("body")
+                cond = ins.attr("condition")
+                trip = self._trip_count(cond) if cond else None
+                if trip is None or trip <= 0:
+                    trip = 1
+                    total.unparsed_whiles += 1
+                inner = CostTotals()
+                if body:
+                    inner.add(self.cost_of(body))
+                if cond:
+                    inner.add(self.cost_of(cond))
+                total.add(inner, mult=trip)
+                continue
+            if op == "conditional":
+                branches = re.findall(r"(?:branch_computations=\{([^}]*)\}"
+                                      r"|true_computation=%?([\w\.\-]+)"
+                                      r"|false_computation=%?([\w\.\-]+))",
+                                      ins.rest)
+                names: List[str] = []
+                for a, b, c in branches:
+                    if a:
+                        names += [x.strip().lstrip("%")
+                                  for x in a.split(",")]
+                    names += [x for x in (b, c) if x]
+                if names:
+                    worst = max((self.cost_of(n) for n in names),
+                                key=lambda t: t.flops + t.bytes)
+                    total.add(worst)
+                total.bytes += self._op_bytes(comp, ins)
+                continue
+            if op == "fusion":
+                callee = ins.attr("calls")
+                if callee:
+                    # flops (dots can hide inside fusions) but NOT bytes —
+                    # bytes are the fusion boundary below.
+                    inner = self.cost_of(callee)
+                    total.flops += inner.flops
+                    total.collective_bytes += inner.collective_bytes
+                    for k, v in inner.collective_counts.items():
+                        total.collective_counts[k] += v
+                if self.mode == "raw" or callee is None or \
+                        not self._is_elementwise_only(callee):
+                    total.bytes += self._op_bytes(comp, ins)
+                continue
+            if op in ("call", "async-start"):
+                callee = ins.attr("to_apply") or ins.attr("calls")
+                if callee:
+                    total.add(self.cost_of(callee))
+                continue
+            if op == "dot":
+                total.flops += self._dot_flops(comp, ins)
+                total.bytes += self._op_bytes(comp, ins)
+                continue
+            if op == "convolution":
+                total.flops += self._conv_flops(comp, ins)
+                total.bytes += self._op_bytes(comp, ins)
+                continue
+            hit = False
+            for cop in COLLECTIVE_OPS:
+                if op == cop or op.startswith(cop + "-"):
+                    if op.endswith("-done"):
+                        hit = True
+                        break
+                    opbytes = 0.0
+                    for o in ins.operands():
+                        sh = comp.shape_of(o)
+                        if sh:
+                            opbytes += _type_bytes(sh)
+                    if opbytes == 0.0:
+                        opbytes = _type_bytes(ins.type_str)
+                    total.collective_bytes += opbytes
+                    total.collective_counts[cop] += 1
+                    total.bytes += self._op_bytes(comp, ins)
+                    hit = True
+                    break
+            if hit:
+                continue
+            if op in _SKIP_BYTES:
+                continue
+            if self.mode != "raw" and op in _ELEMENTWISE and \
+                    op not in ("copy", "transpose", "concatenate", "pad"):
+                continue  # standalone pointwise: fuses into a neighbour
+            total.bytes += self._op_bytes(comp, ins)
+        return total
+
+    def totals(self) -> CostTotals:
+        return self.cost_of(self.entry)
+
+
+def analyze(hlo_text: str) -> CostTotals:
+    return HloCostModel(hlo_text).totals()

@@ -1,0 +1,286 @@
+"""Symmetric integer quantization — the TPU paper's numerical contract.
+
+The TPU v1 runs inference on 8-bit signed/unsigned integers with 32-bit
+accumulators ("65,536 8-bit MAC ... 16-bit products are collected in the 4 MiB
+of 32-bit Accumulators").  The paper's flow is: train in floating point, then a
+*quantization* step maps weights (and activations) to narrow integers.
+
+This module implements that flow for the JAX framework:
+
+- symmetric per-tensor / per-channel int8 (and int4) quantization,
+- activation calibration (absmax / percentile over a calibration batch),
+- stochastic rounding (used by the gradient-compression path, not by the
+  paper-faithful inference path),
+- a `QTensor` pytree carrying int data + fp scales, consumed by
+  `repro.kernels.ops.qmatmul` and `repro.core.qlinear`.
+
+Mixed-precision note from the paper: 8w×8a runs at full speed, 8×16 at half,
+16×16 at quarter speed.  `bits_speed_factor` encodes that for the perfmodel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INT_DTYPES = {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}
+
+
+def int_bounds(bits: int, signed: bool = True) -> Tuple[int, int]:
+    """Inclusive (min, max) representable values for a `bits`-wide integer."""
+    if signed:
+        return -(2 ** (bits - 1)) + 1, 2 ** (bits - 1) - 1  # symmetric: drop -128
+    return 0, 2**bits - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """Quantized tensor: int values + float scale(s).
+
+    ``values``  int8/int4-in-int8 data, shape S.
+    ``scale``   fp32 scale, broadcastable to S (per-tensor scalar or per-channel).
+    ``bits``    nominal bit width (4 or 8; int4 is stored in int8 containers,
+                matching how XLA:TPU packs narrow ints).
+    Dequantization: ``values.astype(f32) * scale``.
+    """
+
+    values: jax.Array
+    scale: jax.Array
+    bits: int = 8
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return self.values.astype(dtype) * self.scale.astype(dtype)
+
+    @property
+    def nbytes_weights(self) -> int:
+        """Bytes of weight-memory traffic to stream this tensor once —
+        the denominator of the paper's operational-intensity metric."""
+        return int(np.prod(self.shape)) * self.bits // 8 + self.scale.size * 4
+
+
+def _qtensor_flatten_with_keys(q: QTensor):
+    GK = jax.tree_util.GetAttrKey
+    return (((GK("values"), q.values), (GK("scale"), q.scale)), (q.bits,))
+
+
+def _qtensor_flatten(q: QTensor):
+    return ((q.values, q.scale), (q.bits,))
+
+
+def _qtensor_unflatten(aux, children):
+    values, scale = children
+    return QTensor(values=values, scale=scale, bits=aux[0])
+
+
+jax.tree_util.register_pytree_with_keys(
+    QTensor, _qtensor_flatten_with_keys, _qtensor_unflatten,
+    _qtensor_flatten)
+
+
+def _absmax(x: jax.Array, axis, keepdims=True) -> jax.Array:
+    return jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
+
+
+def compute_scale(x: jax.Array, bits: int = 8, axis=None,
+                  percentile: Optional[float] = None) -> jax.Array:
+    """Symmetric scale so that max|x| (or a percentile of |x|) maps to qmax."""
+    _, qmax = int_bounds(bits)
+    if percentile is None:
+        amax = _absmax(x, axis=axis, keepdims=axis is not None)
+    else:
+        amax = jnp.percentile(jnp.abs(x), percentile, axis=axis,
+                              keepdims=axis is not None)
+    amax = jnp.maximum(amax, 1e-8)  # avoid div-by-zero on dead channels
+    return (amax / qmax).astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("bits", "axis", "stochastic"))
+def quantize(x: jax.Array, bits: int = 8, axis=None, *,
+             scale: Optional[jax.Array] = None,
+             stochastic: bool = False,
+             key: Optional[jax.Array] = None) -> QTensor:
+    """Quantize ``x`` symmetrically to ``bits`` ints.
+
+    axis=None  → per-tensor scale (paper's matrix-unit weight tiles).
+    axis=k     → per-channel scales along every axis *except* k reduced;
+                 e.g. for a (in, out) weight use axis=0 to get per-out-column
+                 scales (reduce over rows).  In practice callers pass the
+                 reduction axes via ``axis`` as understood by jnp.max.
+    stochastic → stochastic rounding (for gradient compression).
+    """
+    if scale is None:
+        scale = compute_scale(x, bits=bits, axis=axis)
+    qmin, qmax = int_bounds(bits)
+    scaled = x / scale
+    if stochastic:
+        if key is None:
+            raise ValueError("stochastic rounding needs a PRNG key")
+        noise = jax.random.uniform(key, scaled.shape, dtype=scaled.dtype) - 0.5
+        rounded = jnp.floor(scaled + 0.5 + noise)
+    else:
+        rounded = jnp.round(scaled)
+    q = jnp.clip(rounded, qmin, qmax).astype(jnp.int8 if bits <= 8 else jnp.int16)
+    return QTensor(values=q, scale=scale, bits=bits)
+
+
+def dequantize(q: QTensor, dtype=jnp.float32) -> jax.Array:
+    return q.dequantize(dtype)
+
+
+def fake_quant(x: jax.Array, bits: int = 8, axis=None) -> jax.Array:
+    """Quantize-dequantize with a straight-through estimator (QAT hook)."""
+    q = quantize(x, bits=bits, axis=axis)
+    dq = q.dequantize(x.dtype)
+    return x + jax.lax.stop_gradient(dq - x)
+
+
+# ---------------------------------------------------------------------------
+# Weight quantization for model params
+# ---------------------------------------------------------------------------
+
+def quantize_weight(w: jax.Array, bits: int = 8) -> QTensor:
+    """Per-output-channel symmetric quantization of a linear weight.
+
+    Convention: weights are (..., d_in, d_out); only the contraction axis
+    (d_in, second-to-last) is reduced, so scales are per-(stack..., column):
+    stacked per-layer weights (L, d_in, d_out) get (L, 1, d_out) scales and
+    remain scannable.  This matches the TPU loading a 256x256 weight tile
+    per matrix column bank.
+    """
+    return quantize(w, bits=bits, axis=(w.ndim - 2,))
+
+
+def quantize_embedding(w: jax.Array, bits: int = 8) -> QTensor:
+    """Per-row (per-vocab-entry) quantization for embedding tables: gathers
+    dequantize row-wise, and the tied LM head folds scales per output."""
+    axes = tuple(range(1, w.ndim))
+    return quantize(w, bits=bits, axis=axes)
+
+
+_QUANT_PATH_RE = None  # compiled lazily
+
+
+def _default_quant_predicate(path_str: str, leaf) -> bool:
+    """Quantize matmul weights only: paths ending '.w' (linear / expert /
+    conv weights) or embedding 'table's.  Norm scales, biases, RG-LRU /
+    SSM per-channel params, positional tables stay fp — faithful to the TPU
+    keeping non-matrix state out of the 8-bit datapath."""
+    import re
+    global _QUANT_PATH_RE
+    if _QUANT_PATH_RE is None:
+        _QUANT_PATH_RE = re.compile(
+            r"(\.w$|(^|\.)table$|experts.*w_(gate|up|down)$)")
+    if not (hasattr(leaf, "ndim") and leaf.ndim >= 2
+            and jnp.issubdtype(leaf.dtype, jnp.floating)):
+        return False
+    if "dec_pos" in path_str:
+        return False
+    return bool(_QUANT_PATH_RE.search(path_str))
+
+
+def quantize_tree(params, bits: int = 8, min_size: int = 4096,
+                  predicate=None):
+    """Post-training quantization of a parameter pytree.
+
+    Matmul weights (path allowlist, ≥ ``min_size`` elements) become
+    QTensors — these are the weights the paper streams from Weight Memory.
+    Everything else stays fp.  Embedding tables (path contains "table") use
+    per-row scales.  ``predicate(path_str, leaf) -> bool`` overrides.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        path_str = ".".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path)
+        if predicate is not None:
+            do_q = predicate(path_str, leaf)
+        else:
+            do_q = (_default_quant_predicate(path_str, leaf)
+                    and leaf.size >= min_size)
+        if do_q:
+            is_table = "table" in path_str
+            out.append(quantize_embedding(leaf, bits=bits) if is_table
+                       else quantize_weight(leaf, bits=bits))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_weight_bytes(params) -> int:
+    """Total weight-memory bytes of a (possibly quantized) param tree."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor):
+            total += leaf.nbytes_weights
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Activation calibration (the paper's User-Space-driver compile step)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Calibrator:
+    """Accumulates absmax statistics over calibration batches.
+
+    The TPU user-space driver compiles a model the first time it is evaluated;
+    activation scales are fixed at that point.  We reproduce that: run
+    ``observe`` over a few batches, then ``scales()`` freezes per-site scales.
+    """
+
+    bits: int = 8
+    percentile: Optional[float] = 99.9
+    _stats: dict = dataclasses.field(default_factory=dict)
+
+    def observe(self, name: str, x: jax.Array) -> None:
+        amax = float(jnp.percentile(jnp.abs(x), self.percentile)
+                     if self.percentile is not None else jnp.max(jnp.abs(x)))
+        self._stats[name] = max(self._stats.get(name, 0.0), amax)
+
+    def scales(self) -> dict:
+        _, qmax = int_bounds(self.bits)
+        return {k: max(v, 1e-8) / qmax for k, v in self._stats.items()}
+
+
+def bits_speed_factor(w_bits: int, a_bits: int) -> float:
+    """Paper §2: 8×8 full speed, 8×16 or 16×8 half, 16×16 quarter."""
+    f = 1.0
+    if w_bits > 8:
+        f *= 0.5
+    if a_bits > 8:
+        f *= 0.5
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (beyond-paper: quantize the cross-pod all-reduce)
+# ---------------------------------------------------------------------------
+
+def compress_gradient(g: jax.Array, key: jax.Array, bits: int = 8) -> QTensor:
+    """Stochastic-rounding int8 compression for cross-pod gradient reduce.
+
+    Unbiased (E[q*scale] = g), so SGD/Adam convergence is preserved in
+    expectation; per-tensor scale keeps it one collective-friendly buffer.
+    """
+    scale = compute_scale(g, bits=bits, axis=None)
+    return quantize(g, bits=bits, axis=None, scale=scale,
+                    stochastic=True, key=key)
+
+
+def decompress_gradient(q: QTensor, dtype=jnp.float32) -> jax.Array:
+    return q.dequantize(dtype)

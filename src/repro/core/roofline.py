@@ -1,0 +1,242 @@
+"""Roofline-term derivation from compiled XLA artifacts.
+
+The paper's §4 adapts the Roofline model to NN accelerators (ops per byte of
+weight memory).  This module applies the same methodology to the *new*
+system: for every (arch x shape x mesh) dry-run cell we derive three roofline
+terms from the compiled artifact — no hardware required:
+
+    compute_s    = HLO_FLOPs  / (chips * PEAK_FLOPS)
+    memory_s     = HLO_bytes  / (chips * HBM_BW)
+    collective_s = sum(collective operand bytes) / (chips * ICI_BW)
+
+`compiled.cost_analysis()` provides FLOPs and bytes; collective bytes are
+parsed from the post-SPMD-partitioning HLO text (all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute operand sizes).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 (394 TOPS int8), 819 GB/s HBM,
+~50 GB/s per ICI link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9   # per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=]+?)\s+"
+                     r"([\w\-]+)\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_op: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective op in (post-SPMD) HLO text.
+
+    Two passes: first map instruction name -> result type (operand sizes are
+    looked up from the defining instruction), then for each collective line,
+    sum its operands' sizes.  Falls back to the collective's own result size
+    when an operand can't be resolved (conservative for all-gather, exact
+    for all-reduce/permute).
+    """
+    defs: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            defs[m.group(1)] = m.group(2).strip()
+
+    counts: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    bytes_by_op: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, result_type, opcode = m.groups()
+        base = opcode
+        for op in COLLECTIVE_OPS:
+            if base == op or base.startswith(op + "-"):  # e.g. all-gather-start
+                if base.endswith("-done"):
+                    break  # counted at -start
+                counts[op] += 1
+                # operand list: text inside the first (...) after opcode
+                paren = line[line.index(opcode + "(") + len(opcode) + 1:]
+                depth, args, cur = 1, [], []
+                for ch in paren:
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            break
+                    if ch == "," and depth == 1:
+                        args.append("".join(cur))
+                        cur = []
+                    else:
+                        cur.append(ch)
+                if cur:
+                    args.append("".join(cur))
+                got = 0
+                for a in args:
+                    a = a.strip().lstrip("%")
+                    # operands may carry inline types: "bf16[8,128] %x"
+                    b = _shape_bytes(a)
+                    if b == 0:
+                        b = _shape_bytes(defs.get(a.split(" ")[-1], ""))
+                    got += b
+                if got == 0:
+                    got = _shape_bytes(result_type)
+                bytes_by_op[op] += got
+                break
+    return CollectiveStats(counts=counts, bytes_by_op=bytes_by_op)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """The three roofline terms for one (arch x shape x mesh) cell."""
+    cell: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collective_counts: Dict[str, int]
+    model_flops: float = 0.0           # 6*N*D etc., "useful" flops
+    peak_flops: float = PEAK_FLOPS_BF16
+    bytes_per_device: Optional[dict] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * self.peak_flops)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Lower-bound step time: terms overlap, the max dominates."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat / redundant compute."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the hardware roofline achieved if the step ran at its
+        dominant term: useful model flops per second / peak."""
+        if self.step_s == 0:
+            return 0.0
+        return (self.model_flops / self.step_s) / (self.chips * self.peak_flops)
+
+    def to_dict(self) -> dict:
+        return {
+            "cell": self.cell, "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_counts": self.collective_counts,
+            "model_flops": self.model_flops,
+            "peak_flops": self.peak_flops,
+            "bytes_per_device": self.bytes_per_device,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bound": self.bound,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+        }
+
+
+def from_compiled(cell: str, compiled, chips: int, *,
+                  model_flops: float = 0.0,
+                  peak_flops: float = PEAK_FLOPS_BF16,
+                  hlo_text: Optional[str] = None) -> RooflineTerms:
+    """Build RooflineTerms from a jax Compiled object.
+
+    The compiled module is the per-device SPMD program, and XLA's own
+    cost_analysis counts while-loop (scan) bodies once — so the roofline
+    inputs come from `core.hlo_cost` (trip-count-aware HLO walk), scaled to
+    global by the chip count.
+    """
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    from repro.core import hlo_cost as HC
+    totals = HC.analyze(text)
+    flops = totals.flops * chips      # per-device program -> global
+    byts = totals.bytes * chips
+    coll = CollectiveStats(
+        counts={k: int(v) for k, v in totals.collective_counts.items()},
+        bytes_by_op={"all": int(totals.collective_bytes * chips)})
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                ma, "generated_code_size_in_bytes", None),
+        }
+    except Exception:
+        pass
+    return RooflineTerms(
+        cell=cell, chips=chips, hlo_flops=flops, hlo_bytes=byts,
+        collective_bytes=float(coll.total_bytes),
+        collective_counts=coll.counts, model_flops=model_flops,
+        peak_flops=peak_flops, bytes_per_device=mem)
+
+
+def save_report(terms: List[RooflineTerms], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump([t.to_dict() for t in terms], f, indent=1)
+
+
+def load_report(path: str) -> List[dict]:
+    with open(path) as f:
+        return json.load(f)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (SyntheticLMData, DataState, make_pipeline)
+
+__all__ = ["SyntheticLMData", "DataState", "make_pipeline"]

@@ -1,0 +1,146 @@
+"""Public jit'd wrappers around the Pallas quantized-matmul kernels.
+
+Responsibilities:
+- accept ND activations (leading dims flattened to M),
+- pad M/N/K up to MXU-aligned block multiples and slice the result back,
+- dispatch: TPU backend -> compiled Pallas kernel; CPU -> the jnp oracle
+  (numerically identical contract) unless ``interpret=True`` is forced, which
+  runs the actual kernel body through the Pallas interpreter for validation,
+- integrate with `repro.core.quant.QTensor`.
+
+This is the only module model code should import from kernels/.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor, quantize
+from repro.kernels import qmatmul as _k
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover - defensive
+        return False
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _pick_block(size: int, pref: int, align: int) -> int:
+    """Largest block <= pref that is a multiple of ``align`` covering size."""
+    if size <= align:
+        return align
+    return min(pref, ((size + align - 1) // align) * align if size < pref else pref)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "activation", "out_dtype", "interpret", "bm", "bn", "bk"))
+def qmatmul(x, w: QTensor, bias: Optional[jax.Array] = None, *,
+            x_q: Optional[QTensor] = None, activation: str = "none",
+            out_dtype=jnp.bfloat16, interpret: bool = False,
+            bm: int = 128, bn: int = 128, bk: int = 256) -> jax.Array:
+    """act((x @ dequant(w)) + bias) with int8 weights.
+
+    ``x`` fp array of shape (..., K); ``w`` QTensor (K, N) with per-column
+    scales.  If ``x_q`` is given (pre-quantized activations, per-tensor
+    scale), the full w8a8 integer path runs; otherwise weight-only w8a16.
+    """
+    if not isinstance(w, QTensor):
+        raise TypeError("w must be a QTensor; quantize with quantize_weight()")
+    lead = x.shape[:-1]
+    kdim = x.shape[-1]
+    n = w.shape[-1]
+    x2 = x.reshape(-1, kdim)
+    m = x2.shape[0]
+
+    w_scale = w.scale.reshape(-1)
+    use_pallas = _on_tpu() or interpret
+    run_interp = interpret and not _on_tpu()
+
+    if x_q is not None:
+        xq2 = x_q.values.reshape(-1, kdim)
+        xs = x_q.scale.reshape(())
+        if use_pallas:
+            xp = _pad_to(_pad_to(xq2, bm, 0), bk, 1)
+            wp = _pad_to(_pad_to(w.values, bk, 0), bn, 1)
+            wsp = _pad_to(w_scale, bn, 0)
+            bp = _pad_to(bias, bn, 0) if bias is not None else None
+            out = _k.qmatmul_w8a8(
+                xp, wp, xs, wsp, bp, bm=bm, bn=bn, bk=bk,
+                activation=activation, out_dtype=out_dtype,
+                interpret=run_interp)
+            return out[:m, :n].reshape(*lead, n)
+        out = _ref.qmatmul_w8a8_ref(
+            xq2, w.values, xs, w_scale, bias,
+            activation=activation, out_dtype=out_dtype)
+        return out.reshape(*lead, n)
+
+    if use_pallas:
+        xp = _pad_to(_pad_to(x2, bm, 0), bk, 1)
+        wp = _pad_to(_pad_to(w.values, bk, 0), bn, 1)
+        wsp = _pad_to(w_scale, bn, 0)
+        bp = _pad_to(bias, bn, 0) if bias is not None else None
+        out = _k.qmatmul_w8a16(
+            xp, wp, wsp, bp, bm=bm, bn=bn, bk=bk,
+            activation=activation, out_dtype=out_dtype,
+            interpret=run_interp)
+        return out[:m, :n].reshape(*lead, n)
+    out = _ref.qmatmul_w8a16_ref(
+        x2, w.values, w_scale, bias,
+        activation=activation, out_dtype=out_dtype)
+    return out.reshape(*lead, n)
+
+
+def qmatmul_dynamic(x, w: QTensor, bias=None, *, activation: str = "none",
+                    out_dtype=jnp.bfloat16, interpret: bool = False):
+    """w8a8 with on-the-fly per-tensor activation quantization (the TPU's
+    quantize-on-entry-to-UB behaviour)."""
+    x_q = quantize(x.astype(jnp.float32), bits=8, axis=None)
+    return qmatmul(x, w, bias, x_q=x_q, activation=activation,
+                   out_dtype=out_dtype, interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    blk_q: int = 128, blk_k: int = 128,
+                    out_dtype=None, interpret: bool = False):
+    """Fused flash attention.  q: (B, Sq, H, hd); k, v: (B, Skv, H, hd)
+    (KV already expanded to H heads).  TPU -> Pallas kernel; CPU -> dense
+    oracle unless ``interpret=True`` (kernel body under the interpreter).
+    """
+    from repro.kernels import flash_attention as _fa
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    out_dtype = out_dtype or q.dtype
+    use_pallas = _on_tpu() or interpret
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * h, skv, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * h, skv, hd)
+    if use_pallas:
+        bq = min(blk_q, max(8, sq))
+        bk = min(blk_k, max(8, skv))
+        qp = _pad_to(_pad_to(qr, bq, 1), 128, 2)
+        kp = _pad_to(_pad_to(kr, bk, 1), 128, 2)
+        vp = _pad_to(_pad_to(vr, bk, 1), 128, 2)
+        out = _fa.flash_attention_bhsd(
+            qp, kp, vp, blk_q=bq, blk_k=bk, causal=causal, window=window,
+            kv_len=skv, sm_scale=hd ** -0.5, out_dtype=out_dtype,
+            interpret=interpret and not _on_tpu())
+        out = out[:, :sq, :hd]
+    else:
+        out = _ref.flash_attention_ref(qr, kr, vr, causal=causal,
+                                       window=window, out_dtype=out_dtype)
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

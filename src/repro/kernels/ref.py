@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the Pallas kernels in this package.
+
+Every kernel in kernels/ must agree with its oracle here (tests sweep shapes
+and dtypes in interpret mode).  The oracles are also the CPU fallback used by
+ops.py when not running on TPU and not asked for interpret-mode execution.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _activate(x: jax.Array, activation: str) -> jax.Array:
+    if activation == "none":
+        return x
+    if activation == "relu":
+        return jnp.maximum(x, 0.0)
+    if activation == "gelu":
+        return jax.nn.gelu(x)
+    if activation == "silu":
+        return x * jax.nn.sigmoid(x)
+    if activation == "tanh":
+        return jnp.tanh(x)
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(x)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def qmatmul_w8a8_ref(x: jax.Array, w: jax.Array, x_scale: jax.Array,
+                     w_scale: jax.Array, bias: Optional[jax.Array] = None, *,
+                     activation: str = "none",
+                     out_dtype=jnp.float32) -> jax.Array:
+    """int8 x int8 -> int32 -> dequant -> bias -> act, bit-exact accumulate."""
+    acc = jax.lax.dot_general(
+        x, w, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * x_scale.astype(jnp.float32) \
+        * w_scale.reshape(1, -1).astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.reshape(1, -1).astype(jnp.float32)
+    return _activate(out, activation).astype(out_dtype)
+
+
+def qmatmul_w8a16_ref(x: jax.Array, w: jax.Array, w_scale: jax.Array,
+                      bias: Optional[jax.Array] = None, *,
+                      activation: str = "none",
+                      out_dtype=jnp.bfloat16) -> jax.Array:
+    """fp acts x dequantized int8 weights, fp32 accumulate."""
+    w_fp = w.astype(jnp.float32) * w_scale.reshape(1, -1).astype(jnp.float32)
+    acc = jax.lax.dot_general(
+        x.astype(jnp.float32), w_fp,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if bias is not None:
+        acc = acc + bias.reshape(1, -1).astype(jnp.float32)
+    return _activate(acc, activation).astype(out_dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window=None,
+                        kv_len=None, out_dtype=jnp.bfloat16) -> jax.Array:
+    """Dense softmax attention oracle.  q: (BH, Sq, hd); k,v: (BH, Skv, hd)."""
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    kv_len = skv if kv_len is None else kv_len
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = kpos < kv_len
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid keys (can happen under padding) -> zero output
+    p = jnp.where(mask[None], p, 0.0)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(out_dtype)

@@ -1,0 +1,112 @@
+"""Serving launcher: quantized model + latency-aware batched decode.
+
+The paper's serving story end-to-end: load (or init) a model, post-training
+int8 quantization, measure the service-time curve, pick the largest batch
+meeting the p99 deadline (Table 4 policy), then run a simulated request
+stream through the BatchQueue and report achieved p99 / throughput.
+
+  python -m repro.launch.serve --arch starcoder2-3b --reduced \
+      --deadline-ms 50 --rate 200
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import batching as bt
+from repro.core.qlinear import FP, W8A16, W8A8
+from repro.core.quant import quantize_tree, tree_weight_bytes
+from repro.models import registry as R
+from repro.runtime import steps as ST
+
+
+def measure_service_curve(step_fn, params, cfg, batches=(1, 4, 16),
+                          seq=32, iters=3):
+    """Measured service time at several batch sizes -> LatencyModel."""
+    times = {}
+    for b in batches:
+        tokens = jnp.zeros((b, seq), jnp.int32)
+        batch = {"tokens": tokens}
+        step_fn(params, batch)[0].block_until_ready() if isinstance(
+            step_fn(params, batch), tuple) else \
+            step_fn(params, batch).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = step_fn(params, batch)
+            out = out[0] if isinstance(out, tuple) else out
+            out.block_until_ready()
+        times[b] = (time.perf_counter() - t0) / iters
+    bs = sorted(times)
+    b1, b2 = bs[0], bs[-1]
+    per_item = max((times[b2] - times[b1]) / (b2 - b1), 1e-9)
+    fixed = max(times[b1] - b1 * per_item, 1e-9)
+    return bt.LatencyModel("measured", fixed * 2.0, per_item * 1.5,
+                           fixed, per_item)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--quant", default="w8a16",
+                    choices=["fp", "w8a16", "w8a8"])
+    ap.add_argument("--deadline-ms", type=float, default=50.0)
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="requests/s for the simulated stream")
+    ap.add_argument("--n-requests", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(args.seed)
+    params = R.init(key, cfg)
+    mode = {"fp": FP, "w8a16": W8A16, "w8a8": W8A8}[args.quant]
+    if mode.enabled:
+        fp_bytes = tree_weight_bytes(params)
+        params = quantize_tree(params, min_size=2048)
+        print(f"[quant] weights {fp_bytes / 1e6:.1f} MB -> "
+              f"{tree_weight_bytes(params) / 1e6:.1f} MB ({args.quant})")
+
+    prefill = jax.jit(ST.make_prefill_step(cfg, mode=mode))
+    model = measure_service_curve(prefill, params, cfg, seq=args.seq)
+    deadline = args.deadline_ms * 1e-3
+    batch = bt.choose_batch(model, deadline, args.max_batch)
+    if batch == 0:
+        print(f"[serve] deadline {args.deadline_ms} ms unattainable "
+              f"(p99(1) = {model.p99_latency(1) * 1e3:.1f} ms)")
+        return 1
+    print(f"[serve] service(1)={model.service_time(1)*1e3:.2f} ms  "
+          f"chosen batch={batch}  modeled p99={model.p99_latency(batch)*1e3:.2f} ms"
+          f"  modeled IPS={model.ips(batch):,.0f}")
+
+    reqs = bt.poisson_arrivals(args.rate, args.n_requests, deadline,
+                               args.seed)
+    q = bt.BatchQueue(model.service_time, max_batch=batch)
+    recs = q.run(reqs)
+    lat = []
+    arrival = {r.rid: r.arrival_s for r in reqs}
+    for rec in recs:
+        for rid in rec.rids:
+            lat.append(rec.finish_s - arrival[rid])
+    met = np.mean([rec.deadlines_met for rec in recs])
+    print(f"[serve] {len(recs)} batches, mean size "
+          f"{np.mean([len(r.rids) for r in recs]):.1f}; "
+          f"p99 latency {bt.p99(lat)*1e3:.2f} ms "
+          f"(deadline {args.deadline_ms} ms); "
+          f"batches meeting deadline: {met:.1%}; "
+          f"throughput {len(lat)/max(r.finish_s for r in recs):,.0f} req/s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,178 @@
+"""The paper's six production NNs (Table 1) as runnable JAX models.
+
+Weight counts match Table 1 (the roofline-relevant quantity; exact internal
+topologies are not public).  All matmuls route through the quantized
+`linear`, so these run the paper's actual int8 serving path; the serving
+example drives them through the Table 4 batch scheduler.
+
+- MLP0/MLP1: stacks of FC+ReLU layers (RankBrain-like).
+- LSTM0/LSTM1: stacked LSTM cells, scan over time (GNM Translate subset).
+- CNN0: AlphaGo-style 19x19 board net (16 conv layers of 256 3x3 filters).
+- CNN1: Inception-like conv stack + 4 FC tail layers.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_apps import PaperAppConfig
+from repro.core.qlinear import FP, QuantMode, init_linear, linear
+from repro.core.quant import QTensor
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp_app(key, cfg: PaperAppConfig, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, len(cfg.widths))
+    layers = []
+    d_prev = cfg.widths[0]
+    for k, w in zip(keys, cfg.widths):
+        layers.append(init_linear(k, d_prev, w, bias=True, dtype=dtype))
+        d_prev = w
+    return {"layers": layers}
+
+
+def mlp_app(params: dict, x: Array, *, mode: QuantMode = FP) -> Array:
+    for i, lp in enumerate(params["layers"]):
+        last = i == len(params["layers"]) - 1
+        x = linear(lp, x, activation="none" if last else "relu", mode=mode)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# LSTMs
+# ---------------------------------------------------------------------------
+
+def init_lstm_app(key, cfg: PaperAppConfig, dtype=jnp.float32) -> dict:
+    """n_cells stacked LSTM cells of width `hidden`; 4 gate matmuls per cell
+    on [x; h] (the paper's '24 FC layers' for LSTM0 = 6 cells x 4 gates)."""
+    keys = jax.random.split(key, cfg.n_cells)
+    cells = []
+    for k in keys:
+        cells.append({
+            "w": init_linear(k, 2 * cfg.hidden, 4 * cfg.hidden, bias=True,
+                             dtype=dtype)})
+    return {"cells": cells}
+
+
+def _lstm_cell(cp: dict, x: Array, h: Array, c: Array, mode: QuantMode):
+    z = linear(cp["w"], jnp.concatenate([x, h], axis=-1), mode=mode)
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, c
+
+
+def lstm_app(params: dict, x_seq: Array, *, mode: QuantMode = FP) -> Array:
+    """x_seq: (B, T, hidden) -> final hidden state (B, hidden)."""
+    b, t, d = x_seq.shape
+    n = len(params["cells"])
+    h = jnp.zeros((n, b, d), x_seq.dtype)
+    c = jnp.zeros((n, b, d), x_seq.dtype)
+
+    def step(carry, x_t):
+        h, c = carry
+        inp = x_t
+        hs, cs = [], []
+        for i, cp in enumerate(params["cells"]):
+            hi, ci = _lstm_cell(cp, inp, h[i], c[i], mode)
+            hs.append(hi)
+            cs.append(ci)
+            inp = hi
+        return (jnp.stack(hs), jnp.stack(cs)), None
+
+    (h, c), _ = jax.lax.scan(step, (h, c), x_seq.swapaxes(0, 1))
+    return h[-1]
+
+
+# ---------------------------------------------------------------------------
+# CNNs
+# ---------------------------------------------------------------------------
+
+def init_cnn_app(key, cfg: PaperAppConfig, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, len(cfg.conv_channels) + len(cfg.fc_tail))
+    convs = []
+    c_prev = cfg.conv_channels[0]
+    for k, c in zip(keys, cfg.conv_channels):
+        # He init: preserves activation scale through deep ReLU conv stacks
+        w = (jax.random.truncated_normal(k, -2, 2, (3, 3, c_prev, c),
+                                         jnp.float32)
+             * (2.0 / (9 * c_prev)) ** 0.5).astype(dtype)
+        convs.append({"w": w, "b": jnp.zeros((c,), dtype)})
+        c_prev = c
+    fcs = []
+    d_prev = None
+    for k, w in zip(keys[len(cfg.conv_channels):], cfg.fc_tail):
+        d_prev = d_prev or cfg.fc_tail[0]
+        fcs.append(init_linear(k, d_prev, w, bias=True, dtype=dtype))
+        d_prev = w
+    return {"convs": convs, "fcs": fcs}
+
+
+def _conv2d(w, x):
+    if isinstance(w, QTensor):
+        w = w.dequantize(jnp.float32).astype(x.dtype)  # weight-only quant
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def cnn_app(params: dict, x: Array, *, mode: QuantMode = FP) -> Array:
+    """x: (B, H, W, C)."""
+    for cp in params["convs"]:
+        b = cp["b"]
+        x = jnp.maximum(_conv2d(cp["w"], x) + b[None, None, None], 0.0)
+    if params["fcs"]:
+        x = jnp.mean(x, axis=(1, 2))
+        # project pooled features to the first FC width
+        d_in = params["fcs"][0]["w"].shape[-2] if not isinstance(
+            params["fcs"][0]["w"], QTensor) else \
+            params["fcs"][0]["w"].values.shape[-2]
+        reps = -(-d_in // x.shape[-1])
+        x = jnp.tile(x, (1, reps))[:, :d_in]
+        for i, lp in enumerate(params["fcs"]):
+            last = i == len(params["fcs"]) - 1
+            x = linear(lp, x, activation="none" if last else "relu",
+                       mode=mode)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def init_app(key, cfg: PaperAppConfig, dtype=jnp.float32) -> dict:
+    return {"mlp": init_mlp_app, "lstm": init_lstm_app,
+            "cnn": init_cnn_app}[cfg.kind](key, cfg, dtype)
+
+
+def apply_app(params: dict, cfg: PaperAppConfig, x: Array, *,
+              mode: QuantMode = FP) -> Array:
+    return {"mlp": mlp_app, "lstm": lstm_app,
+            "cnn": cnn_app}[cfg.kind](params, x, mode=mode)
+
+
+def app_input(cfg: PaperAppConfig, batch: int, key=None,
+              dtype=jnp.float32) -> Array:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if cfg.kind == "mlp":
+        return jax.random.normal(key, (batch, cfg.widths[0]), dtype)
+    if cfg.kind == "lstm":
+        return jax.random.normal(key, (batch, 8, cfg.hidden), dtype)
+    return jax.random.normal(
+        key, (batch, cfg.spatial, cfg.spatial, cfg.conv_channels[0]), dtype)
+
+
+def weight_count(params) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, QTensor)):
+        total += (int(jnp.prod(jnp.array(leaf.shape)))
+                  if isinstance(leaf, QTensor) else leaf.size)
+    return total

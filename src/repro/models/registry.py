@@ -1,0 +1,66 @@
+"""Family -> model module dispatch.
+
+Uniform API per family:
+    init(key, cfg, dtype) -> params
+    forward(params, tokens, [extra_embeds,] cfg, *, mode, remat) -> logits
+    init_cache(cfg, batch, s_max, dtype) -> cache
+    decode_step(params, tokens, cache, cache_index, cfg, *, mode)
+        -> (logits, cache)
+
+``apply_forward`` / ``apply_decode`` normalize the extra-input plumbing
+(encoder frames / vision patches) so the runtime treats all ten archs
+identically.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.core.qlinear import FP, QuantMode
+from repro.models import encdec, moe, rglru, ssm, transformer, vision
+
+_MODULES = {
+    "dense": transformer,
+    "moe": moe,
+    "ssm": ssm,
+    "hybrid": rglru,
+    "encdec": encdec,
+    "vlm": vision,
+}
+
+
+def module_for(cfg: ArchConfig):
+    return _MODULES[cfg.family]
+
+
+def init(key, cfg: ArchConfig, dtype=None):
+    import jax.numpy as jnp
+    return module_for(cfg).init(key, cfg, dtype or jnp.float32)
+
+
+def apply_forward(params, cfg: ArchConfig, batch: dict, *,
+                  mode: QuantMode = FP, remat: bool = True):
+    """batch: dict from input_specs (tokens + optional modality embeds)."""
+    m = module_for(cfg)
+    if cfg.family == "encdec":
+        return m.forward(params, batch["tokens"], batch["encoder_embeds"],
+                         cfg, mode=mode, remat=remat)
+    if cfg.family == "vlm":
+        return m.forward(params, batch["tokens"], batch["vision_embeds"],
+                         cfg, mode=mode, remat=remat)
+    return m.forward(params, batch["tokens"], cfg, mode=mode, remat=remat)
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=None):
+    import jax.numpy as jnp
+    return module_for(cfg).init_cache(cfg, batch, s_max,
+                                      dtype or jnp.bfloat16)
+
+
+def apply_decode(params, cfg: ArchConfig, batch: dict, cache, *,
+                 mode: QuantMode = FP):
+    m = module_for(cfg)
+    return m.decode_step(params, batch["tokens"], cache,
+                         batch["cache_index"], cfg, mode=mode)

@@ -1,0 +1,194 @@
+"""Dense decoder-only LM (starcoder2 / mistral-nemo / internlm2 / qwen1.5).
+
+Structure: embedding -> lax.scan over stacked decoder layers -> final norm ->
+(tied) unembed.  One decoder layer = norm -> GQA attention -> residual ->
+norm -> MLP -> residual.  Quantization mode threads through every matmul.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.qlinear import FP, QuantMode
+from repro.models import layers as L
+from repro.runtime.sharding import constrain
+
+Array = jax.Array
+
+
+def attn_config(cfg: ArchConfig, *, window=None) -> L.AttnConfig:
+    return L.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+        window=window if window is not None else cfg.window,
+        qkv_bias=cfg.qkv_bias)
+
+
+def _norm_init(cfg: ArchConfig):
+    return (L.init_layernorm if cfg.norm == "layernorm"
+            else L.init_rmsnorm)
+
+
+def norm_apply(cfg: ArchConfig, p, x):
+    return (L.layernorm if cfg.norm == "layernorm" else L.rmsnorm)(p, x)
+
+
+def init_layer(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln_attn": _norm_init(cfg)(cfg.d_model, dtype),
+        "attn": L.init_attention(k1, attn_config(cfg), dtype),
+        "ln_mlp": _norm_init(cfg)(cfg.d_model, dtype),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp,
+                          activation=cfg.activation, dtype=dtype),
+    }
+
+
+def _strip_meta(p):
+    return {k: v for k, v in p.items() if k != "_meta"}
+
+
+def init(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    ke, kl, ku = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg, dtype))(layer_keys)
+    params = {
+        "embed": L.init_embedding(ke, cfg.vocab, cfg.d_model, dtype),
+        "layers": stacked,
+        "ln_f": _norm_init(cfg)(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.init_embedding(ku, cfg.vocab, cfg.d_model,
+                                             dtype)
+    return params
+
+
+def _layer_fwd(cfg: ArchConfig, mode: QuantMode, x: Array, lp: dict,
+               positions: Array) -> Array:
+    acfg = attn_config(cfg)
+    h = norm_apply(cfg, lp["ln_attn"], x)
+    attn_out, _ = L.attention(lp["attn"], h, acfg, mode=mode,
+                              positions=positions)
+    x = x + attn_out
+    h = norm_apply(cfg, lp["ln_mlp"], x)
+    x = x + L.mlp(lp["mlp"], h, gated=cfg.gated_mlp,
+                  activation=cfg.activation, mode=mode)
+    return constrain(x, "act")
+
+
+def forward(params: dict, tokens: Array, cfg: ArchConfig, *,
+            mode: QuantMode = FP, remat: bool = True) -> Array:
+    """Full-sequence forward (training / prefill).  tokens: (B, S)."""
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def body(x, lp):
+        return _layer_fwd(cfg, mode, x, lp, positions), None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = norm_apply(cfg, params["ln_f"], x)
+    head = params.get("unembed", params["embed"])
+    return L.unembed(head, x)
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_max: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Stacked (L-leading) KV cache.  Sliding-window archs only keep the
+    window (the paper's deterministic-footprint discipline).  With
+    cfg.kv_quant the cache is int8 + per-(token, head) fp32 scales — half
+    the bytes of bf16 (§Perf iteration C1, the paper's 8-bit insight)."""
+    s_alloc = min(s_max, cfg.window) if cfg.window else s_max
+    shape = (cfg.n_layers, batch, s_alloc, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_quant:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+                "v_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32)}
+    zeros = jnp.zeros(shape, dtype)
+    return {"k": zeros, "v": jnp.zeros_like(zeros)}
+
+
+def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
+                cfg: ArchConfig, *, mode: QuantMode = FP
+                ) -> Tuple[Array, dict]:
+    """One decode step: tokens (B, 1) -> logits (B, 1, V), updated cache.
+
+    For sliding-window archs the cache is a ring buffer of size window
+    (write position = cache_index % window).
+    """
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions = cache_index + jnp.arange(s)[None, :]
+    acfg = attn_config(cfg)
+    s_alloc = cache["k"].shape[2]
+    write_idx = cache_index % s_alloc if cfg.window else cache_index
+    valid_len = jnp.minimum(cache_index + s, s_alloc)
+
+    quant = "k_scale" in cache
+    # Append-outside-scan (§Perf A4/C3): inside the scan each layer only
+    # READS its cache slice and emits the new token's k/v; a single
+    # dynamic_update_slice after the scan appends all layers at once.
+    # Rewriting the full slice per layer (the naive functional update)
+    # costs a slice write+read per layer per step — measured as the
+    # dominant decode memory term for MHA-sized caches (kv>=16).  For small
+    # GQA caches the per-layer rewrite is cheap and the big post-scan
+    # update into an S-sharded cache costs more than it saves (measured:
+    # starcoder2 37.8 ms vs 7.9 ms), so they keep the in-scan update.
+    # Ring (windowed) caches also keep it: their overwrite slot must leave
+    # the masked set.
+    append = cfg.window is None and cfg.n_kv_heads >= 16
+
+    def body(x, lp_and_cache):
+        if quant:
+            lp, ck, cv, cks, cvs = lp_and_cache
+            kv = (ck, cv, cks, cvs)
+        else:
+            lp, ck, cv = lp_and_cache
+            kv = (ck, cv)
+        h = norm_apply(cfg, lp["ln_attn"], x)
+        attn_out, new_kv = L.attention(
+            lp["attn"], h, acfg, mode=mode, positions=positions,
+            kv_cache=kv, cache_index=write_idx,
+            valid_len=valid_len, positions_k=positions,
+            append_only=append)
+        x = x + attn_out
+        h = norm_apply(cfg, lp["ln_mlp"], x)
+        x = x + L.mlp(lp["mlp"], h, gated=cfg.gated_mlp,
+                      activation=cfg.activation, mode=mode)
+        return constrain(x, "act"), new_kv
+
+    if quant:
+        xs = (params["layers"], cache["k"], cache["v"],
+              cache["k_scale"], cache["v_scale"])
+        x, (nk, nv, nks, nvs) = jax.lax.scan(body, x, xs)
+        if append:
+            dus = jax.lax.dynamic_update_slice
+            new_cache = {
+                "k": dus(cache["k"], nk, (0, 0, write_idx, 0, 0)),
+                "v": dus(cache["v"], nv, (0, 0, write_idx, 0, 0)),
+                "k_scale": dus(cache["k_scale"], nks,
+                               (0, 0, write_idx, 0, 0)),
+                "v_scale": dus(cache["v_scale"], nvs,
+                               (0, 0, write_idx, 0, 0))}
+        else:
+            new_cache = {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
+    else:
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        if append:
+            dus = jax.lax.dynamic_update_slice
+            new_cache = {"k": dus(cache["k"], nk, (0, 0, write_idx, 0, 0)),
+                         "v": dus(cache["v"], nv, (0, 0, write_idx, 0, 0))}
+        else:
+            new_cache = {"k": nk, "v": nv}
+    x = norm_apply(cfg, params["ln_f"], x)
+    head = params.get("unembed", params["embed"])
+    logits = L.unembed(head, x)
+    return logits, new_cache

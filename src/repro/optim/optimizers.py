@@ -1,0 +1,183 @@
+"""Optimizers built in-tree (no optax): AdamW and Adafactor.
+
+AdamW keeps fp32 m/v (and fp32 master weights when params are bf16) — the
+standard large-scale recipe.  Adafactor keeps factored second moments
+(row/col) for the big 2-D weights, cutting optimizer memory from 2x to ~0x —
+the option used for the largest dry-run cells.
+
+All state is a pytree mirroring the params, so the sharding rules shard it
+exactly like the parameters (FSDP), and checkpoints treat it uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_map(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return tree_map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, step / max(1, warmup))
+        frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: object
+    v: object
+    master: object          # fp32 master copy when params are low-precision
+
+
+def adamw_init(params, *, keep_master: bool = True) -> AdamWState:
+    zeros = tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = (tree_map(lambda p: p.astype(jnp.float32), params)
+              if keep_master else None)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      tree_map(jnp.zeros_like, zeros), master)
+
+
+def adamw_update(params, grads, state: AdamWState, *,
+                 lr, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1):
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    m = tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                 state.m, grads)
+    v = tree_map(lambda v_, g: b2 * v_ + (1 - b2)
+                 * jnp.square(g.astype(jnp.float32)), state.v, grads)
+    base = state.master if state.master is not None else params
+
+    def upd(p, m_, v_):
+        mhat = m_ / bc1
+        vhat = v_ / bc2
+        return (p.astype(jnp.float32)
+                - lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                          + weight_decay * p.astype(jnp.float32)))
+
+    new_master = tree_map(upd, base, m, v)
+    new_params = tree_map(lambda nm, p: nm.astype(p.dtype),
+                          new_master, params)
+    return new_params, AdamWState(
+        step, m, v, new_master if state.master is not None else None)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; no momentum by default)
+# ---------------------------------------------------------------------------
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: object     # row second-moment (or full v for <2D leaves)
+    vc: object     # col second-moment (None entries for <2D leaves)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 8 and p.shape[-2] >= 8
+
+
+def adafactor_init(params) -> AdafactorState:
+    def vr_init(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc_init(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)   # placeholder
+
+    return AdafactorState(jnp.zeros((), jnp.int32),
+                          tree_map(vr_init, params),
+                          tree_map(vc_init, params))
+
+
+def adafactor_update(params, grads, state: AdafactorState, *,
+                     lr, decay: float = 0.8, eps: float = 1e-30,
+                     clip_threshold: float = 1.0,
+                     weight_decay: float = 0.0):
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+    beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** -decay
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if _factored(p):
+            new_vr = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+            new_vc = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+            r = new_vr / jnp.mean(new_vr, axis=-1, keepdims=True)
+            update = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(new_vc)[..., None, :])
+        else:
+            new_vr = beta * vr + (1 - beta) * g2
+            new_vc = vc
+            update = g / jnp.sqrt(new_vr)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-12)
+        update = update / jnp.maximum(1.0, rms / clip_threshold)
+        newp = (p.astype(jnp.float32) - lr_t * update
+                - lr_t * weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), new_vr, new_vc
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_vr = tdef.flatten_up_to(state.vr)
+    flat_vc = tdef.flatten_up_to(state.vc)
+    outs = [upd(p, g, vr, vc) for p, g, vr, vc
+            in zip(flat_p, flat_g, flat_vr, flat_vc)]
+    new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    new_vr = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    new_vc = jax.tree_util.tree_unflatten(tdef, [o[2] for o in outs])
+    return new_params, AdafactorState(step, new_vr, new_vc)
+
+
+# ---------------------------------------------------------------------------
+# uniform facade
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable
+
+
+def make_optimizer(name: str, *, lr, weight_decay: float = 0.1,
+                   keep_master: bool = False) -> Optimizer:
+    if name == "adamw":
+        return Optimizer(
+            "adamw",
+            lambda p: adamw_init(p, keep_master=keep_master),
+            lambda p, g, s: adamw_update(p, g, s, lr=lr,
+                                         weight_decay=weight_decay))
+    if name == "adafactor":
+        return Optimizer(
+            "adafactor",
+            adafactor_init,
+            lambda p, g, s: adafactor_update(p, g, s, lr=lr,
+                                             weight_decay=weight_decay))
+    raise ValueError(name)

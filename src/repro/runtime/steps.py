@@ -1,0 +1,167 @@
+"""Train / serve step builders: the jit boundary of the framework.
+
+``make_train_step``: cross-entropy LM loss -> grads -> clip -> optimizer.
+Distribution is GSPMD: params/opt-state shardings come from the rules
+(FSDP x TP), the batch is dp-sharded, and XLA's latency-hiding scheduler
+overlaps the gradient reduce with the backward pass.
+
+Cross-pod **gradient compression** (``grad_compression="int8"``): the only
+cross-pod traffic in the hierarchical scheme is the gradient all-reduce.
+With compression on, the step runs under ``shard_map`` manual over the
+"pod" axis only (data/model stay auto/GSPMD): per-pod gradients are
+stochastically rounded to int8 (unbiased — core.quant), all-gathered over
+"pod" as int8 (half the bytes of a bf16 all-reduce), and dequant-summed
+locally.  This is the paper's 8-bit insight applied to the interconnect,
+and it shows up directly in the dry-run's collective-bytes term.
+
+``make_serve_step``: prefill (full forward) and decode (one token against
+the KV cache) with static shapes — the TPU's deterministic-execution
+argument applied to the serving runtime (predictable p99, Table 4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.qlinear import FP, QuantMode
+from repro.core.quant import compute_scale, int_bounds
+from repro.models import registry as R
+from repro.optim import Optimizer, clip_by_global_norm
+from repro.runtime import sharding as S
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 1e-4) -> jax.Array:
+    """Mean CE in fp32 + z-loss (logit-norm stabilizer, production recipe)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - ll)
+    return ce + z_loss * jnp.mean(jnp.square(lse))
+
+
+def make_loss_fn(cfg: ArchConfig, *, mode: QuantMode = FP,
+                 remat: bool = True) -> Callable:
+    def loss_fn(params, batch):
+        logits = R.apply_forward(params, cfg, batch, mode=mode, remat=remat)
+        return cross_entropy(logits, batch["labels"])
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# int8 cross-pod gradient exchange
+# ---------------------------------------------------------------------------
+
+def _int8_allreduce_pod(g: jax.Array, key: jax.Array) -> jax.Array:
+    """Unbiased int8 all-reduce over the manual "pod" axis.
+
+    quantize (stochastic) -> all_gather int8 (+ scalar scales) -> local
+    dequant-sum.  Wire bytes: 1B/elem vs 2-4B for a raw all-reduce.
+    """
+    scale = compute_scale(g, bits=8)
+    qmin, qmax = int_bounds(8)
+    noise = jax.random.uniform(key, g.shape, jnp.float32) - 0.5
+    q = jnp.clip(jnp.floor(g.astype(jnp.float32) / scale + 0.5 + noise),
+                 qmin, qmax).astype(jnp.int8)
+    qs = jax.lax.all_gather(q, "pod")                  # (npod, ...)
+    ss = jax.lax.all_gather(scale, "pod")              # (npod, 1...)
+    total = jnp.sum(qs.astype(jnp.float32)
+                    * ss.reshape((ss.shape[0],) + (1,) * g.ndim), axis=0)
+    return (total / qs.shape[0]).astype(g.dtype)
+
+
+def make_train_step(cfg: ArchConfig, optimizer: Optimizer, *,
+                    mode: QuantMode = FP, remat: bool = True,
+                    max_grad_norm: float = 1.0,
+                    grad_compression: Optional[str] = None,
+                    mesh=None) -> Callable:
+    """Returns train_step(params, opt_state, batch, step_rng) ->
+    (params, opt_state, metrics)."""
+    loss_fn = make_loss_fn(cfg, mode=mode, remat=remat)
+
+    def _core(params, opt_state, batch, rng):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if grad_compression == "int8" and mesh is not None \
+                and "pod" in mesh.axis_names:
+            keys = jax.random.split(rng, len(jax.tree.leaves(grads)))
+            keys_tree = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(grads), list(keys))
+            grads = jax.tree_util.tree_map(
+                _int8_allreduce_pod, grads, keys_tree)
+            loss = jax.lax.pmean(loss, "pod")
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        new_params, new_state = optimizer.update(params, grads, opt_state)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, new_state, metrics
+
+    if grad_compression == "int8" and mesh is not None \
+            and "pod" in mesh.axis_names:
+        from jax.sharding import PartitionSpec as P
+        # partial-manual shard_map: only "pod" is manual; data/model stay
+        # under GSPMD auto-sharding inside.
+        pspec = P()            # params: pod-replicated (FSDP is on "data")
+        bspec = jax.tree_util.tree_map(lambda _: P("pod"),
+                                       {"tokens": 0, "labels": 0})
+        core = jax.shard_map(
+            _core, mesh=mesh,
+            in_specs=(pspec, pspec, bspec, P()),
+            out_specs=(pspec, pspec, pspec),
+            axis_names={"pod"}, check_vma=False)
+        return core
+    return _core
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ArchConfig, *, mode: QuantMode = FP) -> Callable:
+    def prefill_step(params, batch):
+        # inference: no remat needed (no backward pass)
+        return R.apply_forward(params, cfg, batch, mode=mode, remat=False)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, *, mode: QuantMode = FP) -> Callable:
+    def decode_step(params, batch, cache):
+        logits, new_cache = R.apply_decode(params, cfg, batch, cache,
+                                           mode=mode)
+        return logits, new_cache
+    return decode_step
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(logits: jax.Array, rng: jax.Array,
+                       temperature: float = 1.0) -> jax.Array:
+    return jax.random.categorical(
+        rng, logits[:, -1].astype(jnp.float32) / temperature
+    ).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# jit + sharding assembly (used by launch/ and the dry-run)
+# ---------------------------------------------------------------------------
+
+def shard_train_fn(train_step, params_like, opt_like, batch_like, mesh,
+                   rules):
+    """jit with in/out shardings resolved from the rules."""
+    p_sh = S.tree_shardings(params_like, mesh, rules)
+    o_sh = S.tree_shardings(opt_like, mesh, rules)
+    from jax.sharding import NamedSharding
+    b_sh = jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, S.batch_spec(mesh, max(1, x.ndim))),
+        batch_like)
+    r_sh = NamedSharding(mesh, S.batch_spec(mesh, 1))
+    return jax.jit(
+        train_step,
+        in_shardings=(p_sh, o_sh, b_sh, r_sh),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1),
+    )

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# tests run against src/ without installation
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Smoke tests and benches must see the real single-CPU device topology.
+# (Only launch/dryrun.py forces 512 host devices, in its own process.)
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "tests must not inherit the dry-run's 512-device override"

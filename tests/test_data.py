@@ -1,0 +1,65 @@
+"""Data pipeline: determinism, resumability, host sharding."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import SyntheticLMData
+
+
+def test_deterministic_across_instances():
+    a = SyntheticLMData(vocab=512, seq_len=32, global_batch=8, seed=7)
+    b = SyntheticLMData(vocab=512, seq_len=32, global_batch=8, seed=7)
+    ta, la = a.batch_at(13)
+    tb, lb = b.batch_at(13)
+    np.testing.assert_array_equal(ta, tb)
+    np.testing.assert_array_equal(la, lb)
+
+
+def test_resume_reproduces_stream():
+    """batch_at(t) is a pure function of (seed, t) — restart-safe."""
+    d = SyntheticLMData(vocab=512, seq_len=32, global_batch=8, seed=1)
+    run1 = [d.batch_at(t)[0] for t in range(6)]
+    run2 = [d.batch_at(t)[0] for t in range(3, 6)]   # "resume at step 3"
+    for a, b in zip(run1[3:], run2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_different_steps_differ():
+    d = SyntheticLMData(vocab=512, seq_len=32, global_batch=8)
+    assert not np.array_equal(d.batch_at(0)[0], d.batch_at(1)[0])
+
+
+def test_labels_are_shifted_tokens():
+    d = SyntheticLMData(vocab=512, seq_len=32, global_batch=4)
+    tokens, labels = d.batch_at(0)
+    # same underlying sequence: tokens[1:] == labels[:-1]
+    np.testing.assert_array_equal(tokens[:, 1:], labels[:, :-1])
+
+
+@given(st.integers(1, 8).filter(lambda n: 16 % n == 0))
+@settings(max_examples=8, deadline=None)
+def test_host_slices_partition_global_batch(host_count):
+    d = SyntheticLMData(vocab=512, seq_len=16, global_batch=16)
+    full, _ = d.batch_at(5)
+    parts = [d.batch_at(5, host_index=i, host_count=host_count)[0]
+             for i in range(host_count)]
+    np.testing.assert_array_equal(np.concatenate(parts, axis=0), full)
+
+
+def test_tokens_within_vocab():
+    d = SyntheticLMData(vocab=100, seq_len=64, global_batch=4)
+    tokens, labels = d.batch_at(2)
+    assert tokens.min() >= 0 and tokens.max() < 100
+    assert labels.min() >= 0 and labels.max() < 100
+
+
+def test_motifs_give_learnable_structure():
+    """Repeated motifs: bigram entropy must be well below iid-uniform."""
+    d = SyntheticLMData(vocab=512, seq_len=256, global_batch=8, seed=0)
+    tokens, _ = d.batch_at(0)
+    # count repeated 8-grams across batch: motifs recur, iid tokens don't
+    from collections import Counter
+    grams = Counter()
+    for row in tokens:
+        for i in range(0, len(row) - 8, 4):
+            grams[tuple(row[i:i + 8])] += 1
+    assert max(grams.values()) >= 2

@@ -1,0 +1,114 @@
+"""End-to-end behaviour tests: the paper's full story on a reduced system.
+
+train (fp) -> post-training int8 quantization -> latency-bounded batched
+serving with the Table 4 scheduler — the complete TPU workflow, on CPU.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import batching as bt
+from repro.core.qlinear import W8A16
+from repro.core.quant import quantize_tree, tree_weight_bytes
+from repro.data import SyntheticLMData
+from repro.models import registry as R
+from repro.optim import make_optimizer
+from repro.runtime import steps as ST
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def trained_model():
+    cfg = get_config("starcoder2-3b").reduced()
+    params = R.init(KEY, cfg)
+    opt = make_optimizer("adamw", lr=3e-3)
+    state = opt.init(params)
+    step = jax.jit(ST.make_train_step(cfg, opt), donate_argnums=(0, 1))
+    data = SyntheticLMData(cfg.vocab, 32, 8, seed=0)
+    losses = []
+    for t in range(25):
+        tokens, labels = data.batch_at(t)
+        batch = {"tokens": jnp.asarray(tokens),
+                 "labels": jnp.asarray(labels)}
+        params, state, m = step(params, state, batch,
+                                jax.random.fold_in(KEY, t))
+        losses.append(float(m["loss"]))
+    return cfg, params, losses
+
+
+def test_training_learns(trained_model):
+    _, _, losses = trained_model
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_quantization_shrinks_weights(trained_model):
+    cfg, params, _ = trained_model
+    q = quantize_tree(params, min_size=2048)
+    assert tree_weight_bytes(q) < 0.5 * tree_weight_bytes(params)
+
+
+def test_quantized_model_quality(trained_model):
+    """int8 serving path: next-token agreement with the fp model."""
+    cfg, params, _ = trained_model
+    q = quantize_tree(params, min_size=2048)
+    data = SyntheticLMData(cfg.vocab, 32, 8, seed=99)
+    tokens, _ = data.batch_at(0)
+    batch = {"tokens": jnp.asarray(tokens)}
+    fp = R.apply_forward(params, cfg, batch)
+    qi = R.apply_forward(q, cfg, batch, mode=W8A16)
+    agree = float(jnp.mean((jnp.argmax(fp, -1) == jnp.argmax(qi, -1))))
+    assert agree > 0.9, f"top-1 agreement {agree}"
+
+
+def test_generate_tokens(trained_model):
+    """Autoregressive generation through the decode path is coherent."""
+    cfg, params, _ = trained_model
+    decode = jax.jit(ST.make_decode_step(cfg))
+    cache = R.init_cache(cfg, 2, 32)
+    tok = jnp.array([[1], [2]], jnp.int32)
+    toks = [tok]
+    for i in range(8):
+        logits, cache = decode(params,
+                               {"tokens": tok,
+                                "cache_index": jnp.array(i)}, cache)
+        tok = ST.greedy_sample(logits)[:, None]
+        toks.append(tok)
+    out = jnp.concatenate(toks, axis=1)
+    assert out.shape == (2, 9)
+    assert int(out.max()) < cfg.vocab
+
+
+def test_latency_bounded_serving(trained_model):
+    """Serve the quantized model through the BatchQueue under a deadline,
+    with the service-time model measured from the actual jit step."""
+    import time
+    cfg, params, _ = trained_model
+    q = quantize_tree(params, min_size=2048)
+    prefill = jax.jit(ST.make_prefill_step(cfg, mode=W8A16))
+    data = SyntheticLMData(cfg.vocab, 32, 16, seed=5)
+    tokens, _ = data.batch_at(0)
+
+    def run(b):
+        batch = {"tokens": jnp.asarray(tokens[:b])}
+        prefill(q, batch).block_until_ready()   # compile
+        t0 = time.perf_counter()
+        for _ in range(3):
+            prefill(q, batch).block_until_ready()
+        return (time.perf_counter() - t0) / 3
+
+    t4, t16 = run(4), run(16)
+    per_item = max((t16 - t4) / 12, 1e-6)
+    fixed = max(t4 - 4 * per_item, 1e-6)
+    model = bt.LatencyModel("local", fixed * 2, per_item * 2, fixed,
+                            per_item)
+    deadline = model.p99_latency(8)   # achievable deadline
+    b = bt.choose_batch(model, deadline, max_batch=16)
+    assert 1 <= b <= 16
+    reqs = bt.poisson_arrivals(rate_per_s=4 / model.service_time(1),
+                               n=40, deadline_s=deadline)
+    recs = bt.BatchQueue(model.service_time, max_batch=b).run(reqs)
+    served = sorted(r for rec in recs for r in rec.rids)
+    assert served == list(range(40))
