@@ -2,13 +2,20 @@
 
 Reads results/dryrun/*.json (written by repro.launch.dryrun) and emits one
 row per (arch x shape x mesh) cell with the three roofline terms, the
-dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction.
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction —
+plus, per cell, the per-op FLOP/byte breakdown recorded by the structural
+HLO cost engine (``CostTotals.by_op``) so the report shows *where* the
+counts come from.
 """
 from __future__ import annotations
 
 import glob
 import json
 import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.core.roofline import op_rows_from_by_op  # noqa: E402
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
 
@@ -30,6 +37,11 @@ def load_cells(results_dir: str = RESULTS, mesh: str = None, tag=""):
     return cells
 
 
+def op_rows(cell: dict, top: int = 6):
+    """Heaviest (opcode, flops, bytes, count) rows of one cell's by_op."""
+    return op_rows_from_by_op(cell.get("by_op"), limit=top)
+
+
 def rows(results_dir: str = RESULTS):
     out = []
     for d in load_cells(results_dir):
@@ -41,6 +53,10 @@ def rows(results_dir: str = RESULTS):
                     f"bound={d['bound']} "
                     f"useful_frac={d['useful_flops_frac']:.2f} "
                     f"roofline_frac={d['roofline_frac']:.3f}"))
+        for op, flops, byts, count in op_rows(d):
+            out.append((f"roofline/{d['cell']}/op/{op}", 0.0,
+                        f"flops={flops:.3e} bytes={byts:.3e} "
+                        f"count={count:.0f}"))
     if not out:
         out.append(("roofline/none", 0.0,
                     "run `python -m repro.launch.dryrun` first"))
@@ -64,5 +80,23 @@ def markdown_table(results_dir: str = RESULTS, mesh: str = "single",
     return "\n".join(lines)
 
 
+def breakdown_table(results_dir: str = RESULTS, mesh: str = "single",
+                    tag: str = "", top: int = 6) -> str:
+    """Per-op FLOP/byte breakdown per cell, from CostTotals.by_op."""
+    cells = load_cells(results_dir, mesh=mesh, tag=tag)
+    lines = [
+        "| cell | op | flops | bytes | count |",
+        "|---|---|---|---|---|",
+    ]
+    for d in sorted(cells, key=lambda d: (d["arch"], d["shape"])):
+        for op, flops, byts, count in op_rows(d, top=top):
+            lines.append(f"| {d['cell']} | {op} | {flops:.3e} | "
+                         f"{byts:.3e} | {count:.0f} |")
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
     print(markdown_table())
+    print()
+    print("Per-op breakdown (from hlo_cost CostTotals.by_op):")
+    print(breakdown_table())

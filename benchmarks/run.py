@@ -1,8 +1,66 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
 import sys
 
 
+def smoke() -> int:
+    """Fast post-refactor sanity gate: compile ONE reduced config, derive
+    its roofline cell through `core.roofline` (structural hlo_cost under the
+    hood), render it through the roofline report, and assert nonzero
+    flops/bytes.  Runs in seconds on CPU, no dry-run sweep needed."""
+    import json
+    import os
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import roofline as RL
+
+    batch, d, layers = 16, 128, 4       # reduced scan-over-layers config
+
+    def stack(x, w):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        return jax.lax.scan(body, x, w)[0]
+
+    compiled = jax.jit(stack).lower(
+        jax.ShapeDtypeStruct((batch, d), jnp.float32),
+        jax.ShapeDtypeStruct((layers, d, d), jnp.float32)).compile()
+    terms = RL.from_compiled("smoke/scan_stack/single", compiled, chips=1,
+                             model_flops=2 * batch * d * d * layers)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        cell = terms.to_dict()
+        cell.update({"status": "ok", "arch": "smoke", "shape": "scan_stack",
+                     "mesh": "single"})
+        with open(os.path.join(tmp, "smoke.json"), "w") as f:
+            json.dump(cell, f)
+        from benchmarks import roofline_report
+        print(roofline_report.markdown_table(results_dir=tmp))
+        print()
+        print("Per-op breakdown (from hlo_cost CostTotals.by_op):")
+        print(roofline_report.breakdown_table(results_dir=tmp))
+
+    assert terms.hlo_flops > 0, "smoke: zero FLOPs from hlo_cost"
+    assert terms.hlo_bytes > 0, "smoke: zero bytes from hlo_cost"
+    assert terms.hlo_flops == 2 * batch * d * d * layers, \
+        f"smoke: flops {terms.hlo_flops} != model {2 * batch * d * d * layers}"
+    assert terms.by_op and terms.by_op.get("dot", {}).get("flops", 0) > 0, \
+        "smoke: per-op breakdown missing dot flops"
+    print("\nsmoke OK: flops/bytes nonzero, scan trip count exact")
+    return 0
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="compile one reduced config and sanity-check the "
+                         "roofline/cost pipeline end to end")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke())
+
     from benchmarks import kernel_bench, paper_tables, roofline_report
     print("name,us_per_call,derived")
     failures = 0

@@ -1,19 +1,29 @@
-"""Trip-count-aware cost analysis over post-SPMD HLO text.
+"""Structural, trip-count-aware cost analysis over post-SPMD HLO text.
 
 Why this exists: XLA's ``compiled.cost_analysis()`` counts a ``while`` body
 ONCE, so any scan-over-layers model (all of ours) under-reports FLOPs/bytes
-by ~n_layers — useless for rooflines.  This module re-derives the three
-roofline inputs by walking the HLO text recursively:
+by ~n_layers — useless for rooflines.  This module re-derives the roofline
+inputs by *parsing* the HLO module into computations and typed instructions
+(not by regexing lines in isolation): operand shapes are resolved by name,
+tuple types are handled, and dot contraction dims come from the
+instruction's ``lhs_contracting_dims`` attribute.  Costs then propagate
+bottom-up through ``fusion`` / ``call`` / ``conditional`` / ``while``:
 
 - flops: dot (2 * result_elems * contraction) and convolution ops, found in
   any computation including inside fusions, multiplied up through while-loop
-  trip counts (parsed from the loop condition's comparison constant — JAX
-  scans always count 0..N);
+  trip counts (XLA's ``known_trip_count`` backend_config when present, else
+  the loop condition's comparison constant — JAX scans always count 0..N);
 - bytes: XLA's bytes-accessed convention at *fusion boundaries*
   (sum of operand + result sizes for every materializing op), so
   register/VMEM reuse inside a fusion is not double-counted;
+  ``dynamic-slice`` / ``dynamic-update-slice`` charge the slice size, not
+  the full stacked operand;
 - collective bytes: operand sizes of all-gather / all-reduce /
-  reduce-scatter / all-to-all / collective-permute, also trip-multiplied.
+  reduce-scatter / all-to-all / collective-permute, also trip-multiplied,
+  broken down per collective kind.
+
+Every charge is also recorded per opcode in ``CostTotals.by_op`` so reports
+can show *where* FLOPs/bytes come from instead of one opaque scalar.
 
 The compiled module is the per-device program (shapes are shard shapes), so
 totals are per-chip; callers multiply by chip count for the global figure.
@@ -21,8 +31,8 @@ totals are per-chip; callers multiply by chip count for the global figure.
 Known approximations (documented, conservative):
 - elementwise/transcendental flops ignored (matmul-dominated workloads);
 - `conditional` branches take the max-cost branch;
-- a while whose bound cannot be parsed contributes trip=1 (warned in the
-  result so it is visible rather than silent).
+- a while whose bound cannot be parsed contributes trip=1 (counted in
+  ``unparsed_whiles`` so it is visible rather than silent).
 """
 from __future__ import annotations
 
@@ -40,82 +50,171 @@ _DTYPE_BYTES = {
 COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                   "collective-permute")
 
-# one typed shape, e.g. bf16[8,128]{1,0} or f32[] or (tuples handled apart)
-_SHAPE_RE = re.compile(r"([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
-_INSTR_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(.*?\)|\S+(?:\[[\d,]*\])?"
-    r"(?:\{[\d,]*\})?)\s+([\w\-]+)\((.*)$")
-_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\((.*?)\)\s*->")
 
+# ---------------------------------------------------------------------------
+# Tokenizing — bracket- and quote-aware, because HLO types/attrs nest
+# ---------------------------------------------------------------------------
 
-def _shape_list(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
-    out = []
-    for m in _SHAPE_RE.finditer(type_str):
-        dt = m.group(1)
-        if dt not in _DTYPE_BYTES:
+def _split_top(s: str, sep: str = ",") -> List[str]:
+    """Split on `sep` at zero (), [], {} nesting depth, skipping quotes.
+
+    This is the fix for the classic regex-walker bug: ``f32[64,128]`` must
+    not be split at the comma inside the brackets.
+    """
+    parts, cur, depth, quoted = [], [], 0, False
+    for ch in s:
+        if quoted:
+            cur.append(ch)
+            if ch == '"':
+                quoted = False
             continue
-        dims = tuple(int(d) for d in m.group(2).split(",") if d)
-        out.append((dt, dims))
-    return out
+        if ch == '"':
+            quoted = True
+            cur.append(ch)
+            continue
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == sep and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        parts.append(tail)
+    return parts
 
 
-def _type_bytes(type_str: str) -> int:
-    total = 0
-    for dt, dims in _shape_list(type_str):
+def _match_paren(s: str, start: int) -> int:
+    """Index one past the ')' matching s[start] == '(' (quote-aware);
+    len(s) if unbalanced."""
+    depth, i, quoted = 0, start, False
+    while i < len(s):
+        ch = s[i]
+        if quoted:
+            if ch == '"':
+                quoted = False
+        elif ch == '"':
+            quoted = True
+        elif ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+        i += 1
+    return len(s)
+
+
+# ---------------------------------------------------------------------------
+# Typed shapes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    dtype: str
+    dims: Tuple[int, ...]
+
+    @property
+    def elems(self) -> int:
         n = 1
-        for d in dims:
+        for d in self.dims:
             n *= d
-        total += n * _DTYPE_BYTES[dt]
-    return total
+        return n
+
+    @property
+    def byte_size(self) -> int:
+        return self.elems * _DTYPE_BYTES.get(self.dtype, 0)
 
 
-def _elems(dims: Tuple[int, ...]) -> int:
-    n = 1
-    for d in dims:
-        n *= d
-    return n
+_LEAF_RE = re.compile(r"^([a-z][a-z0-9]*)\[([\d,]*)\]")
+
+
+def parse_type(type_str: str) -> List[Shape]:
+    """HLO type string -> flat list of array Shapes (tuples flattened;
+    token/opaque elements dropped)."""
+    ts = type_str.strip()
+    if ts.startswith("("):
+        end = ts.rfind(")")
+        if end < 0:
+            return []
+        out: List[Shape] = []
+        for part in _split_top(ts[1:end]):
+            out.extend(parse_type(part))
+        return out
+    m = _LEAF_RE.match(ts)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return []
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return [Shape(m.group(1), dims)]
+
+
+def _shapes_bytes(shapes: List[Shape]) -> int:
+    return sum(s.byte_size for s in shapes)
+
+
+# ---------------------------------------------------------------------------
+# Instructions and computations
+# ---------------------------------------------------------------------------
+
+_NAME = r"[\w.\-]+"
+_HEAD_RE = re.compile(rf"^\s*(ROOT\s+)?%?({_NAME})\s*=\s*")
+_OPCODE_RE = re.compile(rf"^({_NAME})\(")
+_HDR_RE = re.compile(rf"^(ENTRY\s+)?%?({_NAME})\s*\(")
 
 
 @dataclasses.dataclass
 class Instr:
     name: str
-    type_str: str
+    shapes: List[Shape]            # result type, tuples flattened
     opcode: str
-    rest: str            # operand list + attrs (raw tail of the line)
+    operands: List[str]            # operand names (or raw literals)
+    attrs: Dict[str, str]          # raw attr text by key
+    is_root: bool = False
 
-    def operands(self) -> List[str]:
-        # rest begins AFTER the opcode's opening paren -> depth starts at 1
-        depth, args, cur = 1, [], []
-        for ch in self.rest:
-            if ch == "(":
-                depth += 1
-            elif ch == ")":
-                depth -= 1
-                if depth == 0:
-                    break
-            if ch == "," and depth == 1:
-                args.append("".join(cur).strip())
-                cur = []
-            else:
-                cur.append(ch)
-        if cur and "".join(cur).strip():
-            args.append("".join(cur).strip())
-        names = []
-        for a in args:
-            a = a.strip()
-            m = re.search(r"%([\w\.\-]+)\s*$", a)
-            names.append(m.group(1) if m else a.lstrip("%"))
-        return names
+    @property
+    def result_bytes(self) -> int:
+        return _shapes_bytes(self.shapes)
 
-    def attr(self, key: str) -> Optional[str]:
-        m = re.search(key + r"=%?([\w\.\-]+)", self.rest)
-        return m.group(1) if m else None
+    def attr_name(self, key: str) -> Optional[str]:
+        v = self.attrs.get(key)
+        return v.lstrip("%") if v else None
 
-    def attr_list(self, key: str) -> List[int]:
-        m = re.search(key + r"=\{([\d,]*)\}", self.rest)
-        if not m:
-            return []
-        return [int(x) for x in m.group(1).split(",") if x]
+    def attr_ints(self, key: str) -> List[int]:
+        v = self.attrs.get(key, "")
+        m = re.search(r"\{([\d,]*)\}", v)
+        return [int(x) for x in m.group(1).split(",") if x] if m else []
+
+
+def parse_instr(line: str) -> Optional[Instr]:
+    hm = _HEAD_RE.match(line)
+    if not hm:
+        return None
+    is_root, name = bool(hm.group(1)), hm.group(2)
+    rest = line[hm.end():]
+    if rest.startswith("("):                    # tuple-typed result
+        i = _match_paren(rest, 0)
+        type_str, rest = rest[:i], rest[i:].lstrip()
+    else:                                       # single type has no spaces
+        type_str, _, rest = rest.partition(" ")
+    om = _OPCODE_RE.match(rest)
+    if not om:
+        return None
+    opcode = om.group(1)
+    close = _match_paren(rest, om.end() - 1)
+    operand_str = rest[om.end():close - 1]
+    operands = []
+    for part in _split_top(operand_str):
+        nm = re.search(rf"%({_NAME})$", part)
+        operands.append(nm.group(1) if nm else part)
+    attrs: Dict[str, str] = {}
+    for part in _split_top(rest[close:].lstrip().lstrip(",")):
+        k, eq, v = part.partition("=")
+        if eq:
+            attrs[k.strip()] = v.strip()
+    return Instr(name, parse_type(type_str), opcode, operands, attrs, is_root)
 
 
 @dataclasses.dataclass
@@ -123,44 +222,150 @@ class Computation:
     name: str
     instrs: Dict[str, Instr]
     order: List[str]
-    param_types: Dict[str, str]
+    params: Dict[str, List[Shape]]   # header name -> type
+    is_entry: bool = False
 
-    def shape_of(self, operand: str) -> Optional[str]:
+    @property
+    def root(self) -> Optional[Instr]:
+        for iname in self.order:
+            if self.instrs[iname].is_root:
+                return self.instrs[iname]
+        return self.instrs[self.order[-1]] if self.order else None
+
+    def shapes_of(self, operand: str) -> Optional[List[Shape]]:
         if operand in self.instrs:
-            return self.instrs[operand].type_str
-        return self.param_types.get(operand)
+            return self.instrs[operand].shapes
+        return self.params.get(operand)
+
+    def param_index(self, instr: Instr) -> Optional[int]:
+        """Parameter number of a `parameter(N)` instruction."""
+        if instr.opcode != "parameter" or not instr.operands:
+            return None
+        try:
+            return int(instr.operands[0])
+        except ValueError:
+            return None
 
 
-def parse_hlo(text: str) -> Dict[str, Computation]:
+@dataclasses.dataclass
+class HloModule:
+    computations: Dict[str, Computation]
+    entry: Optional[str]
+
+
+def parse_hlo(text: str) -> HloModule:
     comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
     cur: Optional[Computation] = None
     for line in text.splitlines():
+        stripped = line.strip()
         if cur is None:
-            m = _COMP_HDR_RE.match(line)
-            if m and line.rstrip().endswith("{"):
-                params = {}
-                for pm in re.finditer(r"([\w\.\-]+):\s*([^,()]+(?:\([^)]*\))?)",
-                                      m.group(2)):
-                    params[pm.group(1)] = pm.group(2).strip()
-                cur = Computation(m.group(1), {}, [], params)
+            if not stripped.endswith("{") or "->" not in stripped or \
+                    stripped.startswith("HloModule"):
+                continue
+            hm = _HDR_RE.match(stripped)
+            if not hm:
+                continue
+            close = _match_paren(stripped, hm.end() - 1)
+            params: Dict[str, List[Shape]] = {}
+            for part in _split_top(stripped[hm.end():close - 1]):
+                pname, colon, ptype = part.partition(":")
+                if colon:
+                    params[pname.strip().lstrip("%")] = parse_type(ptype)
+            cur = Computation(hm.group(2), {}, [], params,
+                              is_entry=bool(hm.group(1)))
+            if cur.is_entry:
+                entry = cur.name
             continue
-        if line.startswith("}"):
+        if stripped.startswith("}"):
             comps[cur.name] = cur
             cur = None
             continue
-        im = _INSTR_RE.match(line)
-        if im:
-            ins = Instr(im.group(1), im.group(2), im.group(3), im.group(4))
+        ins = parse_instr(line)
+        if ins is not None:
             cur.instrs[ins.name] = ins
             cur.order.append(ins.name)
     if cur is not None:
         comps[cur.name] = cur
-    return comps
+    if entry is None and comps:          # fall back: last computation
+        entry = list(comps)[-1]
+    return HloModule(comps, entry)
 
+
+# ---------------------------------------------------------------------------
+# Cost totals with a per-op breakdown
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class OpCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    count: float = 0.0
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    by_op: Dict[str, OpCost] = dataclasses.field(default_factory=dict)
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {op: 0.0 for op in COLLECTIVE_OPS})
+    collective_bytes_by_op: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {op: 0.0 for op in COLLECTIVE_OPS})
+    unparsed_whiles: int = 0
+
+    def charge(self, op: str, *, flops: float = 0.0, bytes: float = 0.0,
+               count: float = 1.0) -> None:
+        self.flops += flops
+        self.bytes += bytes
+        oc = self.by_op.setdefault(op, OpCost())
+        oc.flops += flops
+        oc.bytes += bytes
+        oc.count += count
+
+    def charge_collective(self, op: str, ici_bytes: float) -> None:
+        self.collective_bytes += ici_bytes
+        self.collective_counts[op] += 1
+        self.collective_bytes_by_op[op] += ici_bytes
+
+    def add(self, other: "CostTotals", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, oc in other.by_op.items():
+            mine = self.by_op.setdefault(k, OpCost())
+            mine.flops += oc.flops * mult
+            mine.bytes += oc.bytes * mult
+            mine.count += oc.count * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] += v * mult
+        for k, v in other.collective_bytes_by_op.items():
+            self.collective_bytes_by_op[k] += v * mult
+        self.unparsed_whiles += other.unparsed_whiles
+
+    def breakdown(self, limit: Optional[int] = None
+                  ) -> List[Tuple[str, OpCost]]:
+        """(opcode, OpCost) rows, heaviest (flops, then bytes) first."""
+        rows = sorted(self.by_op.items(),
+                      key=lambda kv: (kv[1].flops, kv[1].bytes),
+                      reverse=True)
+        return rows[:limit] if limit else rows
+
+    def by_op_dict(self) -> Dict[str, Dict[str, float]]:
+        """JSON-friendly view of the per-op breakdown."""
+        return {k: {"flops": oc.flops, "bytes": oc.bytes, "count": oc.count}
+                for k, oc in self.by_op.items()}
+
+
+# ---------------------------------------------------------------------------
+# The cost model
+# ---------------------------------------------------------------------------
 
 _SKIP_BYTES = {
     "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
     "after-all", "partition-id", "replica-id", "custom-call",
+    "opt-barrier", "optimization-barrier",
 }
 
 # Ops that are pure element-wise dataflow: on TPU these fuse into the
@@ -181,23 +386,18 @@ _ELEMENTWISE = {
     "bitcast-convert", "popcnt", "clz", "map",
 }
 
+# Standalone pointwise ops that still move HBM bytes even in the fused model
+# (they materialize a layout change or a real copy).
+_MATERIALIZING_POINTWISE = ("copy", "transpose", "concatenate", "pad")
 
-@dataclasses.dataclass
-class CostTotals:
-    flops: float = 0.0
-    bytes: float = 0.0
-    collective_bytes: float = 0.0
-    collective_counts: Dict[str, float] = dataclasses.field(
-        default_factory=lambda: {op: 0.0 for op in COLLECTIVE_OPS})
-    unparsed_whiles: int = 0
+_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"')
 
-    def add(self, other: "CostTotals", mult: float = 1.0):
-        self.flops += other.flops * mult
-        self.bytes += other.bytes * mult
-        self.collective_bytes += other.collective_bytes * mult
-        for k, v in other.collective_counts.items():
-            self.collective_counts[k] += v * mult
-        self.unparsed_whiles += other.unparsed_whiles
+
+def _collective_kind(opcode: str) -> Optional[str]:
+    for cop in COLLECTIVE_OPS:
+        if opcode == cop or opcode.startswith(cop + "-"):
+            return cop
+    return None
 
 
 class HloCostModel:
@@ -209,32 +409,28 @@ class HloCostModel:
     reported alongside for transparency."""
 
     def __init__(self, text: str, mode: str = "tpu-fused"):
-        self.comps = parse_hlo(text)
+        self.module = parse_hlo(text)
+        self.comps = self.module.computations
         self.mode = mode
         self._cache: Dict[str, CostTotals] = {}
-        self._fusion_free: Dict[str, bool] = {}
-        entry = None
-        for line in text.splitlines():
-            if line.startswith("ENTRY"):
-                m = _COMP_HDR_RE.match(line)
-                entry = m.group(1) if m else None
-                break
-        if entry is None:  # fall back: last computation
-            entry = list(self.comps)[-1]
-        self.entry = entry
+        self._memo: Dict[str, object] = {}
+        self.entry = self.module.entry
+
+    # -- fusion body classification ---------------------------------------
 
     def _is_elementwise_only(self, comp_name: str) -> bool:
         """True if the computation (and its callees) contain only
         element-wise dataflow ops."""
-        if comp_name in self._fusion_free:
-            return self._fusion_free[comp_name]
+        key = "ew:" + comp_name
+        if key in self._memo:
+            return self._memo[key]
         comp = self.comps.get(comp_name)
         ok = True
         if comp is not None:
             for iname in comp.order:
                 ins = comp.instrs[iname]
                 if ins.opcode == "fusion":
-                    callee = ins.attr("calls")
+                    callee = ins.attr_name("calls")
                     if callee and not self._is_elementwise_only(callee):
                         ok = False
                         break
@@ -242,46 +438,46 @@ class HloCostModel:
                 if ins.opcode not in _ELEMENTWISE:
                     ok = False
                     break
-        self._fusion_free[comp_name] = ok
+        self._memo[key] = ok
         return ok
 
     # -- per-op costs -----------------------------------------------------
 
     def _dot_flops(self, comp: Computation, ins: Instr) -> float:
-        shapes = _shape_list(ins.type_str)
-        if not shapes:
+        if not ins.shapes:
             return 0.0
-        out_elems = _elems(shapes[0][1])
-        ops = ins.operands()
-        lhs_shape = comp.shape_of(ops[0]) if ops else None
+        out_elems = ins.shapes[0].elems
         contract = 1
-        if lhs_shape:
-            ls = _shape_list(lhs_shape)
-            if ls:
-                dims = ls[0][1]
-                cdims = ins.attr_list("lhs_contracting_dims")
-                for c in cdims:
-                    if c < len(dims):
-                        contract *= dims[c]
+        lhs = comp.shapes_of(ins.operands[0]) if ins.operands else None
+        if lhs:
+            dims = lhs[0].dims
+            for c in ins.attr_ints("lhs_contracting_dims"):
+                if c < len(dims):
+                    contract *= dims[c]
         return 2.0 * out_elems * contract
 
     def _conv_flops(self, comp: Computation, ins: Instr) -> float:
-        shapes = _shape_list(ins.type_str)
-        if not shapes:
+        if not ins.shapes or len(ins.operands) < 2:
             return 0.0
-        out_elems = _elems(shapes[0][1])
-        ops = ins.operands()
-        if len(ops) < 2:
+        out_elems = ins.shapes[0].elems
+        rhs = comp.shapes_of(ins.operands[1])
+        if not rhs or not rhs[0].dims:
             return 0.0
-        rhs_shape = comp.shape_of(ops[1])
-        if not rhs_shape:
-            return 0.0
-        rs = _shape_list(rhs_shape)
-        if not rs:
-            return 0.0
-        kernel_elems = _elems(rs[0][1])
-        out_feat = rs[0][1][-1] if rs[0][1] else 1
-        return 2.0 * out_elems * (kernel_elems / max(1, out_feat))
+        kdims = rhs[0].dims
+        # output-feature dim from dim_labels (e.g. b01f_01io->b01f), else
+        # assume the last kernel dim.
+        o_idx = len(kdims) - 1
+        dl = ins.attrs.get("dim_labels", "")
+        if "_" in dl:
+            rhs_labels = dl.split("_")[1].split("->")[0]
+            if "o" in rhs_labels and len(rhs_labels) == len(kdims):
+                o_idx = rhs_labels.index("o")
+        kernel_elems = rhs[0].elems
+        return 2.0 * out_elems * (kernel_elems / max(1, kdims[o_idx]))
+
+    def _operand_bytes(self, comp: Computation, name: str) -> int:
+        shapes = comp.shapes_of(name)
+        return _shapes_bytes(shapes) if shapes else 0
 
     def _op_bytes(self, comp: Computation, ins: Instr) -> float:
         """Operand+result bytes with slice-aware charging.
@@ -294,22 +490,19 @@ class HloCostModel:
         via dynamic-slice inside the fusion are charged at slice size.
         """
         op = ins.opcode
-        if op == "dynamic-slice":
-            return 2.0 * _type_bytes(ins.type_str)
+        if op in ("dynamic-slice", "gather"):
+            return 2.0 * ins.result_bytes
         if op == "dynamic-update-slice":
-            ops = ins.operands()
-            upd = comp.shape_of(ops[1]) if len(ops) > 1 else None
-            if upd:
-                return 2.0 * _type_bytes(upd)
-            return float(_type_bytes(ins.type_str))
-        if op == "gather":
-            return 2.0 * _type_bytes(ins.type_str)
+            upd = (comp.shapes_of(ins.operands[1])
+                   if len(ins.operands) > 1 else None)
+            return 2.0 * _shapes_bytes(upd) if upd else \
+                float(ins.result_bytes)
         if op == "scatter":
-            ops = ins.operands()
-            upd = comp.shape_of(ops[2]) if len(ops) > 2 else None
-            return 2.0 * _type_bytes(upd) if upd else \
-                float(_type_bytes(ins.type_str))
-        callee = ins.attr("calls") if op == "fusion" else None
+            upd = (comp.shapes_of(ins.operands[2])
+                   if len(ins.operands) > 2 else None)
+            return 2.0 * _shapes_bytes(upd) if upd else \
+                float(ins.result_bytes)
+        callee = ins.attr_name("calls") if op == "fusion" else None
         sliced = self._sliced_params(callee) if callee else {}
         dus = self._dus_root(callee) if callee else None
         if dus is not None:
@@ -321,75 +514,117 @@ class HloCostModel:
                 sliced = dict(sliced)
                 sliced[alias_idx] = 0.0
         else:
-            total = float(_type_bytes(ins.type_str))
-        for i, opnd in enumerate(ins.operands()):
+            total = float(ins.result_bytes)
+        for i, opnd in enumerate(ins.operands):
             if i in sliced:
                 total += sliced[i]
-                continue
-            sh = comp.shape_of(opnd)
-            if sh:
-                total += _type_bytes(sh)
+            else:
+                total += self._operand_bytes(comp, opnd)
         return total
 
     def _dus_root(self, callee: str):
         """If the fusion's root is a dynamic-update-slice (possibly behind
-        bitcasts), return (update_bytes, aliased_param_index)."""
-        key = "__dus__" + callee
-        if key in self._fusion_free:
-            return self._fusion_free[key]
+        bitcasts/copies), return (update_bytes, aliased_param_index)."""
+        key = "dus:" + callee
+        if key in self._memo:
+            return self._memo[key]
         result = None
         comp = self.comps.get(callee)
-        if comp is not None and comp.order:
-            root = comp.instrs[comp.order[-1]]
-            seen = 0
-            while root.opcode in ("bitcast", "copy") and seen < 4:
-                ops = root.operands()
-                if not ops or ops[0] not in comp.instrs:
+        root = comp.root if comp is not None else None
+        if root is not None:
+            hops = 0
+            while root.opcode in ("bitcast", "copy") and hops < 4:
+                nxt = comp.instrs.get(root.operands[0]) if root.operands \
+                    else None
+                if nxt is None:
                     break
-                root = comp.instrs[ops[0]]
-                seen += 1
+                root, hops = nxt, hops + 1
             if root.opcode == "dynamic-update-slice":
-                ops = root.operands()
-                upd = comp.shape_of(ops[1]) if len(ops) > 1 else None
+                upd = (comp.shapes_of(root.operands[1])
+                       if len(root.operands) > 1 else None)
                 alias_idx = None
-                if ops and ops[0] in comp.instrs and \
-                        comp.instrs[ops[0]].opcode == "parameter":
-                    m = re.match(r"\s*(\d+)", comp.instrs[ops[0]].rest)
-                    if m:
-                        alias_idx = int(m.group(1))
+                target = comp.instrs.get(root.operands[0]) \
+                    if root.operands else None
+                if target is not None:
+                    alias_idx = comp.param_index(target)
                 if upd:
-                    result = (2.0 * _type_bytes(upd), alias_idx)
-        self._fusion_free[key] = result
+                    result = (2.0 * _shapes_bytes(upd), alias_idx)
+        self._memo[key] = result
         return result
 
     def _sliced_params(self, callee: str) -> Dict[int, float]:
         """param index -> charged bytes, for fusion params consumed only
         through dynamic-slice inside the fusion body."""
-        key = "__sliced__" + callee
-        if key in self._fusion_free:   # reuse dict as generic cache
-            return self._fusion_free[key]
+        key = "sliced:" + callee
+        if key in self._memo:
+            return self._memo[key]
         out: Dict[int, float] = {}
         comp = self.comps.get(callee)
         if comp is not None:
-            pname_to_idx = {}
             for iname in comp.order:
                 ins = comp.instrs[iname]
-                if ins.opcode == "parameter":
-                    m = re.match(r"\s*(\d+)", ins.rest)
-                    if m:
-                        pname_to_idx[iname] = int(m.group(1))
-            for pname, idx in pname_to_idx.items():
+                idx = comp.param_index(ins)
+                if idx is None:
+                    continue
                 consumers = [comp.instrs[i] for i in comp.order
-                             if pname in comp.instrs[i].operands()]
+                             if iname in comp.instrs[i].operands]
                 if consumers and all(c.opcode == "dynamic-slice"
                                      for c in consumers):
-                    out[idx] = sum(_type_bytes(c.type_str)
-                                   for c in consumers)
-        self._fusion_free[key] = out
+                    out[idx] = sum(float(c.result_bytes) for c in consumers)
+        self._memo[key] = out
         return out
 
-    def _trip_count(self, cond_name: str) -> Optional[int]:
-        """Max s32/s64 constant in the cond computation closure."""
+    # -- while trip counts -------------------------------------------------
+
+    def _trip_count(self, ins: Instr) -> Optional[int]:
+        """Trip count of a `while`: XLA's known_trip_count backend_config
+        when present, else the loop condition's root comparison constant,
+        else the max integer constant in the cond closure (conservative)."""
+        bc = ins.attrs.get("backend_config", "")
+        m = _TRIP_RE.search(bc)
+        if m:
+            return int(m.group(1))
+        cond_name = ins.attr_name("condition")
+        if not cond_name:
+            return None
+        trip = self._cond_compare_bound(cond_name)
+        if trip is not None:
+            return trip
+        return self._max_int_constant(cond_name)
+
+    def _cond_compare_bound(self, cond_name: str) -> Optional[int]:
+        """Parse `compare(iv, N), direction=LT` style loop conditions.
+        JAX scans count 0..N, so LT(iv, N) -> N trips, LE -> N+1."""
+        comp = self.comps.get(cond_name)
+        root = comp.root if comp is not None else None
+        if root is None or root.opcode != "compare" or \
+                len(root.operands) < 2:
+            return None
+
+        def const_val(name: str) -> Optional[int]:
+            target = comp.instrs.get(name)
+            if target is None or target.opcode != "constant" or \
+                    not target.operands:
+                return None
+            try:
+                return int(target.operands[0])
+            except ValueError:
+                return None
+
+        direction = root.attrs.get("direction", "")
+        lhs, rhs = const_val(root.operands[0]), const_val(root.operands[1])
+        if direction == "LT" and rhs is not None:
+            return rhs
+        if direction == "LE" and rhs is not None:
+            return rhs + 1
+        if direction == "GT" and lhs is not None:
+            return lhs
+        if direction == "GE" and lhs is not None:
+            return lhs + 1
+        return None
+
+    def _max_int_constant(self, cond_name: str) -> Optional[int]:
+        """Max s32/u32/s64 constant in the cond computation closure."""
         seen, stack, best = set(), [cond_name], None
         while stack:
             cname = stack.pop()
@@ -399,15 +634,16 @@ class HloCostModel:
             comp = self.comps[cname]
             for iname in comp.order:
                 ins = comp.instrs[iname]
-                if ins.opcode == "constant" and \
-                        ins.type_str.split("[")[0] in ("s32", "s64", "u32"):
-                    m = re.search(r"constant\((-?\d+)\)", "constant(" +
-                                  ins.rest)
-                    if m:
-                        v = int(m.group(1))
-                        best = v if best is None else max(best, v)
-                if ins.opcode == "fusion":
-                    callee = ins.attr("calls")
+                if ins.opcode == "constant" and ins.shapes and \
+                        ins.shapes[0].dtype in ("s32", "s64", "u32") and \
+                        ins.operands:
+                    try:
+                        v = int(ins.operands[0])
+                    except ValueError:
+                        continue
+                    best = v if best is None else max(best, v)
+                elif ins.opcode == "fusion":
+                    callee = ins.attr_name("calls")
                     if callee:
                         stack.append(callee)
         return best
@@ -426,13 +662,13 @@ class HloCostModel:
             ins = comp.instrs[iname]
             op = ins.opcode
             if op == "while":
-                body = ins.attr("body")
-                cond = ins.attr("condition")
-                trip = self._trip_count(cond) if cond else None
+                trip = self._trip_count(ins)
                 if trip is None or trip <= 0:
                     trip = 1
                     total.unparsed_whiles += 1
                 inner = CostTotals()
+                body = ins.attr_name("body")
+                cond = ins.attr_name("condition")
                 if body:
                     inner.add(self.cost_of(body))
                 if cond:
@@ -440,79 +676,77 @@ class HloCostModel:
                 total.add(inner, mult=trip)
                 continue
             if op == "conditional":
-                branches = re.findall(r"(?:branch_computations=\{([^}]*)\}"
-                                      r"|true_computation=%?([\w\.\-]+)"
-                                      r"|false_computation=%?([\w\.\-]+))",
-                                      ins.rest)
-                names: List[str] = []
-                for a, b, c in branches:
-                    if a:
-                        names += [x.strip().lstrip("%")
-                                  for x in a.split(",")]
-                    names += [x for x in (b, c) if x]
+                names = []
+                bc = ins.attrs.get("branch_computations", "")
+                m = re.search(r"\{([^}]*)\}", bc)
+                if m:
+                    names += [x.strip().lstrip("%")
+                              for x in m.group(1).split(",") if x.strip()]
+                for key in ("true_computation", "false_computation"):
+                    v = ins.attr_name(key)
+                    if v:
+                        names.append(v)
                 if names:
                     worst = max((self.cost_of(n) for n in names),
                                 key=lambda t: t.flops + t.bytes)
                     total.add(worst)
-                total.bytes += self._op_bytes(comp, ins)
+                total.charge(op, bytes=self._op_bytes(comp, ins))
                 continue
             if op == "fusion":
-                callee = ins.attr("calls")
+                callee = ins.attr_name("calls")
                 if callee:
-                    # flops (dots can hide inside fusions) but NOT bytes —
-                    # bytes are the fusion boundary below.
+                    # flops + collectives can hide inside fusions, but NOT
+                    # bytes — bytes are the fusion boundary below.
                     inner = self.cost_of(callee)
                     total.flops += inner.flops
                     total.collective_bytes += inner.collective_bytes
+                    for k, oc in inner.by_op.items():
+                        if oc.flops:
+                            mine = total.by_op.setdefault(k, OpCost())
+                            mine.flops += oc.flops
+                            mine.count += oc.count
                     for k, v in inner.collective_counts.items():
                         total.collective_counts[k] += v
+                    for k, v in inner.collective_bytes_by_op.items():
+                        total.collective_bytes_by_op[k] += v
                 if self.mode == "raw" or callee is None or \
                         not self._is_elementwise_only(callee):
-                    total.bytes += self._op_bytes(comp, ins)
+                    total.charge(op, bytes=self._op_bytes(comp, ins))
                 continue
             if op in ("call", "async-start"):
-                callee = ins.attr("to_apply") or ins.attr("calls")
+                callee = ins.attr_name("to_apply") or ins.attr_name("calls")
                 if callee:
                     total.add(self.cost_of(callee))
                 continue
             if op == "dot":
-                total.flops += self._dot_flops(comp, ins)
-                total.bytes += self._op_bytes(comp, ins)
+                total.charge(op, flops=self._dot_flops(comp, ins),
+                             bytes=self._op_bytes(comp, ins))
                 continue
             if op == "convolution":
-                total.flops += self._conv_flops(comp, ins)
-                total.bytes += self._op_bytes(comp, ins)
+                total.charge(op, flops=self._conv_flops(comp, ins),
+                             bytes=self._op_bytes(comp, ins))
                 continue
-            hit = False
-            for cop in COLLECTIVE_OPS:
-                if op == cop or op.startswith(cop + "-"):
-                    if op.endswith("-done"):
-                        hit = True
-                        break
-                    opbytes = 0.0
-                    for o in ins.operands():
-                        sh = comp.shape_of(o)
-                        if sh:
-                            opbytes += _type_bytes(sh)
-                    if opbytes == 0.0:
-                        opbytes = _type_bytes(ins.type_str)
-                    total.collective_bytes += opbytes
-                    total.collective_counts[cop] += 1
-                    total.bytes += self._op_bytes(comp, ins)
-                    hit = True
-                    break
-            if hit:
+            kind = _collective_kind(op)
+            if kind is not None:
+                if op.endswith("-done"):
+                    continue             # counted at -start
+                ici = sum(self._operand_bytes(comp, o)
+                          for o in ins.operands)
+                if ici == 0:
+                    ici = float(ins.result_bytes)
+                total.charge_collective(kind, ici)
+                total.charge(kind, bytes=self._op_bytes(comp, ins))
                 continue
             if op in _SKIP_BYTES:
                 continue
             if self.mode != "raw" and op in _ELEMENTWISE and \
-                    op not in ("copy", "transpose", "concatenate", "pad"):
+                    op not in _MATERIALIZING_POINTWISE:
                 continue  # standalone pointwise: fuses into a neighbour
-            total.bytes += self._op_bytes(comp, ins)
+            total.charge(op, bytes=self._op_bytes(comp, ins))
         return total
 
     def totals(self) -> CostTotals:
-        return self.cost_of(self.entry)
+        return self.cost_of(self.entry) if self.entry else CostTotals()
 
 
 def analyze(hlo_text: str) -> CostTotals:

@@ -9,9 +9,10 @@ terms from the compiled artifact — no hardware required:
     memory_s     = HLO_bytes  / (chips * HBM_BW)
     collective_s = sum(collective operand bytes) / (chips * ICI_BW)
 
-`compiled.cost_analysis()` provides FLOPs and bytes; collective bytes are
-parsed from the post-SPMD-partitioning HLO text (all-gather / all-reduce /
-reduce-scatter / all-to-all / collective-permute operand sizes).
+All three inputs come from ``core.hlo_cost``'s structural HLO analysis
+(trip-count-aware, slice-aware, collective-aware), which also supplies the
+per-op FLOP/byte breakdown carried on :class:`RooflineTerms` so reports can
+show *where* the counts come from.
 
 Hardware model: TPU v5e — 197 TFLOP/s bf16 (394 TOPS int8), 819 GB/s HBM,
 ~50 GB/s per ICI link.
@@ -20,7 +21,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import re
 from typing import Dict, List, Optional
 
 # --- TPU v5e hardware constants (per chip) ---------------------------------
@@ -29,104 +29,21 @@ PEAK_FLOPS_INT8 = 394e12
 HBM_BW = 819e9
 ICI_BW = 50e9   # per link
 
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
-    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
-}
-
 COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                   "collective-permute")
 
-_SHAPE_RE = re.compile(r"([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
-_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=]+?)\s+"
-                     r"([\w\-]+)\(")
 
-
-def _shape_bytes(type_str: str) -> int:
-    """Total bytes of an HLO type string (handles tuples)."""
-    total = 0
-    for m in _SHAPE_RE.finditer(type_str):
-        dt, dims = m.group(1), m.group(2)
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-@dataclasses.dataclass
-class CollectiveStats:
-    counts: Dict[str, int]
-    bytes_by_op: Dict[str, int]
-
-    @property
-    def total_bytes(self) -> int:
-        return sum(self.bytes_by_op.values())
-
-
-def parse_collectives(hlo_text: str) -> CollectiveStats:
-    """Sum operand sizes of every collective op in (post-SPMD) HLO text.
-
-    Two passes: first map instruction name -> result type (operand sizes are
-    looked up from the defining instruction), then for each collective line,
-    sum its operands' sizes.  Falls back to the collective's own result size
-    when an operand can't be resolved (conservative for all-gather, exact
-    for all-reduce/permute).
-    """
-    defs: Dict[str, str] = {}
-    for line in hlo_text.splitlines():
-        m = _DEF_RE.match(line)
-        if m:
-            defs[m.group(1)] = m.group(2).strip()
-
-    counts: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
-    bytes_by_op: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
-    for line in hlo_text.splitlines():
-        m = _DEF_RE.match(line)
-        if not m:
-            continue
-        name, result_type, opcode = m.groups()
-        base = opcode
-        for op in COLLECTIVE_OPS:
-            if base == op or base.startswith(op + "-"):  # e.g. all-gather-start
-                if base.endswith("-done"):
-                    break  # counted at -start
-                counts[op] += 1
-                # operand list: text inside the first (...) after opcode
-                paren = line[line.index(opcode + "(") + len(opcode) + 1:]
-                depth, args, cur = 1, [], []
-                for ch in paren:
-                    if ch == "(":
-                        depth += 1
-                    elif ch == ")":
-                        depth -= 1
-                        if depth == 0:
-                            break
-                    if ch == "," and depth == 1:
-                        args.append("".join(cur))
-                        cur = []
-                    else:
-                        cur.append(ch)
-                if cur:
-                    args.append("".join(cur))
-                got = 0
-                for a in args:
-                    a = a.strip().lstrip("%")
-                    # operands may carry inline types: "bf16[8,128] %x"
-                    b = _shape_bytes(a)
-                    if b == 0:
-                        b = _shape_bytes(defs.get(a.split(" ")[-1], ""))
-                    got += b
-                if got == 0:
-                    got = _shape_bytes(result_type)
-                bytes_by_op[op] += got
-                break
-    return CollectiveStats(counts=counts, bytes_by_op=bytes_by_op)
+def op_rows_from_by_op(by_op: Optional[Dict[str, Dict[str, float]]],
+                       limit: Optional[int] = None):
+    """(opcode, flops, bytes, count) rows from a by_op dict (as produced by
+    CostTotals.by_op_dict / RooflineTerms.to_dict), heaviest first."""
+    if not by_op:
+        return []
+    rows = sorted(
+        ((op, d.get("flops", 0.0), d.get("bytes", 0.0), d.get("count", 0.0))
+         for op, d in by_op.items()),
+        key=lambda r: (r[1], r[2]), reverse=True)
+    return rows[:limit] if limit else rows
 
 
 @dataclasses.dataclass
@@ -141,6 +58,10 @@ class RooflineTerms:
     model_flops: float = 0.0           # 6*N*D etc., "useful" flops
     peak_flops: float = PEAK_FLOPS_BF16
     bytes_per_device: Optional[dict] = None
+    # per-op breakdown from hlo_cost (global = per-device x chips):
+    # opcode -> {"flops": .., "bytes": .., "count": ..}
+    by_op: Optional[Dict[str, Dict[str, float]]] = None
+    collective_bytes_by_op: Optional[Dict[str, float]] = None
 
     @property
     def compute_s(self) -> float:
@@ -178,12 +99,18 @@ class RooflineTerms:
             return 0.0
         return (self.model_flops / self.step_s) / (self.chips * self.peak_flops)
 
+    def op_rows(self, limit: Optional[int] = None):
+        """(opcode, flops, bytes, count) heaviest-first, from by_op."""
+        return op_rows_from_by_op(self.by_op, limit)
+
     def to_dict(self) -> dict:
         return {
             "cell": self.cell, "chips": self.chips,
             "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
             "collective_bytes": self.collective_bytes,
             "collective_counts": self.collective_counts,
+            "collective_bytes_by_op": self.collective_bytes_by_op,
+            "by_op": self.by_op,
             "model_flops": self.model_flops,
             "peak_flops": self.peak_flops,
             "bytes_per_device": self.bytes_per_device,
@@ -202,17 +129,15 @@ def from_compiled(cell: str, compiled, chips: int, *,
 
     The compiled module is the per-device SPMD program, and XLA's own
     cost_analysis counts while-loop (scan) bodies once — so the roofline
-    inputs come from `core.hlo_cost` (trip-count-aware HLO walk), scaled to
-    global by the chip count.
+    inputs come from `core.hlo_cost` (structural trip-count-aware HLO
+    analysis), scaled to global by the chip count.
     """
     text = hlo_text if hlo_text is not None else compiled.as_text()
     from repro.core import hlo_cost as HC
     totals = HC.analyze(text)
-    flops = totals.flops * chips      # per-device program -> global
-    byts = totals.bytes * chips
-    coll = CollectiveStats(
-        counts={k: int(v) for k, v in totals.collective_counts.items()},
-        bytes_by_op={"all": int(totals.collective_bytes * chips)})
+    by_op = {op: {"flops": oc.flops * chips, "bytes": oc.bytes * chips,
+                  "count": oc.count}
+             for op, oc in totals.by_op.items()}
     mem = None
     try:
         ma = compiled.memory_analysis()
@@ -226,9 +151,16 @@ def from_compiled(cell: str, compiled, chips: int, *,
     except Exception:
         pass
     return RooflineTerms(
-        cell=cell, chips=chips, hlo_flops=flops, hlo_bytes=byts,
-        collective_bytes=float(coll.total_bytes),
-        collective_counts=coll.counts, model_flops=model_flops,
+        cell=cell, chips=chips,
+        hlo_flops=totals.flops * chips,       # per-device program -> global
+        hlo_bytes=totals.bytes * chips,
+        collective_bytes=totals.collective_bytes * chips,
+        collective_counts={k: int(v)
+                           for k, v in totals.collective_counts.items()},
+        collective_bytes_by_op={k: v * chips
+                                for k, v in
+                                totals.collective_bytes_by_op.items()},
+        by_op=by_op, model_flops=model_flops,
         peak_flops=peak_flops, bytes_per_device=mem)
 
 

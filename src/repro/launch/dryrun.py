@@ -158,7 +158,10 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
         t_compile = time.time() - t0 - t_lower
         terms = RL.from_compiled(cell, compiled, chips=mesh.devices.size,
                                  model_flops=mf_or_why, peak_flops=peak)
-        result.update(terms.to_dict())
+        result.update(terms.to_dict())   # includes by_op + per-collective
+        result["top_ops"] = " ".join(
+            f"{op}:f={flops:.2e},b={byts:.2e}"
+            for op, flops, byts, _ in terms.op_rows(limit=3))
         result["lower_s"] = round(t_lower, 1)
         result["compile_s"] = round(t_compile, 1)
         try:
@@ -227,6 +230,8 @@ def main():
                           f"bound={res['bound']} "
                           f"(lower {res['lower_s']}s compile "
                           f"{res['compile_s']}s)")
+                    if res.get("top_ops"):
+                        print(f"          {res['top_ops']}")
                 elif res["status"] == "skipped":
                     print(f"[skipped] {cell}: {res['reason']}")
                 else:

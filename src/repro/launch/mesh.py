@@ -2,19 +2,34 @@
 
 Defined as FUNCTIONS (not module constants) so importing this module never
 touches jax device state — the dry-run must set XLA_FLAGS before first init.
+
+``jax.sharding.AxisType`` only exists in newer JAX (absent in 0.4.x); when
+it is missing we omit ``axis_types`` — the default (auto) behaviour matches
+what ``AxisType.Auto`` requests explicitly.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:
+    from jax.sharding import AxisType
+except ImportError:          # JAX <= 0.4.x
+    AxisType = None
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types when the installed JAX has them."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """(16, 16) data x model single pod; (2, 16, 16) pod x data x model."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=None, axes=("data", "model")):
@@ -22,5 +37,4 @@ def make_host_mesh(shape=None, axes=("data", "model")):
     n = len(jax.devices())
     if shape is None:
         shape = (n, 1) if len(axes) == 2 else (n,)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

@@ -33,9 +33,9 @@ def measure_service_curve(step_fn, params, cfg, batches=(1, 4, 16),
     for b in batches:
         tokens = jnp.zeros((b, seq), jnp.int32)
         batch = {"tokens": tokens}
-        step_fn(params, batch)[0].block_until_ready() if isinstance(
-            step_fn(params, batch), tuple) else \
-            step_fn(params, batch).block_until_ready()
+        warm = step_fn(params, batch)   # one warmup call, not three
+        warm = warm[0] if isinstance(warm, tuple) else warm
+        warm.block_until_ready()
         t0 = time.perf_counter()
         for _ in range(iters):
             out = step_fn(params, batch)

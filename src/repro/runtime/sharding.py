@@ -118,9 +118,31 @@ class _Ctx(threading.local):
     def __init__(self):
         self.mesh: Optional[Mesh] = None
         self.rules: Optional[ShardingRules] = None
+        self.manual: frozenset = frozenset()
 
 
 _CTX = _Ctx()
+
+
+class manual_axes:
+    """Declare mesh axes as manual (shard_map) for constrain().
+
+    Newer JAX exposes the manual set on the abstract mesh; on 0.4.x there is
+    no in-trace introspection, so the step wrapper declares it explicitly
+    around the shard_map body.
+    """
+
+    def __init__(self, axes):
+        self.axes = frozenset(axes)
+
+    def __enter__(self):
+        self._prev = _CTX.manual
+        _CTX.manual = _CTX.manual | self.axes
+        return self
+
+    def __exit__(self, *exc):
+        _CTX.manual = self._prev
+        return False
 
 
 class use_rules:
@@ -168,16 +190,19 @@ def _resolve(axes: Tuple, mesh: Mesh,
 
 
 def _manual_axes() -> frozenset:
-    """Axes currently under manual (shard_map) control in this trace."""
+    """Axes currently under manual (shard_map) control in this trace:
+    the explicitly declared set (manual_axes), plus whatever the abstract
+    mesh reports on JAX versions that expose it."""
+    traced = frozenset()
     try:
         amesh = jax.sharding.get_abstract_mesh()
-        if amesh is None or amesh.empty:
-            return frozenset()
-        return frozenset(
-            n for n, t in zip(amesh.axis_names, amesh.axis_types)
-            if t == jax.sharding.AxisType.Manual)
+        if amesh is not None and not amesh.empty:
+            traced = frozenset(
+                n for n, t in zip(amesh.axis_names, amesh.axis_types)
+                if t == jax.sharding.AxisType.Manual)
     except Exception:
-        return frozenset()
+        pass
+    return _CTX.manual | traced
 
 
 def constrain(x: jax.Array, logical_name: str) -> jax.Array:

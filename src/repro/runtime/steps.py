@@ -56,11 +56,23 @@ def make_loss_fn(cfg: ArchConfig, *, mode: QuantMode = FP,
 # int8 cross-pod gradient exchange
 # ---------------------------------------------------------------------------
 
+def supports_int8_grad_exchange() -> bool:
+    """True when the installed XLA can partition the int8 cross-pod
+    gradient exchange.  The partitioner bundled with JAX 0.4.x aborts
+    (``Check failed: sharding.IsManualSubgroup()``) when partitioning a
+    scan *backward* pass under partial-manual shard_map — and every model
+    here scans over layers — so the exchange needs the newer partitioner
+    that ships alongside ``jax.shard_map``."""
+    return hasattr(jax, "shard_map")
+
+
 def _int8_allreduce_pod(g: jax.Array, key: jax.Array) -> jax.Array:
     """Unbiased int8 all-reduce over the manual "pod" axis.
 
     quantize (stochastic) -> all_gather int8 (+ scalar scales) -> local
     dequant-sum.  Wire bytes: 1B/elem vs 2-4B for a raw all-reduce.
+    Only reachable on JAX versions whose partitioner handles collectives
+    under partial-manual shard_map (see supports_int8_grad_exchange).
     """
     scale = compute_scale(g, bits=8)
     qmin, qmax = int_bounds(8)
@@ -70,7 +82,7 @@ def _int8_allreduce_pod(g: jax.Array, key: jax.Array) -> jax.Array:
     qs = jax.lax.all_gather(q, "pod")                  # (npod, ...)
     ss = jax.lax.all_gather(scale, "pod")              # (npod, 1...)
     total = jnp.sum(qs.astype(jnp.float32)
-                    * ss.reshape((ss.shape[0],) + (1,) * g.ndim), axis=0)
+                    * ss.reshape((qs.shape[0],) + (1,) * g.ndim), axis=0)
     return (total / qs.shape[0]).astype(g.dtype)
 
 
@@ -83,10 +95,20 @@ def make_train_step(cfg: ArchConfig, optimizer: Optimizer, *,
     (params, opt_state, metrics)."""
     loss_fn = make_loss_fn(cfg, mode=mode, remat=remat)
 
+    use_int8 = (grad_compression == "int8" and mesh is not None
+                and "pod" in mesh.axis_names)
+    if use_int8 and not supports_int8_grad_exchange():
+        import warnings
+        warnings.warn(
+            "int8 grad exchange needs a partitioner that handles scan "
+            "backward under partial-manual shard_map (JAX with "
+            "jax.shard_map); falling back to uncompressed gradients",
+            RuntimeWarning, stacklevel=2)
+        use_int8 = False
+
     def _core(params, opt_state, batch, rng):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-        if grad_compression == "int8" and mesh is not None \
-                and "pod" in mesh.axis_names:
+        if use_int8:
             keys = jax.random.split(rng, len(jax.tree.leaves(grads)))
             keys_tree = jax.tree_util.tree_unflatten(
                 jax.tree_util.tree_structure(grads), list(keys))
@@ -98,19 +120,29 @@ def make_train_step(cfg: ArchConfig, optimizer: Optimizer, *,
         metrics = {"loss": loss, "grad_norm": gnorm}
         return new_params, new_state, metrics
 
-    if grad_compression == "int8" and mesh is not None \
-            and "pod" in mesh.axis_names:
+    if use_int8:
         from jax.sharding import PartitionSpec as P
         # partial-manual shard_map: only "pod" is manual; data/model stay
         # under GSPMD auto-sharding inside.
         pspec = P()            # params: pod-replicated (FSDP is on "data")
         bspec = jax.tree_util.tree_map(lambda _: P("pod"),
                                        {"tokens": 0, "labels": 0})
-        core = jax.shard_map(
-            _core, mesh=mesh,
-            in_specs=(pspec, pspec, bspec, P()),
-            out_specs=(pspec, pspec, pspec),
-            axis_names={"pod"}, check_vma=False)
+        def _core_manual(*args):
+            # declare "pod" manual for constrain() — 0.4.x shard_map has no
+            # in-trace manual-axis introspection
+            with S.manual_axes({"pod"}):
+                return _core(*args)
+
+        specs = dict(in_specs=(pspec, pspec, bspec, P()),
+                     out_specs=(pspec, pspec, pspec))
+        if hasattr(jax, "shard_map"):
+            core = jax.shard_map(_core_manual, mesh=mesh, axis_names={"pod"},
+                                 check_vma=False, **specs)
+        else:                          # JAX 0.4.x: partial-manual via auto=
+            from jax.experimental.shard_map import shard_map
+            auto = frozenset(mesh.axis_names) - {"pod"}
+            core = shard_map(_core_manual, mesh=mesh, check_rep=False,
+                             auto=auto, **specs)
         return core
     return _core
 

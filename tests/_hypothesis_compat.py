@@ -1,0 +1,130 @@
+"""Offline fallback for ``hypothesis`` (not installed, no network).
+
+Test modules import via::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+
+With real hypothesis installed the property tests run unchanged; offline
+they degrade to example-based tests over a bounded, deterministic grid of
+examples drawn from each strategy (endpoints + evenly spread interior
+points), so the properties still execute with meaningful coverage.
+
+Only the strategy surface this repo uses is implemented: ``floats``,
+``integers``, ``sampled_from``, ``booleans``, ``just``, plus ``.filter``
+and ``.map``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+from typing import Any, Callable, List
+
+_MAX_EXAMPLES_DEFAULT = 20
+
+
+class _Strategy:
+    """A bounded, deterministic pool of example values."""
+
+    def __init__(self, examples: List[Any]):
+        self._examples = list(examples)
+
+    def examples(self) -> List[Any]:
+        return self._examples
+
+    def filter(self, pred: Callable[[Any], bool]) -> "_Strategy":
+        return _Strategy([x for x in self._examples if pred(x)])
+
+    def map(self, fn: Callable[[Any], Any]) -> "_Strategy":
+        return _Strategy([fn(x) for x in self._examples])
+
+
+def _spread(lo: float, hi: float, n: int, cast) -> List[Any]:
+    """Endpoints plus evenly spaced interior points, deduplicated."""
+    if n <= 1:
+        return [cast(lo)]
+    vals = [cast(lo + (hi - lo) * i / (n - 1)) for i in range(n)]
+    out: List[Any] = []
+    for v in vals:
+        if v not in out and lo <= v <= hi:
+            out.append(v)
+    return out
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0,
+               **_kw) -> _Strategy:
+        return _Strategy(_spread(float(min_value), float(max_value), 7,
+                                 float))
+
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 100,
+                 **_kw) -> _Strategy:
+        return _Strategy(_spread(int(min_value), int(max_value), 7,
+                                 lambda v: int(round(v))))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        return _Strategy(list(elements))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy([False, True])
+
+    @staticmethod
+    def just(value) -> _Strategy:
+        return _Strategy([value])
+
+
+def settings(max_examples: int = _MAX_EXAMPLES_DEFAULT, **_kw):
+    """Records max_examples on the test for @given to consume."""
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy, **kw_strats: _Strategy):
+    """Run the test over a deterministic cross-product of examples,
+    round-robin truncated to max_examples (mirrors the hypothesis API
+    closely enough for this repo's positional usage)."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            inner = fn
+            max_examples = getattr(fn, "_compat_max_examples",
+                                   _MAX_EXAMPLES_DEFAULT)
+            pools = [s.examples() for s in strats]
+            kw_names = list(kw_strats)
+            pools += [kw_strats[k].examples() for k in kw_names]
+            if any(not p for p in pools):
+                raise ValueError("strategy produced no examples "
+                                 "(over-restrictive filter?)")
+            combos = list(itertools.islice(itertools.product(*pools),
+                                           10 * max_examples))
+            # spread selection across the product, not just its prefix
+            stride = max(1, len(combos) // max_examples)
+            for combo in combos[::stride][:max_examples]:
+                pos = combo[:len(strats)]
+                kws = dict(zip(kw_names, combo[len(strats):]))
+                inner(*args, *pos, **kws, **kwargs)
+        # keep pytest from collecting strategy args as fixtures
+        sig = inspect.signature(fn)
+        keep = list(sig.parameters.values())
+        n_drop = len(strats) + len(kw_strats)
+        has_self = keep and keep[0].name == "self"
+        base = keep[:1] if has_self else []
+        wrapper.__signature__ = sig.replace(parameters=base)
+        wrapper.hypothesis_compat = True
+        return wrapper
+    return deco
+
+
+# `from _hypothesis_compat import strategies as st` usage
+st = strategies

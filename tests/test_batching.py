@@ -1,6 +1,9 @@
 """Latency-aware batching: Table 4 reproduction + scheduler properties."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # offline: no network, no pip
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import batching as bt
 

@@ -1,6 +1,9 @@
 """Data pipeline: determinism, resumability, host sharding."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # offline: no network, no pip
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.data import SyntheticLMData
 

@@ -1,4 +1,11 @@
-"""HLO cost model: trip counts, slice-aware bytes, collective accounting."""
+"""HLO cost model: trip counts, slice-aware bytes, collective accounting.
+
+Two tiers: golden-fixture tests parse checked-in HLO text (milliseconds, no
+JAX compilation — see tests/fixtures/hlo/regen.py), while the compiled-module
+tests lower real programs through the installed XLA as integration checks.
+"""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,9 +14,83 @@ import pytest
 from repro.core import hlo_cost as HC
 from repro.core import roofline as RL
 
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures", "hlo")
+
+
+def _fixture(name):
+    with open(os.path.join(FIXTURES, name)) as f:
+        return f.read()
+
 
 def _compiled(f, *specs):
     return jax.jit(f).lower(*specs).compile()
+
+
+class TestGoldenFixtures:
+    """Core parsing cases against checked-in post-SPMD HLO text."""
+
+    def test_scan_flops_exact(self):
+        t = HC.analyze(_fixture("scan_matmul.hlo"))
+        assert t.flops == 2 * 64 * 128 * 128 * 8
+        assert t.unparsed_whiles == 0
+
+    def test_scan_weight_slices_not_full_stack(self):
+        t = HC.analyze(_fixture("scan_matmul.hlo"))
+        stack_bytes = 8 * 128 * 128 * 4
+        assert t.bytes < 6 * stack_bytes
+
+    def test_nested_scan_flops(self):
+        assert HC.analyze(_fixture("nested_scan.hlo")).flops == \
+            2 * 64 * 128 * 128 * 24
+
+    def test_fusion_with_dot(self):
+        t = HC.analyze(_fixture("fusion_dot.hlo"))
+        assert t.flops == 2 * 32 * 64 * 16
+        # all flops attributed to the dot in the per-op breakdown
+        assert t.by_op["dot"].flops == t.flops
+        # the gelu+bias tail is an elementwise-only fusion: free bytes
+        assert "fusion" not in t.by_op
+
+    def test_dus_charged_at_update_region(self):
+        t = HC.analyze(_fixture("dus_donated.hlo"))
+        update_bytes = 4 * 1 * 64 * 4
+        full_cache = 4 * 1024 * 64 * 4
+        assert t.bytes == 2 * update_bytes
+        assert t.bytes < full_cache
+
+    def test_psum_bytes_and_count(self):
+        t = HC.analyze(_fixture("psum.hlo"))
+        # all-reduce over the f32[128,128] partial product
+        assert t.collective_bytes == 128 * 128 * 4
+        assert t.collective_counts["all-reduce"] == 1
+        assert t.collective_bytes_by_op["all-reduce"] == t.collective_bytes
+
+    def test_collective_inside_scan_trip_multiplied(self):
+        t = HC.analyze(_fixture("scan_psum.hlo"))
+        # one f32[16,64] all-reduce per iteration, 8 iterations
+        assert t.collective_counts["all-reduce"] == 8
+        assert t.collective_bytes == 8 * 16 * 64 * 4
+
+    def test_by_op_totals_are_consistent(self):
+        for name in ("scan_matmul.hlo", "fusion_dot.hlo", "psum.hlo",
+                     "scan_psum.hlo", "dus_donated.hlo",
+                     "nested_scan.hlo"):
+            t = HC.analyze(_fixture(name))
+            assert sum(oc.flops for oc in t.by_op.values()) == \
+                pytest.approx(t.flops)
+            assert sum(oc.bytes for oc in t.by_op.values()) == \
+                pytest.approx(t.bytes)
+
+    def test_structural_parse_resolves_operand_shapes(self):
+        """The regex line-walker split `f32[64,128]` at the inner comma and
+        lost the dot contraction; the structural parser must not."""
+        module = HC.parse_hlo(_fixture("scan_matmul.hlo"))
+        dots = [(comp, ins) for comp in module.computations.values()
+                for ins in comp.instrs.values() if ins.opcode == "dot"]
+        assert dots
+        comp, dot = dots[0]
+        lhs = comp.shapes_of(dot.operands[0])
+        assert lhs and lhs[0].dims == (64, 128)
 
 
 class TestTripCounts:
@@ -86,9 +167,9 @@ class TestCollectives:
             os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
             import sys; sys.path.insert(0, "src")
             import jax, jax.numpy as jnp
-            from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+            from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.core import hlo_cost as HC
-            mesh = jax.make_mesh((4,), ("x",), axis_types=(AxisType.Auto,))
+            mesh = jax.make_mesh((4,), ("x",))
             def f(a, b):
                 return (a @ b)
             a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
@@ -111,9 +192,13 @@ needs an all-reduce"
         assert r.returncode == 0, r.stderr[-1500:]
 
     def test_collective_inside_scan_multiplied(self):
-        """parse_collectives (flat) vs hlo_cost (trip-aware): the loop
-        multiplies collective bytes."""
-        pass  # covered by the dry-run integration below
+        """The loop multiplies collective bytes AND counts: a single
+        all-reduce instruction in an 8-trip while body counts 8 times."""
+        t = HC.analyze(_fixture("scan_psum.hlo"))
+        single = HC.analyze(_fixture("psum.hlo"))
+        assert t.collective_counts["all-reduce"] == 8
+        assert single.collective_counts["all-reduce"] == 1
+        assert t.collective_bytes == 8 * (16 * 64 * 4)
 
 
 class TestRooflineTerms:

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # offline: no network, no pip
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import quant as Q
 
@@ -138,7 +141,9 @@ class TestInt4:
                           out_dtype=jnp.float32)
         rel = float(jnp.linalg.norm(got - x @ w_fp)
                     / jnp.linalg.norm(x @ w_fp))
-        assert rel < 0.12   # 4-bit: ~16x coarser than int8
+        # symmetric int4 (±7 levels) on N(0,1) weights: expected rel err is
+        # scale/sqrt(12) with scale = max|w|/7 ~ 3.2/7, i.e. ~0.13
+        assert rel < 0.14   # 4-bit: ~16x coarser than int8
 
     def test_int4_weight_bytes(self):
         w = Q.quantize_weight(jnp.ones((256, 256)), bits=4)

@@ -11,6 +11,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.launch.mesh import make_host_mesh
 from repro.runtime import sharding as S
+from repro.runtime import steps as ST
 
 
 def _mesh22():
@@ -101,15 +102,14 @@ SUBPROC = textwrap.dedent("""
     import sys
     sys.path.insert(0, "src")
     import jax, jax.numpy as jnp
-    from jax.sharding import AxisType
     from repro.configs import get_config
+    from repro.launch.mesh import make_mesh
     from repro.models import registry as R
     from repro.optim import make_optimizer
     from repro.runtime import sharding as S
     from repro.runtime import steps as ST
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     cfg = get_config("{arch}").reduced()
     key = jax.random.PRNGKey(0)
     with S.use_rules(mesh, S.BASELINE_RULES):
@@ -146,15 +146,20 @@ def test_multipod_compile_subprocess(arch):
     assert "OK" in r.stdout
 
 
+@pytest.mark.skipif(
+    not ST.supports_int8_grad_exchange(),
+    reason="XLA in JAX 0.4.x aborts on scan backward under partial-manual "
+           "shard_map (IsManualSubgroup CHECK); exchange needs newer JAX")
 def test_grad_compression_compiles_and_uses_int8_collectives():
-    """int8 cross-pod gradient exchange: the compiled HLO must contain an
-    s8 all-gather over the pod axis."""
+    """int8 cross-pod gradient exchange: the compiled HLO must move the
+    gradients over an s8 collective."""
     code = SUBPROC.format(arch="starcoder2-3b", compression="'int8'")
-    code = code.replace('print("OK", len(text))',
-                        'import re\n'
-                        'ag = re.findall(r"all-gather[^\\n]*s8", text)\n'
-                        'print("OK", len(ag))\n'
-                        'assert ag, "no int8 all-gather found"')
+    code = code.replace(
+        'print("OK", len(text))',
+        'import re\n'
+        'ag = re.findall(r"(?:all-gather|all-reduce)[^\\n]*s8\\[", text)\n'
+        'print("OK", len(ag))\n'
+        'assert ag, "no int8 collective found"')
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, cwd=os.path.dirname(
                            os.path.dirname(os.path.abspath(__file__))),
