@@ -1,13 +1,53 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+# --smoke: fast post-refactor sanity gate (cost pipeline + kernel bench).
+# --bench-out PATH: write the serving perf trajectory (tokens/s,
+#   service-time curve, autotuned tiles, kernel bench) as schema'd JSON —
+#   the BENCH_serving.json every future perf PR has to beat.
 import argparse
+import json
 import sys
 
 
-def smoke() -> int:
+BENCH_SCHEMA_VERSION = 1
+
+
+def _kernel_bench_rows():
+    """kernel_bench CSV rows, also printed by --smoke (perf guard)."""
+    from benchmarks import kernel_bench
+    rows = []
+    for fn in kernel_bench.ALL:
+        rows.extend(fn())
+    return rows
+
+
+def write_bench_json(path: str, kernel_rows=None) -> None:
+    """Emit the serving benchmark JSON (schema asserted by tests)."""
+    import jax
+
+    from benchmarks import serving_bench
+
+    rows = serving_bench.serving_rows()
+    if kernel_rows is None:
+        kernel_rows = _kernel_bench_rows()
+    for name, us, derived in kernel_rows:
+        rows.append({"kind": "kernel_bench", "name": name,
+                     "us_per_call": us, "derived": derived})
+    doc = {"schema_version": BENCH_SCHEMA_VERSION,
+           "backend": jax.default_backend(),
+           "rows": rows}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    kinds = sorted({r["kind"] for r in rows})
+    print(f"[bench] wrote {len(rows)} rows ({', '.join(kinds)}) -> {path}")
+
+
+def smoke(kernel_rows=None) -> int:
     """Fast post-refactor sanity gate: compile ONE reduced config, derive
     its roofline cell through `core.roofline` (structural hlo_cost under the
-    hood), render it through the roofline report, and assert nonzero
-    flops/bytes.  Runs in seconds on CPU, no dry-run sweep needed."""
+    hood), render it through the roofline report, assert nonzero
+    flops/bytes, and print the kernel micro-bench rows (timed here unless
+    the caller already ran them)."""
     import json
     import os
     import tempfile
@@ -48,6 +88,12 @@ def smoke() -> int:
         f"smoke: flops {terms.hlo_flops} != model {2 * batch * d * d * layers}"
     assert terms.by_op and terms.by_op.get("dot", {}).get("flops", 0) > 0, \
         "smoke: per-op breakdown missing dot flops"
+
+    print("\nKernel micro-bench (name,us_per_call,derived):")
+    for name, us, derived in (kernel_rows if kernel_rows is not None
+                              else _kernel_bench_rows()):
+        print(f"{name},{us:.2f},{derived}")
+
     print("\nsmoke OK: flops/bytes nonzero, scan trip count exact")
     return 0
 
@@ -57,15 +103,26 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="compile one reduced config and sanity-check the "
                          "roofline/cost pipeline end to end")
+    ap.add_argument("--bench-out", metavar="PATH", default=None,
+                    help="write serving perf rows (tokens/s, service-time "
+                         "curve, chosen tiles, kernel bench) as JSON")
     args = ap.parse_args()
     if args.smoke:
-        sys.exit(smoke())
+        kernel_rows = _kernel_bench_rows() if args.bench_out else None
+        rc = smoke(kernel_rows)
+        if args.bench_out:
+            write_bench_json(args.bench_out, kernel_rows)
+        sys.exit(rc)
+    if args.bench_out:
+        write_bench_json(args.bench_out)
+        sys.exit(0)
 
     from benchmarks import kernel_bench, paper_tables, roofline_report
+    from benchmarks import serving_bench
     print("name,us_per_call,derived")
     failures = 0
     suites = list(paper_tables.ALL) + list(kernel_bench.ALL) + \
-        [roofline_report.rows]
+        list(serving_bench.ALL) + [roofline_report.rows]
     for fn in suites:
         try:
             for name, us, derived in fn():

@@ -1,0 +1,86 @@
+"""Serving-path benchmark rows: tokens/s, service-time curve, chosen tiles.
+
+The perf trajectory every future PR has to beat.  Runs a reduced arch end
+to end on whatever backend is present (CPU offline, TPU in production):
+post-training int8 quantization, the measured prefill service curve, the
+fused multi-token decode loop (jit'd ``lax.scan``, donated int8 KV cache),
+and the autotuner's chosen tile configs for the arch's serving matmuls.
+
+Row schema (stable; asserted by tests/test_bench_smoke.py)::
+
+  {"kind": "tokens_per_s",  "arch", "batch", "num_tokens", "tokens_per_s",
+   "seconds"}
+  {"kind": "service_time",  "arch", "batch", "seconds"}
+  {"kind": "chosen_tile",   "arch", "op", "m", "k", "n", "mode",
+   "bm", "bn", "bk", "vmem_bytes"}
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+
+def serving_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
+                 seq: int = 16, decode_tokens: int = 8,
+                 batches=(1, 8), tile_m=(8, 32, 128)):
+    """Benchmark one reduced arch; returns a list of schema rows."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core.qlinear import FP, W8A16, W8A8
+    from repro.core.quant import quantize_tree
+    from repro.kernels import autotune as AT
+    from repro.launch import serve as SV
+    from repro.models import registry as R
+    from repro.runtime import steps as ST
+
+    mode = {"fp": FP, "w8a16": W8A16, "w8a8": W8A8}[quant]
+    # int8 KV cache: the serving configuration this PR's decode path is for
+    cfg = dataclasses.replace(get_config(arch).reduced(), kv_quant=True)
+    params = R.init(jax.random.PRNGKey(0), cfg)
+    if mode.enabled:
+        params = quantize_tree(params, min_size=2048)
+
+    rows = []
+    prefill = jax.jit(ST.make_prefill_step(cfg, mode=mode))
+    _, curve = SV.measure_service_curve(
+        prefill, params, cfg, batches=batches, seq=seq, iters=2,
+        max_batch=max(batches), return_times=True)
+    for b, t in sorted(curve.items()):
+        rows.append({"kind": "service_time", "arch": cfg.name,
+                     "batch": b, "seconds": t})
+
+    with warnings.catch_warnings():
+        # CPU backends warn that donated buffers were not usable
+        warnings.simplefilter("ignore")
+        for b in batches:
+            bb, tps, dt = SV.measure_decode_tps(
+                cfg, params, mode, b, s_max=max(2 * seq, 64),
+                num_tokens=decode_tokens, iters=2)
+            rows.append({"kind": "tokens_per_s", "arch": cfg.name,
+                         "batch": bb, "num_tokens": decode_tokens,
+                         "tokens_per_s": tps, "seconds": dt})
+
+    for r in AT.tune_arch(cfg, m_values=tile_m):
+        r = dict(r)
+        r["kind"] = "chosen_tile"
+        rows.append(r)
+    return rows
+
+
+def rows():
+    """CSV-style rows for benchmarks/run.py's default suite."""
+    out = []
+    for r in serving_rows():
+        if r["kind"] == "tokens_per_s":
+            out.append((f"serving/decode_tps_b{r['batch']}",
+                        r["seconds"] * 1e6,
+                        f"tokens_per_s={r['tokens_per_s']:.0f}"))
+        elif r["kind"] == "service_time":
+            out.append((f"serving/service_b{r['batch']}",
+                        r["seconds"] * 1e6, "prefill"))
+    return out
+
+
+ALL = [rows]

@@ -1,0 +1,135 @@
+"""Pallas TPU fused decode attention over an int8 KV cache.
+
+The dominant decode memory term today is the *materialized dequantized
+cache*: the XLA einsum path streams the int8 cache, widens it to bf16/f32
+in HBM-visible intermediates, and pays the traffic twice.  This kernel
+reads the int8 cache tiles directly into VMEM and dequantizes tile-by-tile
+on the way into the MXU — HBM traffic is exactly q + int8 K + int8 V +
+fp32 scales + out, the paper's Unified-Buffer discipline applied to the
+serving hot loop.
+
+Shapes (native cache layout, no transposes):
+
+  q         (B, KV, G, hd)    fp — one query token, grouped per KV head
+  k, v      (B, S, KV, hd)    int8 cache slots
+  k_scale,  (B, S, KV)        fp32 per-(token, head) dequant scales
+  v_scale
+  valid_len (1, 1)            int32 — slots < valid_len participate
+  out       (B, KV, G, hd)    fp
+
+Grid: (B, KV, S/blk_s) with the slot sweep innermost ("arbitrary");
+scratch carries the online-softmax state (acc[G, hd] f32, m[G] f32,
+l[G] f32) across the sweep, like the flash kernel.  Per-token scales are
+independent of the contracted hd axis, so they fold into score columns
+(k_scale) and prob columns (v_scale) instead of dequantizing K/V tiles
+into a widened copy — only the (blk_s, hd) tile ever exists at fp32, in
+VMEM, for the duration of one dot.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# renamed TPUCompilerParams -> CompilerParams in newer JAX; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, vl_ref, o_ref,
+                        acc_ref, m_ref, l_ref, *, ns: int, blk_s: int,
+                        sm_scale: float, out_dtype):
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)      # (blk_s, hd) int8 -> f32
+    ks = ks_ref[0, :, 0]                           # (blk_s,) f32
+    # q·(k*ks) == (q·k)*ks — the per-token scale is constant along hd, so
+    # dequant folds into the score column instead of a widened K tile.
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * sm_scale * ks[None, :]
+
+    slot = sb * blk_s + jax.lax.broadcasted_iota(jnp.int32, (1, blk_s), 1)
+    valid = slot < vl_ref[0, 0]                    # (1, blk_s)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (G,)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(valid, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    vs = vs_ref[0, :, 0]                           # (blk_s,) f32
+    v = v_ref[0, :, 0, :].astype(jnp.float32)      # (blk_s, hd) int8 -> f32
+    # fold v_scale into prob columns: p·(v*vs) == (p*vs)·v
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p * vs[None, :], v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(sb == ns - 1)
+    def _final():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "blk_s", "sm_scale", "out_dtype", "interpret"))
+def decode_attention_int8(q: jax.Array, k: jax.Array, ks: jax.Array,
+                          v: jax.Array, vs: jax.Array,
+                          valid_len: jax.Array, *, blk_s: int = 128,
+                          sm_scale: float, out_dtype=jnp.float32,
+                          interpret: bool = False) -> jax.Array:
+    """One-token attention against an int8 KV cache (padded shapes).
+
+    q (B, KV, G, hd) fp; k/v (B, S, KV, hd) int8; ks/vs (B, S, KV) f32;
+    valid_len () int32.  G must be sublane-aligned (>= 8), hd lane-aligned
+    (128 multiple), S a multiple of blk_s — `ops.decode_attention` pads.
+    """
+    b, kvh, g, hd = q.shape
+    s_slots = k.shape[1]
+    assert s_slots % blk_s == 0, (s_slots, blk_s)
+    ns = s_slots // blk_s
+
+    kernel = functools.partial(
+        _decode_attn_kernel, ns=ns, blk_s=blk_s, sm_scale=sm_scale,
+        out_dtype=out_dtype)
+    vl = valid_len.reshape(1, 1).astype(jnp.int32)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kvh, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda bi, ki, si: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, blk_s, 1, hd),
+                         lambda bi, ki, si: (bi, si, ki, 0)),
+            pl.BlockSpec((1, blk_s, 1), lambda bi, ki, si: (bi, si, ki)),
+            pl.BlockSpec((1, blk_s, 1, hd),
+                         lambda bi, ki, si: (bi, si, ki, 0)),
+            pl.BlockSpec((1, blk_s, 1), lambda bi, ki, si: (bi, si, ki)),
+            pl.BlockSpec((1, 1), lambda bi, ki, si: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda bi, ki, si: (bi, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),      # running context acc
+            pltpu.VMEM((g,), jnp.float32),         # running max
+            pltpu.VMEM((g,), jnp.float32),         # running denominator
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, ks, v, vs, vl)

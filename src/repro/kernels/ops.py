@@ -2,7 +2,11 @@
 
 Responsibilities:
 - accept ND activations (leading dims flattened to M),
-- pad M/N/K up to MXU-aligned block multiples and slice the result back,
+- resolve tile shapes: explicit (bm, bn, bk) overrides win, otherwise
+  `kernels.autotune.best_config` picks tuned tiles per (M, K, N, mode) —
+  small-M decode problems get GEMV-style bm ∈ {8, 16, 32} row tiles
+  instead of padding to 128 rows,
+- pad M/N/K up to the chosen block multiples and slice the result back,
 - dispatch: TPU backend -> compiled Pallas kernel; CPU -> the jnp oracle
   (numerically identical contract) unless ``interpret=True`` is forced, which
   runs the actual kernel body through the Pallas interpreter for validation,
@@ -19,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quant import QTensor, quantize
+from repro.kernels import autotune as _at
 from repro.kernels import qmatmul as _k
 from repro.kernels import ref as _ref
 
@@ -40,11 +45,23 @@ def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-def _pick_block(size: int, pref: int, align: int) -> int:
-    """Largest block <= pref that is a multiple of ``align`` covering size."""
-    if size <= align:
-        return align
-    return min(pref, ((size + align - 1) // align) * align if size < pref else pref)
+def _dtype_name(dtype) -> str:
+    return "f32" if dtype == jnp.float32 else "bf16"
+
+
+def _resolve_blocks(m: int, k: int, n: int, *, mode: str, x_dtype: str,
+                    out_dtype: str, has_bias: bool, bm: Optional[int],
+                    bn: Optional[int], bk: Optional[int]):
+    """Fill unspecified block dims from the autotuner (explicit args win).
+
+    Runs at trace time on static shapes: the tuned choice is a Python int
+    baked into the compiled kernel, and the JSON cache makes reruns free.
+    """
+    if bm is not None and bn is not None and bk is not None:
+        return bm, bn, bk
+    tc = _at.best_config(m, k, n, mode=mode, x_dtype=x_dtype,
+                         out_dtype=out_dtype, has_bias=has_bias)
+    return bm or tc.bm, bn or tc.bn, bk or tc.bk
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -52,12 +69,14 @@ def _pick_block(size: int, pref: int, align: int) -> int:
 def qmatmul(x, w: QTensor, bias: Optional[jax.Array] = None, *,
             x_q: Optional[QTensor] = None, activation: str = "none",
             out_dtype=jnp.bfloat16, interpret: bool = False,
-            bm: int = 128, bn: int = 128, bk: int = 256) -> jax.Array:
+            bm: Optional[int] = None, bn: Optional[int] = None,
+            bk: Optional[int] = None) -> jax.Array:
     """act((x @ dequant(w)) + bias) with int8 weights.
 
     ``x`` fp array of shape (..., K); ``w`` QTensor (K, N) with per-column
     scales.  If ``x_q`` is given (pre-quantized activations, per-tensor
     scale), the full w8a8 integer path runs; otherwise weight-only w8a16.
+    ``bm``/``bn``/``bk`` override the autotuned tile shape when given.
     """
     if not isinstance(w, QTensor):
         raise TypeError("w must be a QTensor; quantize with quantize_weight()")
@@ -75,6 +94,10 @@ def qmatmul(x, w: QTensor, bias: Optional[jax.Array] = None, *,
         xq2 = x_q.values.reshape(-1, kdim)
         xs = x_q.scale.reshape(())
         if use_pallas:
+            bm, bn, bk = _resolve_blocks(
+                m, kdim, n, mode="w8a8", x_dtype="int8",
+                out_dtype=_dtype_name(out_dtype),
+                has_bias=bias is not None, bm=bm, bn=bn, bk=bk)
             xp = _pad_to(_pad_to(xq2, bm, 0), bk, 1)
             wp = _pad_to(_pad_to(w.values, bk, 0), bn, 1)
             wsp = _pad_to(w_scale, bn, 0)
@@ -90,6 +113,10 @@ def qmatmul(x, w: QTensor, bias: Optional[jax.Array] = None, *,
         return out.reshape(*lead, n)
 
     if use_pallas:
+        bm, bn, bk = _resolve_blocks(
+            m, kdim, n, mode="w8a16", x_dtype=_dtype_name(x.dtype),
+            out_dtype=_dtype_name(out_dtype),
+            has_bias=bias is not None, bm=bm, bn=bn, bk=bk)
         xp = _pad_to(_pad_to(x2, bm, 0), bk, 1)
         wp = _pad_to(_pad_to(w.values, bk, 0), bn, 1)
         wsp = _pad_to(w_scale, bn, 0)
@@ -112,6 +139,48 @@ def qmatmul_dynamic(x, w: QTensor, bias=None, *, activation: str = "none",
     x_q = quantize(x.astype(jnp.float32), bits=8, axis=None)
     return qmatmul(x, w, bias, x_q=x_q, activation=activation,
                    out_dtype=out_dtype, interpret=interpret)
+
+
+def decode_attention(q, k, v, k_scale, v_scale, valid_len, *,
+                     blk_s: int = 128, out_dtype=jnp.float32,
+                     interpret: bool = False):
+    """Fused one-token attention against an int8 KV cache.
+
+    q: (B, KV, G, hd) fp — current token's queries grouped per KV head;
+    k, v: (B, S, KV, hd) int8 cache; k_scale, v_scale: (B, S, KV) or
+    (B, S, KV, 1) fp32 per-(token, head) scales; valid_len: () int32.
+
+    TPU (or ``interpret=True``) -> the Pallas kernel, which dequantizes
+    tile-by-tile in VMEM; CPU -> the dense jnp oracle (identical math).
+    Padding: G to the 8-sublane floor, hd to the 128 lane width, S to a
+    blk_s multiple (padded slots are masked by ``valid_len``).
+    """
+    b, kvh, g, hd = q.shape
+    s_slots = k.shape[1]
+    sm_scale = hd ** -0.5
+    ks = k_scale.reshape(b, s_slots, kvh)
+    vs = v_scale.reshape(b, s_slots, kvh)
+    use_pallas = _on_tpu() or interpret
+    if not use_pallas:
+        out = _ref.decode_attention_int8_ref(
+            q, k, v, ks, vs, valid_len, sm_scale=sm_scale,
+            out_dtype=out_dtype)
+        return out
+    # query-group rows padded to the sublane floor of q's dtype (f32 8,
+    # bf16 16) — the (1, 1, G, hd) query block must be a legal tile
+    sub = 8 if q.dtype == jnp.float32 else 16
+    gp = max(sub, -(-g // sub) * sub)
+    qp = _pad_to(_pad_to(q, gp, 2), 128, 3)
+    kp = _pad_to(_pad_to(k, blk_s, 1), 128, 3)
+    vp = _pad_to(_pad_to(v, blk_s, 1), 128, 3)
+    ksp = _pad_to(ks, blk_s, 1)
+    vsp = _pad_to(vs, blk_s, 1)
+    from repro.kernels import decode_attention as _da
+    out = _da.decode_attention_int8(
+        qp, kp, ksp, vp, vsp, jnp.asarray(valid_len), blk_s=blk_s,
+        sm_scale=sm_scale, out_dtype=out_dtype,
+        interpret=interpret and not _on_tpu())
+    return out[:, :, :g, :hd]
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window=None,

@@ -25,7 +25,14 @@ Dataflow / BlockSpec design (HW adaptation notes):
   weights stream from HBM (Weight Memory).  Ops/weight-byte of one call is
   2·M — matching the paper's operational-intensity definition.
 - Block shapes default to MXU-aligned multiples of 128; int8 K-tiles are 256
-  wide since 8-bit operands pack 2× per register lane.
+  wide since 8-bit operands pack 2× per register lane.  Small-M decode
+  problems (M = batch, often 8–64) pass bm ∈ {8, 16, 32} GEMV-style row
+  tiles instead of padding to 128 rows; `kernels/autotune.py` picks the
+  tile per (M, K, N, mode) under the VMEM budget and `ops.py` threads the
+  choice through.
+- The bias tile is only streamed when a bias exists: the in_specs/operand
+  list is built conditionally, so the bias-free path (most serving
+  matmuls) saves one VMEM stream per tile.
 - Per-output-channel weight scales (1, bn) and a per-tensor (or per-row)
   activation scale are fused into the accumulator drain, together with bias
   and the Activate-unit nonlinearity (ReLU / sigmoid / tanh of the paper, plus
@@ -68,8 +75,12 @@ def _activate(x: jax.Array, activation: str) -> jax.Array:
 # w8a8: int8 x int8 -> int32 accumulate -> dequant -> act
 # ---------------------------------------------------------------------------
 
-def _w8a8_kernel(x_ref, w_ref, xs_ref, ws_ref, b_ref, o_ref, acc_ref, *,
-                 nk: int, activation: str, out_dtype):
+def _w8a8_kernel(x_ref, w_ref, xs_ref, ws_ref, *rest,
+                 nk: int, activation: str, out_dtype, has_bias: bool):
+    if has_bias:
+        b_ref, o_ref, acc_ref = rest
+    else:
+        b_ref, (o_ref, acc_ref) = None, rest
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -117,37 +128,45 @@ def qmatmul_w8a8(x: jax.Array, w: jax.Array, x_scale: jax.Array,
     xs = x_scale.reshape(1, 1).astype(jnp.float32)
     ws = w_scale.reshape(1, n).astype(jnp.float32)
     has_bias = bias is not None
-    b = bias.reshape(1, n).astype(jnp.float32) if has_bias else \
-        jnp.zeros((1, n), jnp.float32)
 
     kernel = functools.partial(
-        _w8a8_kernel, nk=nk, activation=activation, out_dtype=out_dtype)
+        _w8a8_kernel, nk=nk, activation=activation, out_dtype=out_dtype,
+        has_bias=has_bias)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),   # acts (UB)
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),   # weights (FIFO)
+        pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),      # act scale
+        pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),     # col scales
+    ]
+    operands = (x, w, xs, ws)
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        operands += (bias.reshape(1, n).astype(jnp.float32),)
 
     return pl.pallas_call(
         kernel,
         grid=(m // bm, n // bn, nk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),   # acts (UB)
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),   # weights (FIFO)
-            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),      # act scale
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),     # col scales
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),     # bias
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],       # Accumulators
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x, w, xs, ws, b)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------
 # w8a16: fp acts x int8 weights (dequant in-kernel), fp32 accumulate
 # ---------------------------------------------------------------------------
 
-def _w8a16_kernel(x_ref, w_ref, ws_ref, b_ref, o_ref, acc_ref, *,
-                  nk: int, activation: str, out_dtype):
+def _w8a16_kernel(x_ref, w_ref, ws_ref, *rest,
+                  nk: int, activation: str, out_dtype, has_bias: bool):
+    if has_bias:
+        b_ref, o_ref, acc_ref = rest
+    else:
+        b_ref, (o_ref, acc_ref) = None, rest
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -191,25 +210,29 @@ def qmatmul_w8a16(x: jax.Array, w: jax.Array, w_scale: jax.Array,
 
     ws = w_scale.reshape(1, n).astype(jnp.float32)
     has_bias = bias is not None
-    b = bias.reshape(1, n).astype(jnp.float32) if has_bias else \
-        jnp.zeros((1, n), jnp.float32)
 
     kernel = functools.partial(
-        _w8a16_kernel, nk=nk, activation=activation, out_dtype=out_dtype)
+        _w8a16_kernel, nk=nk, activation=activation, out_dtype=out_dtype,
+        has_bias=has_bias)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+    ]
+    operands = (x, w, ws)
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        operands += (bias.reshape(1, n).astype(jnp.float32),)
 
     return pl.pallas_call(
         kernel,
         grid=(m // bm, n // bn, nk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x, w, ws, b)
+    )(*operands)

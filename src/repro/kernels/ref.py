@@ -58,6 +58,32 @@ def qmatmul_w8a16_ref(x: jax.Array, w: jax.Array, w_scale: jax.Array,
     return _activate(acc, activation).astype(out_dtype)
 
 
+def decode_attention_int8_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                              k_scale: jax.Array, v_scale: jax.Array,
+                              valid_len, *, sm_scale=None,
+                              out_dtype=jnp.float32) -> jax.Array:
+    """Dense one-token attention against an int8 KV cache.
+
+    q: (B, KV, G, hd) fp; k, v: (B, S, KV, hd) int8; k_scale, v_scale:
+    (B, S, KV) or (B, S, KV, 1) fp32; valid_len: () int32 — slots with
+    index < valid_len participate.  Dequantizes the cache densely (the
+    thing the fused kernel avoids) and runs a masked softmax.
+    """
+    hd = q.shape[-1]
+    sm_scale = hd ** -0.5 if sm_scale is None else sm_scale
+    ks = k_scale.reshape(k.shape[:3]).astype(jnp.float32)
+    vs = v_scale.reshape(v.shape[:3]).astype(jnp.float32)
+    kf = k.astype(jnp.float32) * ks[..., None]
+    vf = v.astype(jnp.float32) * vs[..., None]
+    scores = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32),
+                        kf) * sm_scale
+    valid = jnp.arange(k.shape[1]) < valid_len          # (S,)
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(valid[None, None, None, :], probs, 0.0)
+    return jnp.einsum("bkgs,bskd->bkgd", probs, vf).astype(out_dtype)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, window=None,
                         kv_len=None, out_dtype=jnp.bfloat16) -> jax.Array:

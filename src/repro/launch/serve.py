@@ -1,9 +1,11 @@
 """Serving launcher: quantized model + latency-aware batched decode.
 
 The paper's serving story end-to-end: load (or init) a model, post-training
-int8 quantization, measure the service-time curve, pick the largest batch
-meeting the p99 deadline (Table 4 policy), then run a simulated request
-stream through the BatchQueue and report achieved p99 / throughput.
+int8 quantization, measure the service-time curve (including --max-batch,
+so batch selection interpolates instead of extrapolating), pick the largest
+batch meeting the p99 deadline (Table 4 policy), time the fused multi-token
+decode loop at the bucketed batch, then run a simulated request stream
+through the BatchQueue and report achieved p99 / throughput.
 
   python -m repro.launch.serve --arch starcoder2-3b --reduced \
       --deadline-ms 50 --rate 200
@@ -27,8 +29,16 @@ from repro.runtime import steps as ST
 
 
 def measure_service_curve(step_fn, params, cfg, batches=(1, 4, 16),
-                          seq=32, iters=3):
-    """Measured service time at several batch sizes -> LatencyModel."""
+                          seq=32, iters=3, max_batch=None,
+                          return_times=False):
+    """Measured service time at several batch sizes -> LatencyModel.
+
+    ``max_batch``: when given, it joins the measured set — the model is
+    then an interpolation over the whole batch range ``choose_batch``
+    searches, never an extrapolation beyond what was measured.
+    """
+    if max_batch is not None:
+        batches = tuple(sorted(set(batches) | {int(max_batch)}))
     times = {}
     for b in batches:
         tokens = jnp.zeros((b, seq), jnp.int32)
@@ -46,8 +56,39 @@ def measure_service_curve(step_fn, params, cfg, batches=(1, 4, 16),
     b1, b2 = bs[0], bs[-1]
     per_item = max((times[b2] - times[b1]) / (b2 - b1), 1e-9)
     fixed = max(times[b1] - b1 * per_item, 1e-9)
-    return bt.LatencyModel("measured", fixed * 2.0, per_item * 1.5,
-                           fixed, per_item)
+    model = bt.LatencyModel("measured", fixed * 2.0, per_item * 1.5,
+                            fixed, per_item)
+    return (model, times) if return_times else model
+
+
+def measure_decode_tps(cfg, params, mode, batch, *, s_max=128,
+                       num_tokens=16, iters=3, seed=0):
+    """Tokens/s of the fused decode loop for ``batch`` useful requests.
+
+    One jit'd ``lax.scan`` over ``num_tokens`` steps with the KV cache
+    donated — the serving hot loop as it actually runs, not a per-token
+    Python loop.  The loop executes at the *bucketed* shape (requests are
+    padded up to the static ladder), but throughput counts only the
+    ``batch`` real requests' tokens, so the reported tok/s is what the
+    chosen policy batch actually delivers, padding waste included.
+    Returns (bucketed_batch, tokens_per_s, seconds_per_loop).
+    """
+    b = ST.bucket_batch(batch)
+    loop = ST.jit_decode_loop(
+        ST.make_decode_loop(cfg, mode=mode, num_tokens=num_tokens))
+    tokens = jnp.ones((b, 1), jnp.int32)
+    idx = jnp.zeros((), jnp.int32)
+
+    cache = R.init_cache(cfg, b, s_max)
+    out, cache = loop(params, tokens, cache, idx)   # compile + warm
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        # cache was donated: reuse the returned buffer, rewound to step 0
+        out, cache = loop(params, tokens, cache, idx)
+    out.block_until_ready()
+    dt = (time.perf_counter() - t0) / iters
+    return b, batch * num_tokens / dt, dt
 
 
 def main(argv=None):
@@ -62,6 +103,9 @@ def main(argv=None):
     ap.add_argument("--n-requests", type=int, default=200)
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--decode-tokens", type=int, default=16,
+                    help="steps of the fused decode loop to time "
+                         "(0 disables the decode measurement)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -78,9 +122,15 @@ def main(argv=None):
               f"{tree_weight_bytes(params) / 1e6:.1f} MB ({args.quant})")
 
     prefill = jax.jit(ST.make_prefill_step(cfg, mode=mode))
-    model = measure_service_curve(prefill, params, cfg, seq=args.seq)
+    model, curve = measure_service_curve(prefill, params, cfg,
+                                         seq=args.seq,
+                                         max_batch=args.max_batch,
+                                         return_times=True)
     deadline = args.deadline_ms * 1e-3
-    batch = bt.choose_batch(model, deadline, args.max_batch)
+    # the chosen batch stays inside the measured range: max_batch is in
+    # the measured set, so the Table 4 policy never extrapolates.
+    batch = min(bt.choose_batch(model, deadline, args.max_batch),
+                max(curve))
     if batch == 0:
         print(f"[serve] deadline {args.deadline_ms} ms unattainable "
               f"(p99(1) = {model.p99_latency(1) * 1e3:.1f} ms)")
@@ -88,6 +138,14 @@ def main(argv=None):
     print(f"[serve] service(1)={model.service_time(1)*1e3:.2f} ms  "
           f"chosen batch={batch}  modeled p99={model.p99_latency(batch)*1e3:.2f} ms"
           f"  modeled IPS={model.ips(batch):,.0f}")
+
+    if args.decode_tokens > 0 and cfg.family not in ("encdec", "vlm"):
+        bb, tps, dt = measure_decode_tps(
+            cfg, params, mode, batch, s_max=max(args.seq * 2, 64),
+            num_tokens=args.decode_tokens, seed=args.seed)
+        print(f"[decode] fused loop batch={batch} (shape bucket {bb}) "
+              f"{args.decode_tokens} steps in {dt*1e3:.1f} ms -> "
+              f"{tps:,.0f} tok/s")
 
     reqs = bt.poisson_arrivals(args.rate, args.n_requests, deadline,
                                args.seed)

@@ -278,6 +278,22 @@ def attention(p: dict, x: Array, cfg: AttnConfig, *,
             k_self, v_self = k, v
         smax = ck.shape[1]
         g = h // kvh                            # heads per KV group
+        if valid_len is None:
+            valid_len = cache_index + s
+        if (quantized and not append_only and s == 1
+                and jax.default_backend() == "tpu"):
+            # Fused Pallas decode attention: streams the int8 cache and
+            # dequantizes tile-by-tile in VMEM (per-token scales folded
+            # into score/prob columns), removing the decode path's
+            # dominant memory term — the materialized dequantized cache.
+            from repro.kernels import ops as kops
+            out = kops.decode_attention(
+                q.reshape(b, kvh, g, hd), ck, cv, cks, cvs, valid_len,
+                out_dtype=jnp.float32)
+            out = out.astype(x.dtype).reshape(b, s, h, hd)
+            out = constrain(out, "act_heads")
+            out = linear(p["wo"], out.reshape(b, s, h * hd), mode=mode)
+            return constrain(out, "act"), new_cache
         q5 = q.reshape(b, s, kvh, g, hd)
         scale = hd ** -0.5
         # bf16-native contractions with f32 accumulate; per-token dequant
@@ -292,8 +308,6 @@ def attention(p: dict, x: Array, cfg: AttnConfig, *,
             scores = scores * cks[..., 0].transpose(0, 2, 1)[:, :, None,
                                                              None, :]
         kpos_idx = jnp.arange(smax)
-        if valid_len is None:
-            valid_len = cache_index + s
         if append_only:
             # cache holds tokens < cache_index; the current token's k/v are
             # handled as an extra score column below.

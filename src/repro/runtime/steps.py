@@ -17,6 +17,12 @@ and it shows up directly in the dry-run's collective-bytes term.
 ``make_serve_step``: prefill (full forward) and decode (one token against
 the KV cache) with static shapes — the TPU's deterministic-execution
 argument applied to the serving runtime (predictable p99, Table 4).
+
+``make_decode_loop``: the fused serving hot loop — ``lax.scan`` over N
+decode steps inside ONE jit boundary (one dispatch per *sequence* instead
+of one per token), with the KV cache donated so XLA updates it in place,
+and ``bucket_batch`` rounding request batches to a fixed ladder of shapes
+so the jit cache stays small and recompiles never land on the hot path.
 """
 from __future__ import annotations
 
@@ -164,6 +170,58 @@ def make_decode_step(cfg: ArchConfig, *, mode: QuantMode = FP) -> Callable:
                                            mode=mode)
         return logits, new_cache
     return decode_step
+
+
+# Static batch-shape ladder: every request batch is padded up to one of
+# these, so at most len(BATCH_BUCKETS) decode-loop compilations ever exist
+# (the deterministic-shapes discipline that makes p99 predictable).
+BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+def bucket_batch(b: int, buckets=BATCH_BUCKETS) -> int:
+    """Smallest bucket >= b (powers of two beyond the ladder's end)."""
+    if b <= 0:
+        raise ValueError(f"batch must be positive, got {b}")
+    for c in buckets:
+        if b <= c:
+            return c
+    c = buckets[-1]
+    while c < b:
+        c *= 2
+    return c
+
+
+def make_decode_loop(cfg: ArchConfig, *, mode: QuantMode = FP,
+                     num_tokens: int) -> Callable:
+    """Fused multi-token greedy decode: one jit'd ``lax.scan`` over steps.
+
+    Returns ``loop(params, tokens, cache, cache_index) -> (out, cache)``
+    with ``tokens`` (B, 1) int32 seed, ``cache_index`` () int32, and
+    ``out`` (B, num_tokens) int32 generated tokens.  Compile once per
+    (bucketed batch, num_tokens); wrap with :func:`jit_decode_loop` to get
+    the cache donated (in-place update, no per-step host round-trip).
+    """
+    decode = make_decode_step(cfg, mode=mode)
+
+    def loop(params, tokens, cache, cache_index):
+        def step(carry, _):
+            tok, cache, idx = carry
+            logits, cache = decode(
+                params, {"tokens": tok, "cache_index": idx}, cache)
+            nxt = greedy_sample(logits)
+            return (nxt[:, None], cache, idx + 1), nxt
+
+        cache_index = jnp.asarray(cache_index, jnp.int32)
+        (_, cache, _), toks = jax.lax.scan(
+            step, (tokens, cache, cache_index), None, length=num_tokens)
+        return jnp.swapaxes(toks, 0, 1), cache
+
+    return loop
+
+
+def jit_decode_loop(loop: Callable) -> Callable:
+    """jit a decode loop with the KV cache donated (argument 2)."""
+    return jax.jit(loop, donate_argnums=(2,))
 
 
 def greedy_sample(logits: jax.Array) -> jax.Array:

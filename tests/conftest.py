@@ -1,5 +1,6 @@
 import os
 import sys
+import tempfile
 
 import pytest
 
@@ -13,6 +14,12 @@ sys.path.insert(0, os.path.dirname(__file__))
 assert "xla_force_host_platform_device_count" not in \
     os.environ.get("XLA_FLAGS", ""), \
     "tests must not inherit the dry-run's 512-device override"
+
+# Hermetic autotune cache: a fresh per-session file so kernel-dispatch tests
+# never read (or pollute) the user's tile winners — a forced override, since
+# a developer's exported REPRO_AUTOTUNE_CACHE must not leak into the suite.
+os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(
+    tempfile.mkdtemp(prefix="repro_autotune_"), "autotune.json")
 
 
 def pytest_collection_modifyitems(config, items):

@@ -1,0 +1,67 @@
+"""Guard for every future perf PR: `benchmarks/run.py --smoke --bench-out`
+exits 0 offline and the BENCH JSON schema is stable."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+REQUIRED_KINDS = {"tokens_per_s", "service_time", "chosen_tile",
+                  "kernel_bench"}
+ROW_KEYS = {
+    "tokens_per_s": {"arch", "batch", "num_tokens", "tokens_per_s",
+                     "seconds"},
+    "service_time": {"arch", "batch", "seconds"},
+    "chosen_tile": {"arch", "op", "m", "k", "n", "mode", "bm", "bn", "bk",
+                    "vmem_bytes"},
+    "kernel_bench": {"name", "us_per_call", "derived"},
+}
+
+
+@pytest.fixture(scope="module")
+def bench_doc(tmp_path_factory):
+    out = tmp_path_factory.mktemp("bench") / "BENCH_serving.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src"), REPO,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    env.setdefault("REPRO_AUTOTUNE_CACHE",
+                   str(tmp_path_factory.mktemp("cache") / "autotune.json"))
+    r = subprocess.run(
+        [sys.executable, os.path.join("benchmarks", "run.py"), "--smoke",
+         "--bench-out", str(out)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"--smoke failed:\n{r.stdout}\n{r.stderr}"
+    assert "smoke OK" in r.stdout
+    # satellite: kernel_bench rows ride along in the --smoke output
+    assert "kernel/qmatmul_" in r.stdout
+    return json.loads(out.read_text())
+
+
+def test_schema_stable(bench_doc):
+    assert bench_doc["schema_version"] == 1
+    assert "backend" in bench_doc
+    rows = bench_doc["rows"]
+    kinds = {row["kind"] for row in rows}
+    assert REQUIRED_KINDS <= kinds, kinds
+    for row in rows:
+        want = ROW_KEYS.get(row["kind"])
+        if want:
+            assert want <= set(row), (row["kind"], row)
+
+
+def test_rows_are_sane(bench_doc):
+    from repro.kernels import autotune as AT
+    for row in bench_doc["rows"]:
+        if row["kind"] == "tokens_per_s":
+            assert row["tokens_per_s"] > 0
+        elif row["kind"] == "service_time":
+            assert row["seconds"] > 0
+        elif row["kind"] == "chosen_tile":
+            # the autotuner never ships a config exceeding the VMEM budget
+            assert row["vmem_bytes"] <= AT.DEFAULT_VMEM_BUDGET
+            tc = AT.TileConfig(row["bm"], row["bn"], row["bk"])
+            assert AT.is_legal(tc, mode=row["mode"]), row
