@@ -94,6 +94,16 @@ def smoke(kernel_rows=None) -> int:
                               else _kernel_bench_rows()):
         print(f"{name},{us:.2f},{derived}")
 
+    # continuous-batching engine: short CPU run, outputs must match the
+    # sequential per-token reference bit-for-bit; append-path kernel
+    # parity under the Pallas interpreter rides along (offline-safe)
+    from benchmarks import serving_bench
+    eng = serving_bench.engine_smoke()
+    print(f"\n[engine] smoke: {eng['requests']} requests in "
+          f"{eng['ticks']} ticks, occupancy {eng['mean_occupancy']:.1%}, "
+          f"{eng['admissions_while_busy']} mid-flight admissions; "
+          f"sequential-reference parity + append-path kernel parity OK")
+
     print("\nsmoke OK: flops/bytes nonzero, scan trip count exact")
     return 0
 

@@ -12,12 +12,19 @@ This module provides:
   either calibrated from two measured points (paper platforms) or derived
   from `core.perfmodel` / measured step times (our serving runtime),
 - ``choose_batch``: largest batch meeting a deadline — Table 4's policy,
+- ``AdmissionPolicy``: the online form of that policy — given the clock,
+  the pending deadlines and the next arrival, decide "launch a batch of B
+  now" or "wait for more work".  This is the single decision procedure
+  shared by BOTH serving backends: the virtual-time simulator below and
+  the live continuous-batching engine (`repro.engine`), which is what lets
+  a property test assert the two make identical admission decisions.
 - ``BatchQueue``: a deterministic virtual-time request-batching simulator
-  used by the serving example and the property tests: requests accumulate
-  until either (a) the batch that *would* form can no longer finish by the
-  earliest request's deadline, or (b) the chosen max batch is reached.
-  Deterministic execution (static shapes, no speculation) is what makes the
-  p99 predictable — the TPU argument, applied to the serving runtime.
+  (one backend of the policy) used by the serving example and the property
+  tests: requests accumulate until either (a) the batch that *would* form
+  can no longer finish by the earliest request's deadline, or (b) the
+  chosen max batch is reached.  Deterministic execution (static shapes, no
+  speculation) is what makes the p99 predictable — the TPU argument,
+  applied to the serving runtime.
 """
 from __future__ import annotations
 
@@ -96,7 +103,7 @@ def table4_row(model: LatencyModel, deadline_s: float = 7e-3,
 
 
 # ---------------------------------------------------------------------------
-# Virtual-time batch queue (serving runtime component)
+# Admission policy (shared by the simulator and the live engine)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +112,65 @@ class Request:
     deadline_s: float          # absolute
     rid: int = 0
 
+
+@dataclasses.dataclass(frozen=True)
+class Admission:
+    """One scheduler decision: launch ``batch`` requests now, or wait for
+    more arrivals until ``wait_until``."""
+    launch: bool
+    batch: int = 0
+    wait_until: float = 0.0
+
+
+class AdmissionPolicy:
+    """The Table 4 trade, made online — extracted from the old BatchQueue
+    inner loop so the virtual-time simulator and the live engine consume
+    the *same* decision procedure.
+
+    Given the clock and the sorted pending deadlines: form the largest
+    batch B <= capacity such that now + service_time(B) meets the earliest
+    pending deadline; launch immediately if waiting for one more request
+    would break that bound, otherwise wait for the next arrival (at most
+    ``max_wait_s`` away).
+    """
+
+    def __init__(self, service_time: Callable[[int], float],
+                 max_batch: int = 256, max_wait_s: float = 2e-3):
+        self.service_time = service_time
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+
+    def decide(self, now: float, deadlines: Sequence[float],
+               next_arrival: Optional[float] = None,
+               capacity: Optional[int] = None) -> Admission:
+        """``deadlines``: absolute deadlines of pending requests, sorted
+        ascending (an empty queue is a no-launch wait).  ``capacity``
+        caps the batch below ``max_batch`` (the live engine passes its
+        free-slot count)."""
+        if not deadlines:
+            return Admission(False, wait_until=(
+                next_arrival if next_arrival is not None else now))
+        cap = self.max_batch if capacity is None \
+            else min(capacity, self.max_batch)
+        earliest = deadlines[0]
+        b = min(len(deadlines), cap)
+        # shrink until the batch finishes by the earliest deadline
+        while b > 1 and now + self.service_time(b) > earliest:
+            b -= 1
+        # can we afford to wait for more work?
+        can_wait = (
+            b < cap and next_arrival is not None
+            and next_arrival - now <= self.max_wait_s
+            and next_arrival + self.service_time(
+                min(b + 1, cap)) <= earliest)
+        if can_wait:
+            return Admission(False, wait_until=next_arrival)
+        return Admission(True, batch=b)
+
+
+# ---------------------------------------------------------------------------
+# Virtual-time batch queue (simulator backend of the admission policy)
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class BatchRecord:
@@ -115,20 +181,20 @@ class BatchRecord:
 
 
 class BatchQueue:
-    """Deterministic virtual-time batching simulator.
-
-    Policy: when the engine is free and requests are pending, form the
-    largest batch B <= max_batch such that now + service_time(B) meets the
-    earliest pending deadline; launch immediately if waiting for one more
-    request would break that bound, otherwise wait for more arrivals up to
-    `max_wait_s`.  This is the Table 4 trade, made online.
+    """Deterministic virtual-time batching simulator: one backend of
+    :class:`AdmissionPolicy` (the live `repro.engine` is the other).  The
+    engine-is-busy-until-finish semantics live here; the batch-vs-deadline
+    decision lives in the policy.
     """
 
     def __init__(self, service_time: Callable[[int], float],
-                 max_batch: int = 256, max_wait_s: float = 2e-3):
-        self.service_time = service_time
-        self.max_batch = max_batch
-        self.max_wait_s = max_wait_s
+                 max_batch: int = 256, max_wait_s: float = 2e-3,
+                 policy: Optional[AdmissionPolicy] = None):
+        self.policy = policy or AdmissionPolicy(
+            service_time, max_batch=max_batch, max_wait_s=max_wait_s)
+        self.service_time = self.policy.service_time
+        self.max_batch = self.policy.max_batch
+        self.max_wait_s = self.policy.max_wait_s
 
     def run(self, requests: Sequence[Request]) -> List[BatchRecord]:
         pending: List[Request] = []
@@ -144,24 +210,15 @@ class BatchQueue:
             if not pending:
                 now = reqs[i].arrival_s
                 continue
-            earliest = pending[0].deadline_s
-            b = min(len(pending), self.max_batch)
-            # shrink until the batch finishes by the earliest deadline
-            while b > 1 and now + self.service_time(b) > earliest:
-                b -= 1
-            # can we afford to wait for more work?
             next_arrival = reqs[i].arrival_s if i < len(reqs) else None
-            can_wait = (
-                b < self.max_batch and next_arrival is not None
-                and next_arrival - now <= self.max_wait_s
-                and next_arrival + self.service_time(
-                    min(b + 1, self.max_batch)) <= earliest)
-            if can_wait:
-                now = next_arrival
+            act = self.policy.decide(
+                now, [r.deadline_s for r in pending], next_arrival)
+            if not act.launch:
+                now = act.wait_until
                 continue
-            batch = pending[:b]
-            del pending[:b]
-            finish = now + self.service_time(b)
+            batch = pending[:act.batch]
+            del pending[:act.batch]
+            finish = now + self.service_time(act.batch)
             records.append(BatchRecord(
                 now, finish, tuple(r.rid for r in batch),
                 all(finish <= r.deadline_s for r in batch)))

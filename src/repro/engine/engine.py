@@ -1,0 +1,308 @@
+"""The continuous-batching engine: one fused slot-masked step per tick.
+
+Execution model (Orca-style iteration-level scheduling, specialized to
+the paper's static-shape discipline):
+
+- The KV cache is a fixed pool of ``num_slots`` rows of ``max_seq``
+  positions — ONE compiled decode step ever exists, whatever the request
+  mix, so per-tick latency is deterministic (the Table 4 argument).
+- Every tick advances EVERY slot by one token in one fused
+  ``make_slot_decode_step`` call (active mask folded into sampling and
+  index advance, cache donated).  A slot mid-prefill is teacher-forced
+  its next prompt token; a slot mid-generation feeds back its last
+  sample; the first sample after the final prompt token is the request's
+  first output token.
+- Admission consults the same ``core.batching.AdmissionPolicy`` as the
+  virtual-time simulator; admitted requests take over free slots
+  immediately — there is NO drain barrier: new requests prefill while
+  older ones are mid-generation (``admissions_while_busy`` counts the
+  overlap, and the engine test asserts it is nonzero).
+- Retired slots return to the pool the same tick they finish; stale
+  cache contents need no scrub because every read is masked at the
+  slot's own frontier.
+
+``reference_outputs`` is the sequential per-token loop (batch=1, same
+decode math) the engine must match bit-for-bit under greedy sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import batching as bt
+from repro.core.qlinear import FP, QuantMode
+from repro.engine.scheduler import SlotScheduler
+from repro.engine.slots import SlotPool
+from repro.models import registry as R
+from repro.runtime import steps as ST
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineRequest:
+    rid: int
+    prompt: Tuple[int, ...]
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    deadline_s: float = float("inf")
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: List[int]
+    arrival_s: float
+    admit_s: float
+    first_token_s: float
+    finish_s: float
+    slot: int
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+
+@dataclasses.dataclass
+class EngineReport:
+    results: List[RequestResult]
+    ticks: int
+    generated_tokens: int
+    duration_s: float                 # engine-clock time (virtual or wall)
+    wall_s: float                     # measured host time, always
+    p99_latency_s: float
+    tokens_per_s: float
+    occupancy: List[int]              # active slots per tick
+    mean_occupancy: float             # fraction of the pool in use
+    admissions_while_busy: int        # requests admitted while some older
+                                      # request was mid-generation
+    num_slots: int
+
+    def outputs(self) -> Dict[int, List[int]]:
+        return {r.rid: r.tokens for r in self.results}
+
+
+class Engine:
+    """Continuous-batching serving engine over a slot-based KV cache."""
+
+    def __init__(self, cfg: ArchConfig, params, *, mode: QuantMode = FP,
+                 num_slots: int = 8, max_seq: int = 64,
+                 policy: Optional[bt.AdmissionPolicy] = None):
+        if cfg.family != "dense":
+            raise NotImplementedError(
+                f"slot engine supports dense-family archs for now, "
+                f"got {cfg.family!r} ({cfg.name}); other families need "
+                f"per-row cache_index support in their decode_step")
+        self.cfg, self.params, self.mode = cfg, params, mode
+        # the pool size IS the compiled batch shape: bucket it so the
+        # engine's one decode step sits on the static ladder; the cache
+        # length rounds up to 16 so the slot dimension tiles cleanly
+        self.num_slots = ST.bucket_batch(num_slots)
+        self.max_seq = max_seq + (-max_seq) % 16
+        self.policy = policy or bt.AdmissionPolicy(
+            lambda b: 0.0, max_batch=self.num_slots, max_wait_s=0.0)
+        self.step = ST.jit_slot_decode_step(
+            ST.make_slot_decode_step(cfg, mode=mode))
+
+    def warmup(self) -> None:
+        """Trace + compile the slot step on a throwaway cache so a
+        wall-clock ``serve`` charges its first tick to serving, not to
+        compilation."""
+        with warnings.catch_warnings():
+            warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
+            self.step(self.params,
+                      jnp.zeros((self.num_slots, 1), jnp.int32),
+                      R.init_cache(self.cfg, self.num_slots, self.max_seq),
+                      jnp.zeros((self.num_slots,), jnp.int32),
+                      jnp.zeros((self.num_slots,), bool))
+
+    # ------------------------------------------------------------------
+
+    def serve(self, requests: Sequence[EngineRequest], *,
+              clock: str = "virtual",
+              tick_s: Union[float, Callable[[int], float]] = 1e-3,
+              max_ticks: Optional[int] = None) -> EngineReport:
+        """Serve a whole request trace; return per-request outputs and
+        achieved latency/throughput/occupancy metrics.
+
+        ``clock="virtual"``: time advances ``tick_s`` per tick (or
+        ``tick_s(active_count)`` when callable) — fully deterministic,
+        used by tests and the offline benchmark.  ``clock="wall"``: time
+        is the measured host clock — the live mode, where arrivals
+        interleave with real step latency.
+        """
+        if clock not in ("virtual", "wall"):
+            raise ValueError(f"clock must be 'virtual' or 'wall': {clock!r}")
+        for r in requests:
+            if r.max_new_tokens <= 0:
+                raise ValueError(
+                    f"request {r.rid}: max_new_tokens must be positive "
+                    f"(got {r.max_new_tokens})")
+            need = len(r.prompt) + r.max_new_tokens
+            if need > self.max_seq:
+                raise ValueError(
+                    f"request {r.rid} needs {need} cache positions > "
+                    f"max_seq={self.max_seq}")
+        reqs = sorted(requests, key=lambda r: r.arrival_s)
+        S = self.num_slots
+        pool = SlotPool(S)
+        sched = SlotScheduler(self.policy)
+        cache = R.init_cache(self.cfg, S, self.max_seq)
+        tokens = np.zeros((S, 1), np.int32)
+        index = np.zeros((S,), np.int32)
+        results: List[RequestResult] = []
+        occupancy: List[int] = []
+        admissions_while_busy = 0
+        ticks = 0
+        gen_tokens = 0
+        i, now = 0, 0.0
+        t0 = time.perf_counter()
+        limit = max_ticks if max_ticks is not None else \
+            (sum(len(r.prompt) + r.max_new_tokens for r in reqs) + 16) * 4
+
+        with warnings.catch_warnings():
+            # CPU backends warn that donated buffers were not usable
+            warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
+            while i < len(reqs) or sched.pending or pool.active_count:
+                # 1) ingest everything that has arrived by `now`
+                while i < len(reqs) and reqs[i].arrival_s <= now:
+                    sched.push(reqs[i])
+                    i += 1
+                next_arrival = reqs[i].arrival_s if i < len(reqs) else None
+                # 2) admit into free slots — mid-flight, no drain barrier
+                generating = any(s.active and not s.in_prefill
+                                 for s in pool.slots)
+                cohort = sched.admit(now, pool.free_count, next_arrival)
+                if generating:
+                    admissions_while_busy += len(cohort)
+                for req in cohort:
+                    st = pool.alloc(req.rid, req.prompt, req.max_new_tokens,
+                                    now=now, arrival_s=req.arrival_s,
+                                    deadline_s=req.deadline_s)
+                    index[st.sid] = 0
+                    tokens[st.sid, 0] = st.next_input()
+                # 3) idle: nothing active -> jump to the next event
+                if pool.active_count == 0:
+                    if next_arrival is None and not sched.pending:
+                        break
+                    target = next_arrival if next_arrival is not None else now
+                    if clock == "wall":
+                        gap = target - (time.perf_counter() - t0)
+                        if gap > 0:
+                            time.sleep(min(gap, 0.05))
+                        now = time.perf_counter() - t0
+                    else:
+                        now = max(now, target)
+                    continue
+                # 4) one fused slot-masked step: every slot, one token
+                active = np.array([s.active for s in pool.slots], bool)
+                nxt, cache, new_index = self.step(
+                    self.params, jnp.asarray(tokens), cache,
+                    jnp.asarray(index), jnp.asarray(active))
+                nxt = np.asarray(nxt)
+                index = np.array(new_index)    # writable host copy
+                ticks += 1
+                occupancy.append(int(active.sum()))
+                if clock == "wall":
+                    # np.asarray(nxt) above already blocked on the step
+                    now = time.perf_counter() - t0
+                else:
+                    dt = tick_s(int(active.sum())) if callable(tick_s) \
+                        else tick_s
+                    now += dt
+                # 5) host bookkeeping: teacher-force prefill, collect
+                #    samples, retire finished slots for immediate reuse
+                for st in pool.active_slots():
+                    st.pos += 1
+                    if st.pos < len(st.prompt):        # still prefilling
+                        tokens[st.sid, 0] = st.prompt[st.pos]
+                        continue
+                    tok = int(nxt[st.sid])
+                    st.generated.append(tok)
+                    gen_tokens += 1
+                    if st.first_token_s < 0:
+                        st.first_token_s = now
+                    if st.done():
+                        results.append(RequestResult(
+                            rid=st.rid, tokens=list(st.generated),
+                            arrival_s=st.arrival_s, admit_s=st.admit_s,
+                            first_token_s=st.first_token_s, finish_s=now,
+                            slot=st.sid))
+                        pool.free(st.sid)
+                    else:
+                        tokens[st.sid, 0] = tok
+                if ticks > limit:
+                    raise RuntimeError(
+                        f"engine exceeded {limit} ticks; requests stuck?")
+
+        wall = time.perf_counter() - t0
+        results.sort(key=lambda r: r.rid)
+        lat = [r.latency_s for r in results]
+        dur = max(now, 1e-12)
+        return EngineReport(
+            results=results, ticks=ticks, generated_tokens=gen_tokens,
+            duration_s=now, wall_s=wall,
+            p99_latency_s=bt.p99(lat),
+            tokens_per_s=gen_tokens / dur,
+            occupancy=occupancy,
+            mean_occupancy=(sum(occupancy) / (len(occupancy) * S)
+                            if occupancy else 0.0),
+            admissions_while_busy=admissions_while_busy,
+            num_slots=S)
+
+
+# ---------------------------------------------------------------------------
+# sequential reference + trace synthesis (shared by tests / serve / bench)
+# ---------------------------------------------------------------------------
+
+def reference_outputs(cfg: ArchConfig, params,
+                      requests: Sequence[EngineRequest], *,
+                      mode: QuantMode = FP, max_seq: int = 64
+                      ) -> Dict[int, List[int]]:
+    """The sequential per-token reference loop: each request alone at
+    batch=1, prompt teacher-forced a token at a time, then greedy
+    generation — the bit-for-bit baseline the engine must reproduce."""
+    decode = jax.jit(ST.make_decode_step(cfg, mode=mode))
+    out: Dict[int, List[int]] = {}
+    for r in sorted(requests, key=lambda x: x.rid):
+        cache = R.init_cache(cfg, 1, max_seq)
+        tok = None
+        gen: List[int] = []
+        feed = list(r.prompt)
+        pos = 0
+        while len(gen) < r.max_new_tokens:
+            cur = feed[pos] if pos < len(feed) else tok
+            logits, cache = decode(
+                params,
+                {"tokens": jnp.asarray([[cur]], jnp.int32),
+                 "cache_index": jnp.asarray(pos, jnp.int32)}, cache)
+            pos += 1
+            if pos >= len(feed):
+                tok = int(ST.greedy_sample(logits)[0])
+                gen.append(tok)
+        out[r.rid] = gen
+    return out
+
+
+def synthetic_requests(n: int, *, rate_per_s: float, vocab: int,
+                       prompt_len: int = 4, max_new_tokens: int = 8,
+                       deadline_s: float = float("inf"),
+                       seed: int = 0) -> List[EngineRequest]:
+    """Deterministic pseudo-Poisson request trace with synthetic prompts
+    (derived from the rid, so any two runs see identical streams)."""
+    arr = bt.poisson_arrivals(rate_per_s, n, 0.0, seed)
+    reqs = []
+    for a in arr:
+        prompt = tuple(1 + (a.rid * 7 + 3 * j) % (vocab - 1)
+                       for j in range(prompt_len))
+        reqs.append(EngineRequest(
+            rid=a.rid, prompt=prompt, max_new_tokens=max_new_tokens,
+            arrival_s=a.arrival_s,
+            deadline_s=(a.arrival_s + deadline_s
+                        if deadline_s != float("inf") else float("inf"))))
+    return reqs

@@ -1,0 +1,78 @@
+"""Admission frontend for the live engine.
+
+``SlotScheduler`` owns the pending queue and consults the SAME
+:class:`repro.core.batching.AdmissionPolicy` the virtual-time simulator
+(`BatchQueue`) uses — the refactor's point is that "which requests launch
+now?" is one decision procedure with two backends.  ``run_virtual``
+replays a whole arrival trace through this scheduler under the
+simulator's engine-busy-until-finish semantics, which is what the
+equivalence property test compares against ``BatchQueue.run`` record for
+record.
+"""
+from __future__ import annotations
+
+import bisect
+from typing import List, Optional, Sequence
+
+from repro.core import batching as bt
+
+
+class SlotScheduler:
+    """Pending queue + shared admission policy.
+
+    Works on any request object with ``arrival_s``/``deadline_s``/``rid``
+    attributes (``core.batching.Request`` or the engine's
+    ``EngineRequest``).
+    """
+
+    def __init__(self, policy: bt.AdmissionPolicy):
+        self.policy = policy
+        self.pending: List = []          # sorted by deadline
+
+    def push(self, req) -> None:
+        bisect.insort(self.pending, req, key=lambda r: r.deadline_s)
+
+    def admit(self, now: float, capacity: int,
+              next_arrival: Optional[float] = None) -> List:
+        """Requests to admit right now into ``capacity`` free slots
+        (possibly none: the policy may prefer to wait for more work)."""
+        if capacity <= 0 or not self.pending:
+            return []
+        act = self.policy.decide(
+            now, [r.deadline_s for r in self.pending], next_arrival,
+            capacity=capacity)
+        if not act.launch:
+            return []
+        cohort = self.pending[:act.batch]
+        del self.pending[:act.batch]
+        return cohort
+
+    def run_virtual(self, requests: Sequence[bt.Request]
+                    ) -> List[bt.BatchRecord]:
+        """Replay a trace under virtual time with the simulator's
+        engine-busy-until-finish semantics, going through this
+        scheduler's own ``push``/``admit`` path.  Must produce records
+        identical to ``BatchQueue.run`` on the same trace — the
+        property test for the policy extraction."""
+        reqs = sorted(requests, key=lambda r: r.arrival_s)
+        records: List[bt.BatchRecord] = []
+        service = self.policy.service_time
+        i, now = 0, 0.0
+        while i < len(reqs) or self.pending:
+            while i < len(reqs) and reqs[i].arrival_s <= now:
+                self.push(reqs[i])
+                i += 1
+            if not self.pending:
+                now = reqs[i].arrival_s
+                continue
+            next_arrival = reqs[i].arrival_s if i < len(reqs) else None
+            cohort = self.admit(now, self.policy.max_batch, next_arrival)
+            if not cohort:                       # policy chose to wait
+                now = next_arrival
+                continue
+            finish = now + service(len(cohort))
+            records.append(bt.BatchRecord(
+                now, finish, tuple(r.rid for r in cohort),
+                all(finish <= r.deadline_s for r in cohort)))
+            now = finish
+        return records

@@ -1,0 +1,88 @@
+"""Slot pool bookkeeping for the continuous-batching engine.
+
+Pure host-side state (no jax): which slot serves which request, how far
+each request has advanced, what it has generated.  The device-side cache
+row `sid` belongs to whichever request currently owns slot `sid`; a freed
+slot is reusable immediately — the engine's per-row masking (valid
+frontier = the slot's own index) is what makes stale cache contents
+invisible, so there is nothing to scrub between tenants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class SlotState:
+    """One slot's tenancy: the request it serves and its progress."""
+    sid: int
+    rid: int = -1
+    prompt: Tuple[int, ...] = ()
+    max_new: int = 0
+    pos: int = 0                      # tokens fed so far (prompt + generated)
+    generated: Optional[List[int]] = None
+    arrival_s: float = 0.0
+    admit_s: float = 0.0
+    deadline_s: float = float("inf")
+    first_token_s: float = -1.0
+
+    @property
+    def active(self) -> bool:
+        return self.rid >= 0
+
+    @property
+    def in_prefill(self) -> bool:
+        return self.active and self.pos < len(self.prompt)
+
+    def next_input(self) -> int:
+        """Token to feed this tick: prompt (teacher-forced) or last sample."""
+        if self.pos < len(self.prompt):
+            return self.prompt[self.pos]
+        return self.generated[-1]
+
+    def done(self) -> bool:
+        return self.active and len(self.generated) >= self.max_new
+
+
+class SlotPool:
+    """Fixed pool of ``num_slots`` KV-cache slots: alloc on admission,
+    free on retirement, reuse immediately."""
+
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self.slots = [SlotState(sid=i) for i in range(num_slots)]
+        self._free = list(range(num_slots - 1, -1, -1))   # pop() -> slot 0 first
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_count(self) -> int:
+        return self.num_slots - len(self._free)
+
+    def active_slots(self) -> List[SlotState]:
+        return [s for s in self.slots if s.active]
+
+    def alloc(self, rid: int, prompt: Tuple[int, ...], max_new: int, *,
+              now: float, arrival_s: float,
+              deadline_s: float = float("inf")) -> SlotState:
+        if not self._free:
+            raise RuntimeError("no free slot (admission must respect "
+                               "free_count)")
+        if not prompt:
+            raise ValueError(f"request {rid}: empty prompt")
+        st = self.slots[self._free.pop()]
+        st.rid, st.prompt, st.max_new = rid, tuple(prompt), max_new
+        st.pos, st.generated = 0, []
+        st.arrival_s, st.admit_s, st.deadline_s = arrival_s, now, deadline_s
+        st.first_token_s = -1.0
+        return st
+
+    def free(self, sid: int) -> None:
+        st = self.slots[sid]
+        assert st.active, sid
+        st.rid = -1
+        st.prompt, st.generated = (), None
+        self._free.append(sid)

@@ -14,7 +14,14 @@ Shapes (native cache layout, no transposes):
   k, v      (B, S, KV, hd)    int8 cache slots
   k_scale,  (B, S, KV)        fp32 per-(token, head) dequant scales
   v_scale
-  valid_len (1, 1)            int32 — slots < valid_len participate
+  valid_len (B, 1)            int32 — slots < valid_len[b] participate
+                              (per-row: the slot engine's requests each
+                              sit at their own sequence frontier)
+  k_new,    (B, 1, KV, hd)    fp — OPTIONAL: the current token's k/v
+  v_new                       (append path: the cache holds only tokens
+                              < valid_len; the new token rides along as
+                              one extra operand instead of a cache
+                              rewrite inside the layer scan)
   out       (B, KV, G, hd)    fp
 
 Grid: (B, KV, S/blk_s) with the slot sweep innermost ("arbitrary");
@@ -23,7 +30,10 @@ l[G] f32) across the sweep, like the flash kernel.  Per-token scales are
 independent of the contracted hd axis, so they fold into score columns
 (k_scale) and prob columns (v_scale) instead of dequantizing K/V tiles
 into a widened copy — only the (blk_s, hd) tile ever exists at fp32, in
-VMEM, for the duration of one dot.
+VMEM, for the duration of one dot.  With ``k_new``/``v_new`` the final
+sweep step folds the current token into the online softmax as one more
+score column before normalizing — closing the append path that the
+einsum fallback previously served alone.
 """
 from __future__ import annotations
 
@@ -41,9 +51,13 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
 NEG_INF = -1e30
 
 
-def _decode_attn_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, vl_ref, o_ref,
-                        acc_ref, m_ref, l_ref, *, ns: int, blk_s: int,
-                        sm_scale: float, out_dtype):
+def _decode_attn_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, *rest,
+                        ns: int, blk_s: int, sm_scale: float, out_dtype,
+                        has_new: bool):
+    if has_new:
+        kn_ref, vn_ref, vl_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        vl_ref, o_ref, acc_ref, m_ref, l_ref = rest
     sb = pl.program_id(2)
 
     @pl.when(sb == 0)
@@ -81,46 +95,77 @@ def _decode_attn_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, vl_ref, o_ref,
 
     @pl.when(sb == ns - 1)
     def _final():
-        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
-        o_ref[0, 0] = (acc_ref[...] / denom).astype(out_dtype)
+        acc, m_run, l_run = acc_ref[...], m_ref[...], l_ref[...]
+        if has_new:
+            # Append path: fold the current token's k/v (already fp — the
+            # caller dequantized its own-step quantization) into the online
+            # softmax as one extra column.  Also covers the empty-cache
+            # tick: every slot masked -> m_run = -inf -> alpha underflows
+            # to 0 and the output is exactly the new token's v.
+            kn = kn_ref[0, 0, 0, :].astype(jnp.float32)      # (hd,)
+            vn = vn_ref[0, 0, 0, :].astype(jnp.float32)      # (hd,)
+            s_new = jnp.sum(q * kn[None, :], axis=1) * sm_scale   # (G,)
+            m_fin = jnp.maximum(m_run, s_new)
+            alpha_f = jnp.exp(m_run - m_fin)
+            p_new = jnp.exp(s_new - m_fin)
+            l_run = l_run * alpha_f + p_new
+            acc = acc * alpha_f[:, None] + p_new[:, None] * vn[None, :]
+        denom = jnp.maximum(l_run, 1e-30)[:, None]
+        o_ref[0, 0] = (acc / denom).astype(out_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "blk_s", "sm_scale", "out_dtype", "interpret"))
 def decode_attention_int8(q: jax.Array, k: jax.Array, ks: jax.Array,
                           v: jax.Array, vs: jax.Array,
-                          valid_len: jax.Array, *, blk_s: int = 128,
+                          valid_len: jax.Array,
+                          k_new=None, v_new=None, *, blk_s: int = 128,
                           sm_scale: float, out_dtype=jnp.float32,
                           interpret: bool = False) -> jax.Array:
     """One-token attention against an int8 KV cache (padded shapes).
 
     q (B, KV, G, hd) fp; k/v (B, S, KV, hd) int8; ks/vs (B, S, KV) f32;
-    valid_len () int32.  G must be sublane-aligned (>= 8), hd lane-aligned
-    (128 multiple), S a multiple of blk_s — `ops.decode_attention` pads.
+    valid_len () or (B,) int32.  ``k_new``/``v_new`` (B, 1, KV, hd) fp:
+    the append path's current-token k/v, folded in at the final sweep
+    step.  G must be sublane-aligned (>= 8), hd lane-aligned (128
+    multiple), S a multiple of blk_s — `ops.decode_attention` pads.
     """
     b, kvh, g, hd = q.shape
     s_slots = k.shape[1]
     assert s_slots % blk_s == 0, (s_slots, blk_s)
+    assert (k_new is None) == (v_new is None)
     ns = s_slots // blk_s
+    has_new = k_new is not None
 
     kernel = functools.partial(
         _decode_attn_kernel, ns=ns, blk_s=blk_s, sm_scale=sm_scale,
-        out_dtype=out_dtype)
-    vl = valid_len.reshape(1, 1).astype(jnp.int32)
+        out_dtype=out_dtype, has_new=has_new)
+    vl = jnp.broadcast_to(jnp.asarray(valid_len).reshape(-1), (b,))
+    vl = vl.reshape(b, 1).astype(jnp.int32)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd), lambda bi, ki, si: (bi, ki, 0, 0)),
+        pl.BlockSpec((1, blk_s, 1, hd),
+                     lambda bi, ki, si: (bi, si, ki, 0)),
+        pl.BlockSpec((1, blk_s, 1), lambda bi, ki, si: (bi, si, ki)),
+        pl.BlockSpec((1, blk_s, 1, hd),
+                     lambda bi, ki, si: (bi, si, ki, 0)),
+        pl.BlockSpec((1, blk_s, 1), lambda bi, ki, si: (bi, si, ki)),
+    ]
+    operands = [q, k, ks, v, vs]
+    if has_new:
+        in_specs += [
+            pl.BlockSpec((1, 1, 1, hd), lambda bi, ki, si: (bi, 0, ki, 0)),
+            pl.BlockSpec((1, 1, 1, hd), lambda bi, ki, si: (bi, 0, ki, 0)),
+        ]
+        operands += [k_new, v_new]
+    in_specs.append(pl.BlockSpec((1, 1), lambda bi, ki, si: (bi, 0)))
+    operands.append(vl)
 
     return pl.pallas_call(
         kernel,
         grid=(b, kvh, ns),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, hd), lambda bi, ki, si: (bi, ki, 0, 0)),
-            pl.BlockSpec((1, blk_s, 1, hd),
-                         lambda bi, ki, si: (bi, si, ki, 0)),
-            pl.BlockSpec((1, blk_s, 1), lambda bi, ki, si: (bi, si, ki)),
-            pl.BlockSpec((1, blk_s, 1, hd),
-                         lambda bi, ki, si: (bi, si, ki, 0)),
-            pl.BlockSpec((1, blk_s, 1), lambda bi, ki, si: (bi, si, ki)),
-            pl.BlockSpec((1, 1), lambda bi, ki, si: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, hd),
                                lambda bi, ki, si: (bi, ki, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), out_dtype),
@@ -132,4 +177,4 @@ def decode_attention_int8(q: jax.Array, k: jax.Array, ks: jax.Array,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(q, k, ks, v, vs, vl)
+    )(*operands)

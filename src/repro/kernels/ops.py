@@ -142,13 +142,20 @@ def qmatmul_dynamic(x, w: QTensor, bias=None, *, activation: str = "none",
 
 
 def decode_attention(q, k, v, k_scale, v_scale, valid_len, *,
+                     k_new=None, v_new=None,
                      blk_s: int = 128, out_dtype=jnp.float32,
                      interpret: bool = False):
     """Fused one-token attention against an int8 KV cache.
 
     q: (B, KV, G, hd) fp — current token's queries grouped per KV head;
     k, v: (B, S, KV, hd) int8 cache; k_scale, v_scale: (B, S, KV) or
-    (B, S, KV, 1) fp32 per-(token, head) scales; valid_len: () int32.
+    (B, S, KV, 1) fp32 per-(token, head) scales; valid_len: () or (B,)
+    int32 (per-row frontiers for the slot engine).
+
+    ``k_new``/``v_new`` (B, 1, KV, hd) or (B, KV, hd) fp: the current
+    token's k/v for the append path — the cache then holds only tokens
+    < valid_len and the new token joins the softmax as one extra operand
+    column inside the kernel (no cache rewrite inside the layer scan).
 
     TPU (or ``interpret=True``) -> the Pallas kernel, which dequantizes
     tile-by-tile in VMEM; CPU -> the dense jnp oracle (identical math).
@@ -160,11 +167,16 @@ def decode_attention(q, k, v, k_scale, v_scale, valid_len, *,
     sm_scale = hd ** -0.5
     ks = k_scale.reshape(b, s_slots, kvh)
     vs = v_scale.reshape(b, s_slots, kvh)
+    if (k_new is None) != (v_new is None):
+        raise ValueError("k_new and v_new must be passed together")
+    if k_new is not None:
+        k_new = k_new.reshape(b, 1, kvh, hd)
+        v_new = v_new.reshape(b, 1, kvh, hd)
     use_pallas = _on_tpu() or interpret
     if not use_pallas:
         out = _ref.decode_attention_int8_ref(
-            q, k, v, ks, vs, valid_len, sm_scale=sm_scale,
-            out_dtype=out_dtype)
+            q, k, v, ks, vs, valid_len, k_new=k_new, v_new=v_new,
+            sm_scale=sm_scale, out_dtype=out_dtype)
         return out
     # query-group rows padded to the sublane floor of q's dtype (f32 8,
     # bf16 16) — the (1, 1, G, hd) query block must be a legal tile
@@ -175,10 +187,12 @@ def decode_attention(q, k, v, k_scale, v_scale, valid_len, *,
     vp = _pad_to(_pad_to(v, blk_s, 1), 128, 3)
     ksp = _pad_to(ks, blk_s, 1)
     vsp = _pad_to(vs, blk_s, 1)
+    knp = _pad_to(k_new, 128, 3) if k_new is not None else None
+    vnp = _pad_to(v_new, 128, 3) if v_new is not None else None
     from repro.kernels import decode_attention as _da
     out = _da.decode_attention_int8(
-        qp, kp, ksp, vp, vsp, jnp.asarray(valid_len), blk_s=blk_s,
-        sm_scale=sm_scale, out_dtype=out_dtype,
+        qp, kp, ksp, vp, vsp, jnp.asarray(valid_len), knp, vnp,
+        blk_s=blk_s, sm_scale=sm_scale, out_dtype=out_dtype,
         interpret=interpret and not _on_tpu())
     return out[:, :, :g, :hd]
 

@@ -60,16 +60,20 @@ def qmatmul_w8a16_ref(x: jax.Array, w: jax.Array, w_scale: jax.Array,
 
 def decode_attention_int8_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                               k_scale: jax.Array, v_scale: jax.Array,
-                              valid_len, *, sm_scale=None,
+                              valid_len, *, k_new=None, v_new=None,
+                              sm_scale=None,
                               out_dtype=jnp.float32) -> jax.Array:
     """Dense one-token attention against an int8 KV cache.
 
     q: (B, KV, G, hd) fp; k, v: (B, S, KV, hd) int8; k_scale, v_scale:
-    (B, S, KV) or (B, S, KV, 1) fp32; valid_len: () int32 — slots with
-    index < valid_len participate.  Dequantizes the cache densely (the
-    thing the fused kernel avoids) and runs a masked softmax.
+    (B, S, KV) or (B, S, KV, 1) fp32; valid_len: () or (B,) int32 — slots
+    with index < valid_len[b] participate.  ``k_new``/``v_new``
+    (B, 1, KV, hd) or (B, KV, hd) fp: the append path's current-token
+    k/v, one extra (always-valid) softmax column.  Dequantizes the cache
+    densely (the thing the fused kernel avoids) and runs a masked softmax.
     """
-    hd = q.shape[-1]
+    b, _, _, hd = q.shape
+    kvh = k.shape[2]
     sm_scale = hd ** -0.5 if sm_scale is None else sm_scale
     ks = k_scale.reshape(k.shape[:3]).astype(jnp.float32)
     vs = v_scale.reshape(v.shape[:3]).astype(jnp.float32)
@@ -77,11 +81,24 @@ def decode_attention_int8_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     vf = v.astype(jnp.float32) * vs[..., None]
     scores = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32),
                         kf) * sm_scale
-    valid = jnp.arange(k.shape[1]) < valid_len          # (S,)
-    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1)
-    probs = jnp.where(valid[None, None, None, :], probs, 0.0)
-    return jnp.einsum("bkgs,bskd->bkgd", probs, vf).astype(out_dtype)
+    vl = jnp.asarray(valid_len).reshape(-1, 1)          # (1|B, 1)
+    valid = jnp.arange(k.shape[1])[None, :] < vl        # (1|B, S)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    if k_new is None:
+        probs = jax.nn.softmax(scores, axis=-1)
+        probs = jnp.where(valid[:, None, None, :], probs, 0.0)
+        return jnp.einsum("bkgs,bskd->bkgd", probs, vf).astype(out_dtype)
+    kn = k_new.reshape(b, kvh, hd).astype(jnp.float32)
+    vn = v_new.reshape(b, kvh, hd).astype(jnp.float32)
+    s_new = jnp.einsum("bkgd,bkd->bkg", q.astype(jnp.float32),
+                       kn) * sm_scale
+    scores = jnp.concatenate([scores, s_new[..., None]], axis=-1)
+    probs = jax.nn.softmax(scores, axis=-1)             # (B, KV, G, S+1)
+    p_cache, p_new = probs[..., :-1], probs[..., -1]
+    p_cache = jnp.where(valid[:, None, None, :], p_cache, 0.0)
+    out = jnp.einsum("bkgs,bskd->bkgd", p_cache, vf) \
+        + p_new[..., None] * vn[:, :, None, :]
+    return out.astype(out_dtype)
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -117,6 +117,18 @@ def _expand_kv(k: Array, n_heads: int) -> Array:
     return jnp.repeat(k, n_heads // kvh, axis=2)
 
 
+def _cache_write(c: Array, new: Array, idx: Array) -> Array:
+    """Write ``new`` (B, s, KV, hd) into ``c`` (B, S_slots, KV, hd) at
+    sequence position ``idx`` — scalar () for lockstep decode, or (B,) for
+    the slot engine, where every row scatters at its own position."""
+    idx = jnp.asarray(idx)
+    if idx.ndim == 0:
+        return jax.lax.dynamic_update_slice(c, new, (0, idx, 0, 0))
+    return jax.vmap(
+        lambda cb, nb, ib: jax.lax.dynamic_update_slice(cb, nb, (ib, 0, 0))
+    )(c, new, idx)
+
+
 def _chunked_attention(q: Array, k: Array, v: Array, *, causal: bool,
                        window: Optional[int], q_block: int,
                        q_offset: int = 0) -> Array:
@@ -186,6 +198,11 @@ def attention(p: dict, x: Array, cfg: AttnConfig, *,
     - training / prefill: kv_cache=None -> chunked causal self-attention.
     - decode: kv_cache=(K, V) of shape (B, S_slots, KV, hd); cache_index =
       write slot; valid_len = number of valid slots; x is (B, 1, D).
+      ``cache_index`` / ``valid_len`` may be scalars () — the whole batch
+      advances in lockstep — or vectors (B,) for the slot-based serving
+      engine, where every batch row is an independent request at its own
+      sequence position (writes become per-row scatters, masks and RoPE
+      positions per-row).
       Sliding-window archs use a ring buffer (S_slots = window): RoPE is
       applied at absolute positions before caching, so slot order does not
       affect scores, and masking is just `slot < valid_len`.
@@ -248,14 +265,10 @@ def attention(p: dict, x: Array, cfg: AttnConfig, *,
                 # the caller appends once, outside the scan.
                 new_cache = (kq, vq, ks, vs)
             else:
-                ck = jax.lax.dynamic_update_slice(ck, kq,
-                                                  (0, cache_index, 0, 0))
-                cv = jax.lax.dynamic_update_slice(cv, vq,
-                                                  (0, cache_index, 0, 0))
-                cks = jax.lax.dynamic_update_slice(cks, ks,
-                                                   (0, cache_index, 0, 0))
-                cvs = jax.lax.dynamic_update_slice(cvs, vs,
-                                                   (0, cache_index, 0, 0))
+                ck = _cache_write(ck, kq, cache_index)
+                cv = _cache_write(cv, vq, cache_index)
+                cks = _cache_write(cks, ks, cache_index)
+                cvs = _cache_write(cvs, vs, cache_index)
                 ck = constrain(ck, "kv_cache")
                 cv = constrain(cv, "kv_cache")
                 cks = constrain(cks, "kv_cache")
@@ -268,10 +281,8 @@ def attention(p: dict, x: Array, cfg: AttnConfig, *,
             if append_only:
                 new_cache = (k.astype(ck.dtype), v.astype(cv.dtype))
             else:
-                ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                                  (0, cache_index, 0, 0))
-                cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                                  (0, cache_index, 0, 0))
+                ck = _cache_write(ck, k.astype(ck.dtype), cache_index)
+                cv = _cache_write(cv, v.astype(cv.dtype), cache_index)
                 ck = constrain(ck, "kv_cache")
                 cv = constrain(cv, "kv_cache")
                 new_cache = (ck, cv)
@@ -280,16 +291,25 @@ def attention(p: dict, x: Array, cfg: AttnConfig, *,
         g = h // kvh                            # heads per KV group
         if valid_len is None:
             valid_len = cache_index + s
-        if (quantized and not append_only and s == 1
-                and jax.default_backend() == "tpu"):
+        if (quantized and s == 1 and jax.default_backend() == "tpu"):
             # Fused Pallas decode attention: streams the int8 cache and
             # dequantizes tile-by-tile in VMEM (per-token scales folded
             # into score/prob columns), removing the decode path's
             # dominant memory term — the materialized dequantized cache.
+            # Append path: the cache holds tokens < cache_index and the
+            # current token's k/v ride along as an extra kernel operand,
+            # so the fused kernel now serves ALL quantized decode, not
+            # only the in-scan-update (non-append) variant.
             from repro.kernels import ops as kops
-            out = kops.decode_attention(
-                q.reshape(b, kvh, g, hd), ck, cv, cks, cvs, valid_len,
-                out_dtype=jnp.float32)
+            if append_only:
+                out = kops.decode_attention(
+                    q.reshape(b, kvh, g, hd), ck, cv, cks, cvs,
+                    cache_index, k_new=k_self, v_new=v_self,
+                    out_dtype=jnp.float32)
+            else:
+                out = kops.decode_attention(
+                    q.reshape(b, kvh, g, hd), ck, cv, cks, cvs, valid_len,
+                    out_dtype=jnp.float32)
             out = out.astype(x.dtype).reshape(b, s, h, hd)
             out = constrain(out, "act_heads")
             out = linear(p["wo"], out.reshape(b, s, h * hd), mode=mode)
@@ -311,10 +331,13 @@ def attention(p: dict, x: Array, cfg: AttnConfig, *,
         if append_only:
             # cache holds tokens < cache_index; the current token's k/v are
             # handled as an extra score column below.
-            valid = kpos_idx[None, :] < cache_index
+            bound = cache_index
         else:
-            valid = kpos_idx[None, :] < valid_len   # (1, S)
-        scores = jnp.where(valid[None, None, None], scores, -1e30)
+            bound = valid_len
+        # (1, S) lockstep, or (B, S) when the slot engine passes per-row
+        # indices — every request masks at its own sequence frontier.
+        valid = kpos_idx[None, :] < jnp.asarray(bound).reshape(-1, 1)
+        scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
         if append_only:
             s_self = jnp.einsum("bqkgd,btkd->bkgqt",
                                 q5.astype(jnp.float32),

@@ -115,17 +115,39 @@ def init_cache(cfg: ArchConfig, batch: int, s_max: int,
     return {"k": zeros, "v": jnp.zeros_like(zeros)}
 
 
+def _stacked_cache_write(c: Array, new: Array, idx: Array) -> Array:
+    """Append ``new`` (L, B, s, KV, hd) into the stacked cache
+    (L, B, S, KV, hd) at sequence position ``idx`` — scalar () lockstep or
+    (B,) per-row for the slot engine."""
+    idx = jnp.asarray(idx)
+    if idx.ndim == 0:
+        return jax.lax.dynamic_update_slice(c, new, (0, 0, idx, 0, 0))
+    return jax.vmap(
+        lambda cb, nb, ib: jax.lax.dynamic_update_slice(
+            cb, nb, (0, ib, 0, 0)),
+        in_axes=(1, 1, 0), out_axes=1)(c, new, idx)
+
+
 def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
                 cfg: ArchConfig, *, mode: QuantMode = FP
                 ) -> Tuple[Array, dict]:
     """One decode step: tokens (B, 1) -> logits (B, 1, V), updated cache.
+
+    ``cache_index`` is scalar () when the whole batch advances in lockstep
+    (the classic decode loop) or a vector (B,) when every row is an
+    independent request at its own position (the slot-based serving
+    engine): positions, cache writes and masks all become per-row.
 
     For sliding-window archs the cache is a ring buffer of size window
     (write position = cache_index % window).
     """
     b, s = tokens.shape
     x = L.embed(params["embed"], tokens)
-    positions = cache_index + jnp.arange(s)[None, :]
+    cache_index = jnp.asarray(cache_index)
+    if cache_index.ndim:                    # (B,): per-slot positions
+        positions = cache_index[:, None] + jnp.arange(s)[None, :]
+    else:
+        positions = cache_index + jnp.arange(s)[None, :]
     acfg = attn_config(cfg)
     s_alloc = cache["k"].shape[2]
     write_idx = cache_index % s_alloc if cfg.window else cache_index
@@ -169,23 +191,21 @@ def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
               cache["k_scale"], cache["v_scale"])
         x, (nk, nv, nks, nvs) = jax.lax.scan(body, x, xs)
         if append:
-            dus = jax.lax.dynamic_update_slice
+            w = _stacked_cache_write
             new_cache = {
-                "k": dus(cache["k"], nk, (0, 0, write_idx, 0, 0)),
-                "v": dus(cache["v"], nv, (0, 0, write_idx, 0, 0)),
-                "k_scale": dus(cache["k_scale"], nks,
-                               (0, 0, write_idx, 0, 0)),
-                "v_scale": dus(cache["v_scale"], nvs,
-                               (0, 0, write_idx, 0, 0))}
+                "k": w(cache["k"], nk, write_idx),
+                "v": w(cache["v"], nv, write_idx),
+                "k_scale": w(cache["k_scale"], nks, write_idx),
+                "v_scale": w(cache["v_scale"], nvs, write_idx)}
         else:
             new_cache = {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
     else:
         x, (nk, nv) = jax.lax.scan(
             body, x, (params["layers"], cache["k"], cache["v"]))
         if append:
-            dus = jax.lax.dynamic_update_slice
-            new_cache = {"k": dus(cache["k"], nk, (0, 0, write_idx, 0, 0)),
-                         "v": dus(cache["v"], nv, (0, 0, write_idx, 0, 0))}
+            w = _stacked_cache_write
+            new_cache = {"k": w(cache["k"], nk, write_idx),
+                         "v": w(cache["v"], nv, write_idx)}
         else:
             new_cache = {"k": nk, "v": nv}
     x = norm_apply(cfg, params["ln_f"], x)

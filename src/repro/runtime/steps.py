@@ -173,42 +173,73 @@ def make_decode_step(cfg: ArchConfig, *, mode: QuantMode = FP) -> Callable:
 
 
 # Static batch-shape ladder: every request batch is padded up to one of
-# these, so at most len(BATCH_BUCKETS) decode-loop compilations ever exist
-# (the deterministic-shapes discipline that makes p99 predictable).
+# these, so at most len(BATCH_BUCKETS) + log2(MAX_BUCKET / BATCH_BUCKETS[-1])
+# decode-loop compilations ever exist (the deterministic-shapes discipline
+# that makes p99 predictable).
 BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 
+# Hard ceiling of the power-of-two extension past the ladder's end.  An
+# unbounded doubling would silently mint new compiled shapes for any batch
+# a caller throws at us — precisely the recompile-on-the-hot-path failure
+# the ladder exists to rule out.  Batches beyond MAX_BUCKET are a config
+# error: raise, don't compile.
+MAX_BUCKET = 2048
 
-def bucket_batch(b: int, buckets=BATCH_BUCKETS) -> int:
-    """Smallest bucket >= b (powers of two beyond the ladder's end)."""
+
+def bucket_batch(b: int, buckets=BATCH_BUCKETS,
+                 max_bucket: int = MAX_BUCKET) -> int:
+    """Smallest bucket >= b (powers of two beyond the ladder's end, capped
+    at ``max_bucket``).  Raises ValueError past the cap: the bounded shape
+    set is the invariant, so oversized batches must be split upstream, not
+    absorbed by a fresh compilation."""
     if b <= 0:
         raise ValueError(f"batch must be positive, got {b}")
     for c in buckets:
         if b <= c:
             return c
     c = buckets[-1]
-    while c < b:
+    while c < b and c < max_bucket:
         c *= 2
+    if c < b:
+        raise ValueError(
+            f"batch {b} exceeds MAX_BUCKET={max_bucket}: the static shape "
+            f"ladder is bounded by design — split the batch or raise "
+            f"MAX_BUCKET deliberately")
     return c
 
 
 def make_decode_loop(cfg: ArchConfig, *, mode: QuantMode = FP,
-                     num_tokens: int) -> Callable:
-    """Fused multi-token greedy decode: one jit'd ``lax.scan`` over steps.
+                     num_tokens: int, temperature: float = 0.0) -> Callable:
+    """Fused multi-token decode: one jit'd ``lax.scan`` over steps.
 
-    Returns ``loop(params, tokens, cache, cache_index) -> (out, cache)``
-    with ``tokens`` (B, 1) int32 seed, ``cache_index`` () int32, and
-    ``out`` (B, num_tokens) int32 generated tokens.  Compile once per
-    (bucketed batch, num_tokens); wrap with :func:`jit_decode_loop` to get
-    the cache donated (in-place update, no per-step host round-trip).
+    Returns ``loop(params, tokens, cache, cache_index, rng=None) ->
+    (out, cache)`` with ``tokens`` (B, 1) int32 seed, ``cache_index`` ()
+    int32, and ``out`` (B, num_tokens) int32 generated tokens.  With the
+    default ``temperature=0.0`` sampling is greedy (``rng`` ignored);
+    ``temperature > 0`` draws from :func:`temperature_sample` with a
+    per-step key ``fold_in(rng, cache_index + step)`` — the same key
+    schedule a per-token Python loop would use, so the fused loop is
+    sampling-parity-testable against it.  Compile once per (bucketed
+    batch, num_tokens); wrap with :func:`jit_decode_loop` to get the
+    cache donated (in-place update, no per-step host round-trip).
     """
     decode = make_decode_step(cfg, mode=mode)
 
-    def loop(params, tokens, cache, cache_index):
+    def loop(params, tokens, cache, cache_index, rng=None):
+        if temperature > 0.0 and rng is None:
+            raise ValueError(
+                "temperature sampling needs an rng key: "
+                "loop(params, tokens, cache, cache_index, rng)")
+
         def step(carry, _):
             tok, cache, idx = carry
             logits, cache = decode(
                 params, {"tokens": tok, "cache_index": idx}, cache)
-            nxt = greedy_sample(logits)
+            if temperature > 0.0:
+                nxt = temperature_sample(
+                    logits, jax.random.fold_in(rng, idx), temperature)
+            else:
+                nxt = greedy_sample(logits)
             return (nxt[:, None], cache, idx + 1), nxt
 
         cache_index = jnp.asarray(cache_index, jnp.int32)
@@ -222,6 +253,41 @@ def make_decode_loop(cfg: ArchConfig, *, mode: QuantMode = FP,
 def jit_decode_loop(loop: Callable) -> Callable:
     """jit a decode loop with the KV cache donated (argument 2)."""
     return jax.jit(loop, donate_argnums=(2,))
+
+
+def make_slot_decode_step(cfg: ArchConfig, *, mode: QuantMode = FP
+                          ) -> Callable:
+    """One tick of the continuous-batching engine: advance EVERY slot of
+    the fixed pool by one token, in one fused step of static shape.
+
+    Returns ``step(params, tokens, cache, slot_index, active) ->
+    (next_tokens, cache, slot_index)`` with ``tokens`` (S_slots, 1) int32,
+    ``slot_index`` (S_slots,) int32 per-slot sequence positions, and
+    ``active`` (S_slots,) bool.  The active mask folds into sampling
+    (inactive rows emit 0) and into the index advance (inactive rows
+    freeze).  Cache writes are row-local scatters at each slot's own
+    frontier; an inactive slot's frozen frontier sits at-or-past its valid
+    region and every read is masked by ``slot_index``, so the dead rows
+    that keep the shape static can never leak into live requests (the
+    engine's isolation property test poisons them to prove it).  Wrap with
+    :func:`jit_slot_decode_step` to donate the cache.
+    """
+    decode = make_decode_step(cfg, mode=mode)
+
+    def step(params, tokens, cache, slot_index, active):
+        logits, cache = decode(
+            params, {"tokens": tokens, "cache_index": slot_index}, cache)
+        nxt = greedy_sample(logits)
+        nxt = jnp.where(active, nxt, jnp.zeros_like(nxt))
+        slot_index = slot_index + active.astype(slot_index.dtype)
+        return nxt, cache, slot_index
+
+    return step
+
+
+def jit_slot_decode_step(step: Callable) -> Callable:
+    """jit a slot decode step with the KV cache donated (argument 2)."""
+    return jax.jit(step, donate_argnums=(2,))
 
 
 def greedy_sample(logits: jax.Array) -> jax.Array:

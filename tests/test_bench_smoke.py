@@ -10,7 +10,7 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 REQUIRED_KINDS = {"tokens_per_s", "service_time", "chosen_tile",
-                  "kernel_bench"}
+                  "kernel_bench", "engine"}
 ROW_KEYS = {
     "tokens_per_s": {"arch", "batch", "num_tokens", "tokens_per_s",
                      "seconds"},
@@ -18,6 +18,9 @@ ROW_KEYS = {
     "chosen_tile": {"arch", "op", "m", "k", "n", "mode", "bm", "bn", "bk",
                     "vmem_bytes"},
     "kernel_bench": {"name", "us_per_call", "derived"},
+    "engine": {"arch", "rate", "n_requests", "num_slots", "p99_s",
+               "tokens_per_s", "mean_occupancy", "ticks",
+               "admissions_while_busy", "occupancy_curve"},
 }
 
 
@@ -38,6 +41,10 @@ def bench_doc(tmp_path_factory):
     assert "smoke OK" in r.stdout
     # satellite: kernel_bench rows ride along in the --smoke output
     assert "kernel/qmatmul_" in r.stdout
+    # satellite: --smoke runs one short continuous-batching engine trace
+    # (sequential-reference parity + append-path kernel parity, offline)
+    assert "[engine] smoke:" in r.stdout
+    assert "parity OK" in r.stdout
     return json.loads(out.read_text())
 
 
@@ -65,3 +72,9 @@ def test_rows_are_sane(bench_doc):
             assert row["vmem_bytes"] <= AT.DEFAULT_VMEM_BUDGET
             tc = AT.TileConfig(row["bm"], row["bn"], row["bk"])
             assert AT.is_legal(tc, mode=row["mode"]), row
+        elif row["kind"] == "engine":
+            assert row["p99_s"] > 0 and row["tokens_per_s"] > 0
+            assert 0 < row["mean_occupancy"] <= 1
+            assert row["admissions_while_busy"] >= 0
+            assert all(0 <= a <= row["num_slots"]
+                       for a in row["occupancy_curve"])

@@ -100,6 +100,90 @@ def test_rows_sum_property(seed, vl):
     np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-5, atol=1e-5)
 
 
+def _case_new(key, b, kv, hd):
+    k1, k2 = jax.random.split(key)
+    kn = jax.random.normal(k1, (b, 1, kv, hd), jnp.float32)
+    vn = jax.random.normal(k2, (b, 1, kv, hd), jnp.float32)
+    return kn, vn
+
+
+@pytest.mark.parametrize("b,s,kv,g,hd,vl", CASES)
+def test_append_path_matches_ref(b, s, kv, g, hd, vl):
+    """Append path: the current token's k/v as an extra kernel operand
+    folded into the online softmax at the final sweep step."""
+    key = jax.random.PRNGKey(b * s + kv + g + hd + 1)
+    q, k, v, kscale, vscale = _case(key, b, s, kv, g, hd)
+    kn, vn = _case_new(jax.random.fold_in(key, 9), b, kv, hd)
+    got = ops.decode_attention(q, k, v, kscale, vscale, jnp.int32(vl),
+                               k_new=kn, v_new=vn, interpret=True)
+    want = ref.decode_attention_int8_ref(q, k, v, kscale, vscale,
+                                         jnp.int32(vl), k_new=kn, v_new=vn)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_append_path_empty_cache_attends_only_to_self():
+    """valid_len=0 + current-token operand: softmax collapses onto the new
+    token, so out == v_new exactly (one column, prob 1)."""
+    key = jax.random.PRNGKey(5)
+    b, s, kv, g, hd = 1, 128, 2, 4, 64
+    q, k, v, kscale, vscale = _case(key, b, s, kv, g, hd)
+    kn, vn = _case_new(jax.random.fold_in(key, 1), b, kv, hd)
+    out = ops.decode_attention(q, k, v, kscale, vscale, jnp.int32(0),
+                               k_new=kn, v_new=vn, interpret=True)
+    want = jnp.broadcast_to(vn[:, 0, :, None, :], (b, kv, g, hd))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_per_row_valid_len_matches_scalar_rows():
+    """(B,) valid_len — the slot engine's per-request frontiers — equals
+    running each row alone with its scalar valid_len."""
+    q, k, v, kscale, vscale = _case(jax.random.PRNGKey(13), 3, 256, 2, 4, 64)
+    kn, vn = _case_new(jax.random.PRNGKey(14), 3, 2, 64)
+    vls = [0, 100, 256]
+    got = ops.decode_attention(q, k, v, kscale, vscale,
+                               jnp.array(vls, jnp.int32),
+                               k_new=kn, v_new=vn, interpret=True)
+    for i, vl in enumerate(vls):
+        one = ops.decode_attention(
+            q[i:i + 1], k[i:i + 1], v[i:i + 1], kscale[i:i + 1],
+            vscale[i:i + 1], jnp.int32(vl), k_new=kn[i:i + 1],
+            v_new=vn[i:i + 1], interpret=True)
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(one[0]),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_append_path_matches_model_einsum():
+    """The fused append path agrees with the model's einsum append branch
+    (layers.attention append_only=True): cache scores + one self column,
+    softmax over the concatenation, v-scale folded on cache probs only."""
+    key = jax.random.PRNGKey(21)
+    b, s, kv, g, hd = 2, 128, 2, 2, 64
+    q, k, v, kscale, vscale = _case(key, b, s, kv, g, hd)
+    kn, vn = _case_new(jax.random.fold_in(key, 2), b, kv, hd)
+    vl = 90
+    got = ops.decode_attention(q, k, v, kscale, vscale, jnp.int32(vl),
+                               k_new=kn, v_new=vn, interpret=True)
+    # the einsum append path as written in layers.attention, f32 contract
+    q5 = q[:, None]                                  # (B, 1, KV, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q5.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    scores = scores * kscale[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
+    valid = jnp.arange(s)[None, :] < vl
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    s_self = jnp.einsum("bqkgd,btkd->bkgqt", q5.astype(jnp.float32),
+                        kn.astype(jnp.float32)) * hd ** -0.5
+    scores = jnp.concatenate([scores, s_self], axis=-1)
+    probs = jax.nn.softmax(scores, axis=-1)
+    pc, pn = probs[..., :s], probs[..., s:]
+    pc = pc * vscale[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
+    want = jnp.einsum("bkgqs,bskd->bqkgd", pc, v.astype(jnp.float32)) \
+        + jnp.einsum("bkgqt,btkd->bqkgd", pn, vn.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want[:, 0]),
+                               rtol=2e-4, atol=2e-4)
+
+
 def test_matches_model_einsum_decode_path():
     """The fused kernel agrees with the model's XLA einsum decode path
     (layers.attention quantized branch) on a GQA-shaped case: the two are

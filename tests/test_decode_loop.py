@@ -24,6 +24,70 @@ def test_bucket_batch_ladder():
         ST.bucket_batch(0)
 
 
+def test_bucket_batch_capped_at_max_bucket():
+    """The power-of-two extension stops at MAX_BUCKET: the compiled-shape
+    set is bounded, and oversized batches raise instead of silently
+    minting a new compilation."""
+    assert ST.bucket_batch(ST.MAX_BUCKET) == ST.MAX_BUCKET
+    assert ST.bucket_batch(ST.MAX_BUCKET - 1) == ST.MAX_BUCKET
+    with pytest.raises(ValueError, match="MAX_BUCKET"):
+        ST.bucket_batch(ST.MAX_BUCKET + 1)
+    # explicit override: the cap is a deliberate knob, not a constant
+    assert ST.bucket_batch(ST.MAX_BUCKET + 1,
+                           max_bucket=4 * ST.MAX_BUCKET) == 2 * ST.MAX_BUCKET
+
+
+def test_decode_loop_temperature_matches_python_loop():
+    """Fused loop with temperature sampling == per-token Python loop with
+    the same fold_in(rng, position) key schedule."""
+    cfg = get_config("starcoder2-3b").reduced()
+    params = R.init(KEY, cfg)
+    n_tok, temp = 5, 0.8
+    rng = jax.random.PRNGKey(123)
+    tok0 = jnp.array([[1], [2]], jnp.int32)
+
+    decode = jax.jit(ST.make_decode_step(cfg))
+    cache = R.init_cache(cfg, 2, 32)
+    tok, toks = tok0, []
+    for i in range(n_tok):
+        logits, cache = decode(params,
+                               {"tokens": tok,
+                                "cache_index": jnp.asarray(i, jnp.int32)},
+                               cache)
+        nxt = ST.temperature_sample(
+            logits, jax.random.fold_in(rng, jnp.asarray(i, jnp.int32)),
+            temp)
+        tok = nxt[:, None]
+        toks.append(nxt)
+    want = jnp.stack(toks, axis=1)
+
+    loop = ST.jit_decode_loop(
+        ST.make_decode_loop(cfg, num_tokens=n_tok, temperature=temp))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")     # CPU: donation not usable
+        got, _ = loop(params, tok0, R.init_cache(cfg, 2, 32),
+                      jnp.zeros((), jnp.int32), rng)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # same key -> same draw; different key -> (almost surely) different
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        again, _ = loop(params, tok0, R.init_cache(cfg, 2, 32),
+                        jnp.zeros((), jnp.int32), rng)
+        other, _ = loop(params, tok0, R.init_cache(cfg, 2, 32),
+                        jnp.zeros((), jnp.int32), jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(again))
+    assert not np.array_equal(np.asarray(got), np.asarray(other))
+
+
+def test_decode_loop_temperature_requires_rng():
+    cfg = get_config("starcoder2-3b").reduced()
+    params = R.init(KEY, cfg)
+    loop = ST.make_decode_loop(cfg, num_tokens=2, temperature=1.0)
+    with pytest.raises(ValueError, match="rng"):
+        loop(params, jnp.ones((1, 1), jnp.int32), R.init_cache(cfg, 1, 16),
+             jnp.zeros((), jnp.int32))
+
+
 @pytest.mark.parametrize("arch,kv_quant", [
     ("starcoder2-3b", False),
     ("mistral-nemo-12b", True),     # int8 KV cache through the fused loop

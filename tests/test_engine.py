@@ -1,0 +1,236 @@
+"""Continuous-batching engine: scheduler equivalence with the simulator,
+slot-step isolation, and end-to-end bit-for-bit parity with the
+sequential per-token reference loop on a 200-request Poisson trace."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # offline: no network, no pip
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro import engine as E
+from repro.configs import get_config
+from repro.core import batching as bt
+from repro.models import registry as R
+from repro.runtime import steps as ST
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(kv_quant=True):
+    cfg = get_config("starcoder2-3b").reduced()
+    return dataclasses.replace(cfg, kv_quant=kv_quant)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = _cfg()
+    return cfg, R.init(KEY, cfg)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: one admission policy, two backends
+# ---------------------------------------------------------------------------
+
+class TestSchedulerEquivalence:
+    @given(st.integers(0, 40), st.sampled_from([2000.0, 20000.0, 50000.0]))
+    @settings(max_examples=12, deadline=None)
+    def test_simulator_and_engine_scheduler_agree(self, seed, rate):
+        """BatchQueue (simulator backend) and the engine's SlotScheduler
+        replay the SAME admission decisions on the same trace — the
+        policy extraction is behavior-preserving."""
+        reqs = bt.poisson_arrivals(rate, 200, deadline_s=7e-3, seed=seed)
+        service = bt.TABLE4_TPU.service_time
+        sim = bt.BatchQueue(service, max_batch=64).run(reqs)
+        policy = bt.AdmissionPolicy(service, max_batch=64)
+        live = E.SlotScheduler(policy).run_virtual(reqs)
+        assert [(r.start_s, r.rids) for r in sim] == \
+            [(r.start_s, r.rids) for r in live]
+
+    def test_admit_respects_capacity(self):
+        policy = bt.AdmissionPolicy(lambda b: 0.0, max_batch=64,
+                                    max_wait_s=0.0)
+        sched = E.SlotScheduler(policy)
+        for rid in range(10):
+            sched.push(bt.Request(0.0, float("inf"), rid))
+        got = sched.admit(0.0, capacity=3)
+        assert len(got) == 3 and len(sched.pending) == 7
+        assert sched.admit(0.0, capacity=0) == []
+
+
+# ---------------------------------------------------------------------------
+# slot step: isolation of inactive rows
+# ---------------------------------------------------------------------------
+
+def test_inactive_slot_poison_cannot_leak(dense_setup):
+    """Garbage in inactive slots' cache rows (and their token inputs)
+    must not change active rows' outputs or cache writes, bitwise."""
+    cfg, params = dense_setup
+    step = ST.jit_slot_decode_step(ST.make_slot_decode_step(cfg))
+    S, smax = 4, 32
+    idx = jnp.array([2, 0, 3, 1], jnp.int32)
+    active = jnp.array([True, False, True, False])
+    tokens = jnp.array([[5], [1], [9], [2]], jnp.int32)
+
+    def run(cache):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            return step(params, tokens, cache, idx, active)
+
+    clean = R.init_cache(cfg, S, smax)
+    n1, c1, i1 = run(jax.tree_util.tree_map(lambda x: x.copy(), clean))
+    poisoned = jax.tree_util.tree_map(
+        lambda x: x.at[:, 1].set(jnp.full_like(x[:, 1], 107))
+                   .at[:, 3].set(jnp.full_like(x[:, 3], -9)), clean)
+    poisoned_tokens = tokens.at[1, 0].set(400).at[3, 0].set(499)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        n2, c2, i2 = step(params, poisoned_tokens, poisoned, idx, active)
+
+    np.testing.assert_array_equal(np.asarray(n1[active]),
+                                  np.asarray(n2[active]))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    for a, b in zip(jax.tree_util.tree_leaves(c1),
+                    jax.tree_util.tree_leaves(c2)):
+        # active rows' cache contents identical under poisoning
+        np.testing.assert_array_equal(np.asarray(a[:, active]),
+                                      np.asarray(b[:, active]))
+    # masked sampling: inactive rows emit 0 and do not advance
+    assert int(n1[1]) == 0 and int(n1[3]) == 0
+    np.testing.assert_array_equal(np.asarray(i1),
+                                  np.asarray(idx + active.astype(jnp.int32)))
+
+
+def test_slot_rows_match_batch1_decode(dense_setup):
+    """Each active slot's sample equals a batch=1 lockstep decode of the
+    same request — per-row positions don't perturb the math."""
+    cfg, params = dense_setup
+    step = ST.jit_slot_decode_step(ST.make_slot_decode_step(cfg))
+    decode = jax.jit(ST.make_decode_step(cfg))
+    S, smax = 4, 32
+    cache = R.init_cache(cfg, S, smax)
+    idx = jnp.zeros((S,), jnp.int32)
+    active = jnp.array([True, True, False, True])
+    tokens = jnp.array([[5], [9], [0], [3]], jnp.int32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        nxt, cache, idx = step(params, tokens, cache, idx, active)
+        nxt2, _, _ = step(params, nxt[:, None], cache, idx, active)
+    for row, t0 in [(0, 5), (1, 9), (3, 3)]:
+        c1 = R.init_cache(cfg, 1, smax)
+        l1, c1 = decode(params, {"tokens": jnp.asarray([[t0]], jnp.int32),
+                                 "cache_index": jnp.asarray(0, jnp.int32)},
+                        c1)
+        t1 = ST.greedy_sample(l1)
+        assert int(t1[0]) == int(nxt[row])
+        l2, _ = decode(params, {"tokens": t1[:, None],
+                                "cache_index": jnp.asarray(1, jnp.int32)},
+                       c1)
+        assert int(ST.greedy_sample(l2)[0]) == int(nxt2[row])
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end
+# ---------------------------------------------------------------------------
+
+def test_engine_200_requests_bit_for_bit(dense_setup):
+    """Acceptance: a 200-request pseudo-Poisson trace through the live
+    engine (int8 KV slots, continuous admission, zero drain barriers)
+    reproduces the sequential per-token reference loop bit-for-bit and
+    reports p99 + occupancy."""
+    cfg, params = dense_setup
+    reqs = E.synthetic_requests(200, rate_per_s=3000.0, vocab=cfg.vocab,
+                                prompt_len=3, max_new_tokens=5)
+    eng = E.Engine(cfg, params, num_slots=8, max_seq=16)
+    rep = eng.serve(reqs, clock="virtual", tick_s=1e-3)
+
+    want = E.reference_outputs(cfg, params, reqs, max_seq=16)
+    assert rep.outputs() == want            # greedy tokens, bit-for-bit
+    assert len(rep.results) == 200
+    # no drain barrier: admissions keep landing while older requests are
+    # mid-generation, and slots turn over (more requests than slots)
+    assert rep.admissions_while_busy > 0
+    assert rep.num_slots == 8
+    assert max(rep.occupancy) <= rep.num_slots
+    assert rep.p99_latency_s > 0 and rep.tokens_per_s > 0
+    assert 0 < rep.mean_occupancy <= 1
+    assert rep.generated_tokens == 200 * 5
+
+
+def test_engine_batch_never_exceeds_bucketed_slot_count(dense_setup):
+    """Property: per-tick active slots and per-admission cohorts are
+    bounded by the bucketed pool size, across loads."""
+    cfg, params = dense_setup
+    for rate, slots in ((500.0, 3), (20000.0, 5)):
+        eng = E.Engine(cfg, params, num_slots=slots, max_seq=16)
+        assert eng.num_slots == ST.bucket_batch(slots)
+        reqs = E.synthetic_requests(40, rate_per_s=rate, vocab=cfg.vocab,
+                                    prompt_len=2, max_new_tokens=4,
+                                    seed=int(rate))
+        rep = eng.serve(reqs, clock="virtual", tick_s=1e-3)
+        assert max(rep.occupancy) <= eng.num_slots
+        assert rep.outputs() == E.reference_outputs(cfg, params, reqs,
+                                                    max_seq=16)
+
+
+def test_engine_slot_reuse_after_retirement(dense_setup):
+    """More requests than slots forces retire-then-reuse; results must
+    still be exact (stale cache rows are invisible past the frontier)."""
+    cfg, params = dense_setup
+    reqs = E.synthetic_requests(12, rate_per_s=1e6, vocab=cfg.vocab,
+                                prompt_len=4, max_new_tokens=6)
+    eng = E.Engine(cfg, params, num_slots=2, max_seq=16)
+    rep = eng.serve(reqs, clock="virtual", tick_s=1e-3)
+    assert rep.outputs() == E.reference_outputs(cfg, params, reqs,
+                                                max_seq=16)
+    # 12 requests through a 2-slot pool: every slot served >= 1 tenant
+    assert {r.slot for r in rep.results} == {0, 1}
+
+
+def test_engine_fp_cache_and_wall_clock(dense_setup):
+    """fp16-free path: bf16 KV cache engine + wall clock returns the same
+    outputs as the virtual clock (timing never leaks into tokens)."""
+    cfg = _cfg(kv_quant=False)
+    params = R.init(KEY, cfg)
+    reqs = E.synthetic_requests(10, rate_per_s=5000.0, vocab=cfg.vocab,
+                                prompt_len=3, max_new_tokens=4)
+    eng = E.Engine(cfg, params, num_slots=4, max_seq=16)
+    a = eng.serve(reqs, clock="virtual", tick_s=1e-3)
+    b = eng.serve(reqs, clock="wall")
+    assert a.outputs() == b.outputs()
+    assert a.outputs() == E.reference_outputs(cfg, params, reqs,
+                                              max_seq=16)
+
+
+def test_engine_rejects_unsupported_family():
+    cfg = get_config("mamba2-1.3b").reduced()
+    with pytest.raises(NotImplementedError):
+        E.Engine(cfg, params=None, num_slots=2, max_seq=16)
+
+
+def test_engine_rejects_oversized_request(dense_setup):
+    cfg, params = dense_setup
+    eng = E.Engine(cfg, params, num_slots=2, max_seq=8)
+    assert eng.max_seq == 16            # rounds up to a 16-aligned cache
+    reqs = [E.EngineRequest(rid=0, prompt=(1, 2, 3, 4), max_new_tokens=16)]
+    with pytest.raises(ValueError, match="cache positions"):
+        eng.serve(reqs, clock="virtual")
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.serve([E.EngineRequest(rid=0, prompt=(1,), max_new_tokens=0)],
+                  clock="virtual")
+
+
+def test_engine_warmup_does_not_change_outputs(dense_setup):
+    cfg, params = dense_setup
+    reqs = E.synthetic_requests(6, rate_per_s=5000.0, vocab=cfg.vocab,
+                                prompt_len=3, max_new_tokens=4)
+    eng = E.Engine(cfg, params, num_slots=4, max_seq=16)
+    eng.warmup()
+    rep = eng.serve(reqs, clock="virtual", tick_s=1e-3)
+    assert rep.outputs() == E.reference_outputs(cfg, params, reqs,
+                                                max_seq=16)
