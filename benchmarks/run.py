@@ -101,8 +101,11 @@ def smoke(kernel_rows=None) -> int:
     eng = serving_bench.engine_smoke()
     print(f"\n[engine] smoke: {eng['requests']} requests in "
           f"{eng['ticks']} ticks, occupancy {eng['mean_occupancy']:.1%}, "
-          f"{eng['admissions_while_busy']} mid-flight admissions; "
-          f"sequential-reference parity + append-path kernel parity OK")
+          f"{eng['admissions_while_busy']} mid-flight admissions, "
+          f"ttft {eng['mean_ttft_s']*1e3:.2f} -> "
+          f"{eng['chunked_mean_ttft_s']*1e3:.2f} ms chunked; "
+          f"sequential-reference parity (dense + ssm, per-token + "
+          f"chunked prefill) + append-path kernel parity OK")
 
     print("\nsmoke OK: flops/bytes nonzero, scan trip count exact")
     return 0

@@ -13,15 +13,19 @@ Row schema (stable; asserted by tests/test_bench_smoke.py)::
   {"kind": "service_time",  "arch", "batch", "seconds"}
   {"kind": "chosen_tile",   "arch", "op", "m", "k", "n", "mode",
    "bm", "bn", "bk", "vmem_bytes"}
-  {"kind": "engine",        "arch", "rate", "n_requests", "num_slots",
-   "p99_s", "tokens_per_s", "mean_occupancy", "ticks",
-   "admissions_while_busy", "occupancy_curve"}
+  {"kind": "engine",        "arch", "family", "rate", "n_requests",
+   "num_slots", "p99_s", "tokens_per_s", "mean_occupancy", "ticks",
+   "admissions_while_busy", "occupancy_curve", "prefill_chunk",
+   "mean_ttft_s", "p99_ttft_s"}
 
 The ``engine`` rows are the continuous-batching section: one row per
-offered rate (p99 vs load is the Table 4 story told by the live engine),
-with the slot-occupancy curve downsampled inline.  Timing comes from a
-measured per-tick cost replayed under the virtual clock, so the rows are
-structurally deterministic offline while still tracking real step cost.
+(family, offered rate) — p99 vs load is the Table 4 story told by the
+live engine, now for every token-only decode family (dense, moe, ssm,
+hybrid), with the slot-occupancy curve downsampled inline and the
+admission-to-first-token columns showing what chunked prefill buys.
+Timing comes from a measured per-tick cost replayed under the virtual
+clock, so the rows are structurally deterministic offline while still
+tracking real step cost.
 """
 from __future__ import annotations
 
@@ -76,6 +80,12 @@ def serving_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
         r["kind"] = "chosen_tile"
         rows.append(r)
     rows.extend(engine_rows(arch, quant=quant))
+    # every token-only decode family through the same slot engine (the
+    # paper's all-NN-families serving argument): compact per-family rows
+    for fam_arch in ("qwen2-moe-a2.7b", "mamba2-1.3b", "recurrentgemma-9b"):
+        rows.extend(engine_rows(fam_arch, quant=quant, rates=(400.0,),
+                                n_requests=10, num_slots=4, prompt_len=6,
+                                gen_tokens=4))
     return rows
 
 
@@ -89,8 +99,9 @@ def _downsample(xs, n=32):
 def engine_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
                 rates=(200.0, 800.0), n_requests: int = 24,
                 num_slots: int = 8, prompt_len: int = 3,
-                gen_tokens: int = 6):
-    """Continuous-batching engine rows: p99 + occupancy vs offered rate."""
+                gen_tokens: int = 6, prefill_chunk: int = 4):
+    """Continuous-batching engine rows: p99 + occupancy + admission-to-
+    first-token vs offered rate, for any token-only decode family."""
     import jax
 
     from repro import engine as E
@@ -105,7 +116,8 @@ def engine_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
     if mode.enabled:
         params = quantize_tree(params, min_size=2048)
     eng = E.Engine(cfg, params, mode=mode, num_slots=num_slots,
-                   max_seq=prompt_len + gen_tokens)   # Engine rounds up
+                   max_seq=prompt_len + gen_tokens,   # Engine rounds up
+                   prefill_chunk=prefill_chunk or None)
 
     # warm the jit cache first (the first serve pays trace+compile), then
     # measure the real per-tick cost on a second wall-clock run and replay
@@ -125,7 +137,8 @@ def engine_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
             prompt_len=prompt_len, max_new_tokens=gen_tokens)
         rep = eng.serve(reqs, clock="virtual", tick_s=tick_s)
         rows.append({
-            "kind": "engine", "arch": cfg.name, "rate": rate,
+            "kind": "engine", "arch": cfg.name, "family": cfg.family,
+            "rate": rate,
             "n_requests": n_requests, "num_slots": rep.num_slots,
             "p99_s": rep.p99_latency_s,
             "tokens_per_s": rep.tokens_per_s,
@@ -133,13 +146,17 @@ def engine_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
             "ticks": rep.ticks,
             "admissions_while_busy": rep.admissions_while_busy,
             "occupancy_curve": _downsample(rep.occupancy),
+            "prefill_chunk": rep.prefill_chunk,
+            "mean_ttft_s": rep.mean_ttft_s,
+            "p99_ttft_s": rep.p99_ttft_s,
         })
     return rows
 
 
 def engine_smoke(n_requests: int = 12) -> dict:
     """Offline smoke: a short continuous-batching run whose outputs must
-    match the sequential per-token reference bit-for-bit, plus an
+    match the sequential per-token reference bit-for-bit (per-token AND
+    chunked prefill, dense AND a recurrent family), plus an
     interpret-mode parity check of the fused decode-attention kernel's
     append path (current-token k/v operand).  Exercised by
     ``benchmarks/run.py --smoke`` so cost-engine or kernel regressions
@@ -168,6 +185,27 @@ def engine_smoke(n_requests: int = 12) -> dict:
     if rep.admissions_while_busy <= 0:
         raise AssertionError("no mid-generation admissions: the engine "
                              "is not batching continuously")
+    chunked = E.Engine(cfg, params, num_slots=4, max_seq=16,
+                       prefill_chunk=2)
+    repc = chunked.serve(reqs, clock="virtual", tick_s=1e-3)
+    if repc.outputs() != want:
+        raise AssertionError("chunked-prefill outputs != per-token "
+                             "reference")
+    if repc.mean_ttft_s >= rep.mean_ttft_s:
+        raise AssertionError("chunked prefill did not cut "
+                             "admission-to-first-token")
+    # a recurrent family through the same slot engine (reset-at-zero
+    # scrub + frozen inactive state)
+    scfg = get_config("mamba2-1.3b").reduced()
+    sparams = R.init(jax.random.PRNGKey(1), scfg)
+    sreqs = E.synthetic_requests(6, rate_per_s=2000.0, vocab=scfg.vocab,
+                                 prompt_len=4, max_new_tokens=3)
+    srep = E.Engine(scfg, sparams, num_slots=2, max_seq=16,
+                    prefill_chunk=2).serve(sreqs, clock="virtual",
+                                           tick_s=1e-3)
+    if srep.outputs() != E.reference_outputs(scfg, sparams, sreqs,
+                                             max_seq=16):
+        raise AssertionError("ssm engine outputs != sequential reference")
 
     # append-path kernel parity, Pallas interpreter (offline-safe)
     ks = jax.random.split(jax.random.PRNGKey(1), 7)
@@ -188,7 +226,9 @@ def engine_smoke(n_requests: int = 12) -> dict:
                                rtol=2e-5, atol=2e-5)
     return {"requests": len(rep.results), "ticks": rep.ticks,
             "mean_occupancy": rep.mean_occupancy,
-            "admissions_while_busy": rep.admissions_while_busy}
+            "admissions_while_busy": rep.admissions_while_busy,
+            "mean_ttft_s": rep.mean_ttft_s,
+            "chunked_mean_ttft_s": repc.mean_ttft_s}
 
 
 def rows():

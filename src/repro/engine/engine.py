@@ -6,12 +6,26 @@ the paper's static-shape discipline):
 - The KV cache is a fixed pool of ``num_slots`` rows of ``max_seq``
   positions — ONE compiled decode step ever exists, whatever the request
   mix, so per-tick latency is deterministic (the Table 4 argument).
-- Every tick advances EVERY slot by one token in one fused
+- Every tick advances EVERY ready slot by one token in one fused
   ``make_slot_decode_step`` call (active mask folded into sampling and
   index advance, cache donated).  A slot mid-prefill is teacher-forced
   its next prompt token; a slot mid-generation feeds back its last
   sample; the first sample after the final prompt token is the request's
   first output token.
+- All token-only decode families serve through the same step: positional
+  KV state isolates per row behind each slot's ``valid_len`` frontier,
+  recurrent state (ssm/hybrid) is frozen for inactive rows and scrubbed
+  on reuse by the families' reset-at-position-0 rule (docs/serving.md).
+- With ``prefill_chunk=c``, a newly admitted slot's prompt (all but the
+  last token) is written by a chunked prefill step — one dispatch per
+  bucketed chunk, concurrent with other slots' decoding — so
+  admission-to-first-token drops from ``P`` ticks to ``ceil((P-1)/c)``
+  (the final chunk tick doubles as the slot's first fused tick).  The
+  chunk step scans the SAME per-token decode step, so outputs stay
+  bit-for-bit equal to the per-token path.
+- ``temperature > 0`` samples per row with ``fold_in(rng, position)`` —
+  the fused decode loop's key schedule made per-row, so sampling parity
+  holds against the sequential reference beyond greedy.
 - Admission consults the same ``core.batching.AdmissionPolicy`` as the
   virtual-time simulator; admitted requests take over free slots
   immediately — there is NO drain barrier: new requests prefill while
@@ -67,6 +81,11 @@ class RequestResult:
     def latency_s(self) -> float:
         return self.finish_s - self.arrival_s
 
+    @property
+    def ttft_s(self) -> float:
+        """Admission-to-first-token: what chunked prefill shrinks."""
+        return self.first_token_s - self.admit_s
+
 
 @dataclasses.dataclass
 class EngineReport:
@@ -82,6 +101,9 @@ class EngineReport:
     admissions_while_busy: int        # requests admitted while some older
                                       # request was mid-generation
     num_slots: int
+    mean_ttft_s: float = 0.0          # admission-to-first-token, mean
+    p99_ttft_s: float = 0.0           # admission-to-first-token, p99
+    prefill_chunk: Optional[int] = None
 
     def outputs(self) -> Dict[int, List[int]]:
         return {r.rid: r.tokens for r in self.results}
@@ -92,34 +114,76 @@ class Engine:
 
     def __init__(self, cfg: ArchConfig, params, *, mode: QuantMode = FP,
                  num_slots: int = 8, max_seq: int = 64,
-                 policy: Optional[bt.AdmissionPolicy] = None):
-        if cfg.family != "dense":
+                 policy: Optional[bt.AdmissionPolicy] = None,
+                 prefill_chunk: Optional[int] = None,
+                 temperature: float = 0.0, rng=None):
+        if cfg.family in ("encdec", "vlm"):
             raise NotImplementedError(
-                f"slot engine supports dense-family archs for now, "
-                f"got {cfg.family!r} ({cfg.name}); other families need "
-                f"per-row cache_index support in their decode_step")
+                f"slot engine serves token-only decode families "
+                f"(dense/moe/ssm/hybrid), got {cfg.family!r} ({cfg.name}): "
+                f"its fused step carries no per-request encoder/vision "
+                f"states — see docs/serving.md")
+        if temperature > 0.0 and rng is None:
+            raise ValueError("temperature sampling needs an rng key: "
+                             "Engine(..., temperature=t, rng=key)")
         self.cfg, self.params, self.mode = cfg, params, mode
+        self.temperature, self.rng = temperature, rng
         # the pool size IS the compiled batch shape: bucket it so the
         # engine's one decode step sits on the static ladder; the cache
         # length rounds up to 16 so the slot dimension tiles cleanly
         self.num_slots = ST.bucket_batch(num_slots)
         self.max_seq = max_seq + (-max_seq) % 16
+        # chunked prefill: cap rounds up to the same power-of-two ladder,
+        # so chunk shapes and pool shapes share one bounded compile set
+        self.prefill_chunk = (ST.bucket_batch(prefill_chunk)
+                              if prefill_chunk else None)
         self.policy = policy or bt.AdmissionPolicy(
             lambda b: 0.0, max_batch=self.num_slots, max_wait_s=0.0)
         self.step = ST.jit_slot_decode_step(
-            ST.make_slot_decode_step(cfg, mode=mode))
+            ST.make_slot_decode_step(cfg, mode=mode,
+                                     temperature=temperature))
+        self._chunk_steps: Dict[int, Callable] = {}
+
+    def _chunk_step(self, chunk: int) -> Callable:
+        """The compiled prefill step for one bucket size (lazy, cached —
+        at most one compilation per power-of-two bucket ever exists)."""
+        fn = self._chunk_steps.get(chunk)
+        if fn is None:
+            fn = ST.jit_prefill_chunk_step(ST.make_prefill_chunk_step(
+                self.cfg, mode=self.mode, chunk=chunk))
+            self._chunk_steps[chunk] = fn
+        return fn
+
+    def _fused(self, tokens, cache, index, active):
+        args = (self.params, jnp.asarray(tokens), cache,
+                jnp.asarray(index), jnp.asarray(active))
+        if self.temperature > 0.0:
+            return self.step(*args, self.rng)
+        return self.step(*args)
 
     def warmup(self) -> None:
-        """Trace + compile the slot step on a throwaway cache so a
+        """Trace + compile the slot step (and, when chunked prefill is
+        on, the largest chunk bucket) on a throwaway cache so a
         wall-clock ``serve`` charges its first tick to serving, not to
         compilation."""
         with warnings.catch_warnings():
             warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
-            self.step(self.params,
-                      jnp.zeros((self.num_slots, 1), jnp.int32),
-                      R.init_cache(self.cfg, self.num_slots, self.max_seq),
-                      jnp.zeros((self.num_slots,), jnp.int32),
-                      jnp.zeros((self.num_slots,), bool))
+            cache = R.init_cache(self.cfg, self.num_slots, self.max_seq)
+            _, cache, _ = self._fused(
+                jnp.zeros((self.num_slots, 1), jnp.int32), cache,
+                jnp.zeros((self.num_slots,), jnp.int32),
+                jnp.zeros((self.num_slots,), bool))
+            if self.prefill_chunk:
+                # every reachable bucket: remainder chunks bucket to the
+                # smaller powers of two, and a cold compile mid-serve is
+                # exactly what this warmup exists to keep off the clock
+                c = 1
+                while c <= self.prefill_chunk:
+                    cache = self._chunk_step(c)(
+                        self.params, jnp.zeros((c,), jnp.int32), cache,
+                        jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+                        jnp.zeros((), jnp.int32))
+                    c *= 2
 
     # ------------------------------------------------------------------
 
@@ -185,7 +249,13 @@ class Engine:
                                     now=now, arrival_s=req.arrival_s,
                                     deadline_s=req.deadline_s)
                     index[st.sid] = 0
-                    tokens[st.sid, 0] = st.next_input()
+                    if self.prefill_chunk and len(req.prompt) > 1:
+                        # all but the last prompt token go through the
+                        # chunked prefill step; the last one rides the
+                        # fused step (its sample = first output token)
+                        st.chunk_left = len(req.prompt) - 1
+                    else:
+                        tokens[st.sid, 0] = st.next_input()
                 # 3) idle: nothing active -> jump to the next event
                 if pool.active_count == 0:
                     if next_arrival is None and not sched.pending:
@@ -199,25 +269,53 @@ class Engine:
                     else:
                         now = max(now, target)
                     continue
-                # 4) one fused slot-masked step: every slot, one token
-                active = np.array([s.active for s in pool.slots], bool)
-                nxt, cache, new_index = self.step(
-                    self.params, jnp.asarray(tokens), cache,
-                    jnp.asarray(index), jnp.asarray(active))
-                nxt = np.asarray(nxt)
-                index = np.array(new_index)    # writable host copy
+                # 4) chunked prefill: each mid-prefill slot writes one
+                #    bucketed chunk of teacher-forced prompt state in a
+                #    single dispatch (admission-to-first-token shrinks
+                #    from prompt_len ticks to ceil(prompt_len/chunk))
+                for st in pool.active_slots():
+                    if st.chunk_left <= 0:
+                        continue
+                    n = min(st.chunk_left, self.prefill_chunk)
+                    c = ST.bucket_batch(n)
+                    buf = np.zeros((c,), np.int32)
+                    buf[:n] = st.prompt[st.pos:st.pos + n]
+                    cache = self._chunk_step(c)(
+                        self.params, jnp.asarray(buf), cache,
+                        jnp.asarray(st.sid, jnp.int32),
+                        jnp.asarray(st.pos, jnp.int32),
+                        jnp.asarray(n, jnp.int32))
+                    st.pos += n
+                    st.chunk_left -= n
+                    index[st.sid] = st.pos
+                    if st.chunk_left == 0:
+                        tokens[st.sid, 0] = st.prompt[st.pos]
+                # 5) one fused slot-masked step: every ready slot (not
+                #    mid-chunk), one token
+                active = np.array(
+                    [s.active and s.chunk_left == 0 for s in pool.slots],
+                    bool)
+                if active.any():
+                    nxt, cache, new_index = self._fused(
+                        tokens, cache, index, active)
+                    nxt = np.asarray(nxt)
+                    index = np.array(new_index)    # writable host copy
+                elif clock == "wall":
+                    jax.block_until_ready(cache)   # charge chunk time here
                 ticks += 1
-                occupancy.append(int(active.sum()))
+                occupancy.append(pool.active_count)
                 if clock == "wall":
                     # np.asarray(nxt) above already blocked on the step
                     now = time.perf_counter() - t0
                 else:
-                    dt = tick_s(int(active.sum())) if callable(tick_s) \
+                    dt = tick_s(pool.active_count) if callable(tick_s) \
                         else tick_s
                     now += dt
-                # 5) host bookkeeping: teacher-force prefill, collect
+                # 6) host bookkeeping: teacher-force prefill, collect
                 #    samples, retire finished slots for immediate reuse
                 for st in pool.active_slots():
+                    if st.chunk_left > 0:          # mid-chunk: no sample
+                        continue
                     st.pos += 1
                     if st.pos < len(st.prompt):        # still prefilling
                         tokens[st.sid, 0] = st.prompt[st.pos]
@@ -243,6 +341,7 @@ class Engine:
         wall = time.perf_counter() - t0
         results.sort(key=lambda r: r.rid)
         lat = [r.latency_s for r in results]
+        ttft = [r.ttft_s for r in results]
         dur = max(now, 1e-12)
         return EngineReport(
             results=results, ticks=ticks, generated_tokens=gen_tokens,
@@ -253,7 +352,10 @@ class Engine:
             mean_occupancy=(sum(occupancy) / (len(occupancy) * S)
                             if occupancy else 0.0),
             admissions_while_busy=admissions_while_busy,
-            num_slots=S)
+            num_slots=S,
+            mean_ttft_s=float(np.mean(ttft)) if ttft else 0.0,
+            p99_ttft_s=bt.p99(ttft),
+            prefill_chunk=self.prefill_chunk)
 
 
 # ---------------------------------------------------------------------------
@@ -262,11 +364,19 @@ class Engine:
 
 def reference_outputs(cfg: ArchConfig, params,
                       requests: Sequence[EngineRequest], *,
-                      mode: QuantMode = FP, max_seq: int = 64
+                      mode: QuantMode = FP, max_seq: int = 64,
+                      temperature: float = 0.0, rng=None
                       ) -> Dict[int, List[int]]:
     """The sequential per-token reference loop: each request alone at
     batch=1, prompt teacher-forced a token at a time, then greedy
-    generation — the bit-for-bit baseline the engine must reproduce."""
+    generation — the bit-for-bit baseline the engine must reproduce.
+
+    With ``temperature > 0`` sampling draws with the
+    ``fold_in(rng, position)`` key schedule — the same schedule
+    :func:`repro.runtime.steps.make_decode_loop` and the slot engine use
+    (per-row there), so sampled outputs stay engine-comparable."""
+    if temperature > 0.0 and rng is None:
+        raise ValueError("temperature sampling needs an rng key")
     decode = jax.jit(ST.make_decode_step(cfg, mode=mode))
     out: Dict[int, List[int]] = {}
     for r in sorted(requests, key=lambda x: x.rid):
@@ -283,7 +393,13 @@ def reference_outputs(cfg: ArchConfig, params,
                  "cache_index": jnp.asarray(pos, jnp.int32)}, cache)
             pos += 1
             if pos >= len(feed):
-                tok = int(ST.greedy_sample(logits)[0])
+                if temperature > 0.0:
+                    key = jax.random.fold_in(
+                        rng, jnp.asarray(pos - 1, jnp.int32))
+                    tok = int(ST.temperature_sample(logits, key,
+                                                    temperature)[0])
+                else:
+                    tok = int(ST.greedy_sample(logits)[0])
                 gen.append(tok)
         out[r.rid] = gen
     return out

@@ -3,9 +3,10 @@
 Pure host-side state (no jax): which slot serves which request, how far
 each request has advanced, what it has generated.  The device-side cache
 row `sid` belongs to whichever request currently owns slot `sid`; a freed
-slot is reusable immediately — the engine's per-row masking (valid
-frontier = the slot's own index) is what makes stale cache contents
-invisible, so there is nothing to scrub between tenants.
+slot is reusable immediately — per-row masking (positional KV reads stop
+at the slot's own frontier) and the recurrent families' reset-at-
+position-0 rule make stale cache contents invisible, so there is nothing
+to scrub between tenants.
 """
 from __future__ import annotations
 
@@ -21,6 +22,9 @@ class SlotState:
     prompt: Tuple[int, ...] = ()
     max_new: int = 0
     pos: int = 0                      # tokens fed so far (prompt + generated)
+    chunk_left: int = 0               # prompt tokens still owed to the
+                                      # chunked-prefill step (0 = rides the
+                                      # fused slot step)
     generated: Optional[List[int]] = None
     arrival_s: float = 0.0
     admit_s: float = 0.0
@@ -75,7 +79,7 @@ class SlotPool:
             raise ValueError(f"request {rid}: empty prompt")
         st = self.slots[self._free.pop()]
         st.rid, st.prompt, st.max_new = rid, tuple(prompt), max_new
-        st.pos, st.generated = 0, []
+        st.pos, st.chunk_left, st.generated = 0, 0, []
         st.arrival_s, st.admit_s, st.deadline_s = arrival_s, now, deadline_s
         st.first_token_s = -1.0
         return st

@@ -16,13 +16,18 @@ tokens/s, and slot occupancy.
   python -m repro.launch.serve --arch starcoder2-3b --reduced \
       --deadline-ms 50 --rate 200
 
-``--sim`` runs the virtual-time BatchQueue simulator backend instead
-(same admission policy, no model execution) — the Table 4 sanity check;
-non-dense families fall back to it automatically until their decode
-steps grow per-slot cache indices.  The fused multi-token decode loop is
-still timed separately (``--decode-tokens``): it remains the right tool
-for fixed-length batch completion, while the engine serves the ragged
-live stream.
+Every token-only decode family serves through the engine — dense, moe,
+ssm, and hybrid all share the one fused slot step (per-row cache
+indices; see docs/serving.md).  ``--prefill-chunk`` turns on chunked
+prefill (admission-to-first-token drops from prompt_len ticks to
+``ceil(prompt_len/chunk)``), ``--temperature`` turns on per-row
+``fold_in(rng, position)`` sampling.  ``--sim`` runs the virtual-time
+BatchQueue simulator backend instead (same admission policy, no model
+execution) — the Table 4 sanity check; only encoder-conditioned families
+(encdec/vlm) still fall back to it.  The fused multi-token decode loop
+is still timed separately (``--decode-tokens``): it remains the right
+tool for fixed-length batch completion, while the engine serves the
+ragged live stream.
 """
 from __future__ import annotations
 
@@ -35,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.configs.base import ShapeSpec
 from repro.core import batching as bt
 from repro.core.qlinear import FP, W8A16, W8A8
 from repro.core.quant import quantize_tree, tree_weight_bytes
@@ -55,8 +61,12 @@ def measure_service_curve(step_fn, params, cfg, batches=(1, 4, 16),
         batches = tuple(sorted(set(batches) | {int(max_batch)}))
     times = {}
     for b in batches:
-        tokens = jnp.zeros((b, seq), jnp.int32)
-        batch = {"tokens": tokens}
+        # materialize zeros from input_specs so encoder-conditioned
+        # families get their stub embeds with the one authoritative
+        # shape/dtype (configs/base.py), not a re-implementation here
+        spec = ShapeSpec("serve_curve", seq, b, "prefill")
+        batch = {k: jnp.zeros(v.shape, v.dtype)
+                 for k, v in cfg.input_specs(spec).items()}
         warm = step_fn(params, batch)   # one warmup call, not three
         warm = warm[0] if isinstance(warm, tuple) else warm
         warm.block_until_ready()
@@ -127,6 +137,12 @@ def main(argv=None):
     ap.add_argument("--sim", action="store_true",
                     help="run the virtual-time BatchQueue simulator "
                          "backend instead of the live engine")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="engine: chunked-prefill bucket cap (0 = "
+                         "per-token prefill)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="engine: per-row sampling temperature "
+                         "(0 = greedy)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -168,10 +184,12 @@ def main(argv=None):
               f"{args.decode_tokens} steps in {dt*1e3:.1f} ms -> "
               f"{tps:,.0f} tok/s")
 
-    if args.sim or cfg.family != "dense":
+    if args.sim or cfg.family in ("encdec", "vlm"):
         if not args.sim:
-            print(f"[serve] {cfg.family!r} family: no per-slot decode yet; "
-                  f"falling back to the simulator backend")
+            print(f"[serve] {cfg.family!r} family: the fused slot step "
+                  f"carries no per-request encoder/vision states "
+                  f"(docs/serving.md); falling back to the simulator "
+                  f"backend")
         reqs = bt.poisson_arrivals(args.rate, args.n_requests, deadline,
                                    args.seed)
         q = bt.BatchQueue(model.service_time, max_batch=batch)
@@ -197,7 +215,11 @@ def main(argv=None):
     policy = bt.AdmissionPolicy(model.service_time, max_batch=num_slots)
     eng = E.Engine(cfg, params, mode=mode, num_slots=num_slots,
                    max_seq=args.prompt_len + args.gen_tokens,
-                   policy=policy)
+                   policy=policy,
+                   prefill_chunk=args.prefill_chunk or None,
+                   temperature=args.temperature,
+                   rng=(jax.random.PRNGKey(args.seed + 1)
+                        if args.temperature > 0 else None))
     max_seq = eng.max_seq
     reqs = E.synthetic_requests(
         args.n_requests, rate_per_s=args.rate, vocab=cfg.vocab,
@@ -218,6 +240,9 @@ def main(argv=None):
           f"{max(rep.occupancy) if rep.occupancy else 0} peak; "
           f"{rep.admissions_while_busy} admissions while mid-generation "
           f"(no drain barrier)")
+    print(f"[engine] time-to-first-token {rep.mean_ttft_s*1e3:.2f} ms mean "
+          f"/ {rep.p99_ttft_s*1e3:.2f} ms p99 "
+          f"(prefill chunk {rep.prefill_chunk or 'off'})")
     return 0
 
 

@@ -215,9 +215,18 @@ init_cache = TF.init_cache
 def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
                 cfg: ArchConfig, *, mode: QuantMode = FP
                 ) -> Tuple[Array, dict]:
+    """One decode step; ``cache_index`` scalar () (lockstep) or (B,)
+    per-row for the slot engine, exactly as in the dense family.  Expert
+    routing needs no extra per-row plumbing: dispatch/combine are already
+    vmapped per batch row, so each slot routes its own token against its
+    own position-independent router state."""
     b, s = tokens.shape
     x = L.embed(params["embed"], tokens)
-    positions = cache_index + jnp.arange(s)[None, :]
+    cache_index = jnp.asarray(cache_index)
+    if cache_index.ndim:                    # (B,): per-slot positions
+        positions = cache_index[:, None] + jnp.arange(s)[None, :]
+    else:
+        positions = cache_index + jnp.arange(s)[None, :]
     acfg = TF.attn_config(cfg)
     s_alloc = cache["k"].shape[2]
     write_idx = cache_index % s_alloc if cfg.window else cache_index
@@ -243,27 +252,25 @@ def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
         x = x + moe_ffn(lp["moe"], h, cfg, mode=mode)
         return constrain(x, "act"), new_kv
 
-    dus = jax.lax.dynamic_update_slice
+    w = TF._stacked_cache_write            # scalar () or per-row (B,) idx
     if quant:
         xs = (params["layers"], cache["k"], cache["v"],
               cache["k_scale"], cache["v_scale"])
         x, (nk, nv, nks, nvs) = jax.lax.scan(body, x, xs)
         if append:
             new_cache = {
-                "k": dus(cache["k"], nk, (0, 0, write_idx, 0, 0)),
-                "v": dus(cache["v"], nv, (0, 0, write_idx, 0, 0)),
-                "k_scale": dus(cache["k_scale"], nks,
-                               (0, 0, write_idx, 0, 0)),
-                "v_scale": dus(cache["v_scale"], nvs,
-                               (0, 0, write_idx, 0, 0))}
+                "k": w(cache["k"], nk, write_idx),
+                "v": w(cache["v"], nv, write_idx),
+                "k_scale": w(cache["k_scale"], nks, write_idx),
+                "v_scale": w(cache["v_scale"], nvs, write_idx)}
         else:
             new_cache = {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
     else:
         x, (nk, nv) = jax.lax.scan(
             body, x, (params["layers"], cache["k"], cache["v"]))
         if append:
-            new_cache = {"k": dus(cache["k"], nk, (0, 0, write_idx, 0, 0)),
-                         "v": dus(cache["v"], nv, (0, 0, write_idx, 0, 0))}
+            new_cache = {"k": w(cache["k"], nk, write_idx),
+                         "v": w(cache["v"], nv, write_idx)}
         else:
             new_cache = {"k": nk, "v": nv}
     x = TF.norm_apply(cfg, params["ln_f"], x)

@@ -64,3 +64,34 @@ def apply_decode(params, cfg: ArchConfig, batch: dict, cache, *,
     m = module_for(cfg)
     return m.decode_step(params, batch["tokens"], cache,
                          batch["cache_index"], cfg, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# slot-engine contract (per-row decode state; see docs/serving.md)
+# ---------------------------------------------------------------------------
+
+def cache_batch_axes(cfg: ArchConfig, cache: dict) -> dict:
+    """Batch (slot) axis per cache leaf.  Families whose cache stacks
+    extra leading dims (hybrid groups) override ``cache_batch_axes`` in
+    their module; everyone else keeps batch right behind the layer axis."""
+    m = module_for(cfg)
+    if hasattr(m, "cache_batch_axes"):
+        return m.cache_batch_axes(cache)
+    return {k: 1 for k in cache}
+
+
+def mask_inactive_slots(cfg: ArchConfig, old_cache: dict, new_cache: dict,
+                        active):
+    """Slot-engine isolation hook: return ``new_cache`` with inactive
+    rows' *non-positional* state restored from ``old_cache``.
+
+    KV caches need nothing here — stale positional entries are invisible
+    behind each row's ``valid_len`` frontier — so the dense/moe families
+    return ``new_cache`` unchanged and pay zero extra traffic.  Recurrent
+    families (ssm/hybrid) define ``mask_inactive_slots`` in their module:
+    their state has no frontier to hide behind, so inactive rows must be
+    frozen bitwise."""
+    m = module_for(cfg)
+    if hasattr(m, "mask_inactive_slots"):
+        return m.mask_inactive_slots(old_cache, new_cache, active)
+    return new_cache

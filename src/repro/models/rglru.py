@@ -236,15 +236,70 @@ def init_cache(cfg: ArchConfig, batch: int, s_max: int,
     return cache
 
 
+def mask_inactive_slots(old: dict, new: dict, active: Array) -> dict:
+    """Freeze inactive slots' recurrent/conv state (slot engine contract).
+
+    The local-attention KV ring is positional (masked reads via
+    ``valid_len``) and needs no freeze, but the RG-LRU ``rnn_h`` and conv
+    tails are not — inactive rows' state must stay bitwise untouched.
+    ``active`` is (B,); batch axis is 2 for grouped state, 1 for leftover."""
+    out = dict(new)
+    out["rnn_h"] = jnp.where(active[None, None, :, None],
+                             new["rnn_h"], old["rnn_h"])
+    out["conv"] = jnp.where(active[None, None, :, None, None],
+                            new["conv"], old["conv"])
+    if "lo_rnn_h" in new:
+        out["lo_rnn_h"] = jnp.where(active[None, :, None],
+                                    new["lo_rnn_h"], old["lo_rnn_h"])
+        out["lo_conv"] = jnp.where(active[None, :, None, None],
+                                   new["lo_conv"], old["lo_conv"])
+    return out
+
+
+def cache_batch_axes(cache: dict) -> dict:
+    """Batch axis per cache leaf (the slot engine slices slots with it).
+    Grouped recurrent state stacks (group, block) ahead of batch."""
+    axes = {"rnn_h": 2, "conv": 2, "k": 1, "v": 1}
+    if "lo_rnn_h" in cache:
+        axes["lo_rnn_h"] = 1
+        axes["lo_conv"] = 1
+    return axes
+
+
 def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
                 cfg: ArchConfig, *, mode: QuantMode = FP
                 ) -> Tuple[Array, dict]:
+    """One-token decode.  ``cache_index`` is scalar () (lockstep batch) or
+    (B,) per-row for the slot engine: RoPE positions, ring write indices
+    and window masks all become per-row, and — like the SSM — a row at
+    position 0 has its recurrent/conv state zeroed before the update (the
+    reset-at-zero scrub that makes slot reuse safe)."""
     b, s = tokens.shape
     x = L.embed(params["embed"], tokens)
-    positions = cache_index + jnp.arange(s)[None, :]
+    ci = jnp.asarray(cache_index)
+    if ci.ndim:                             # (B,): per-slot positions
+        positions = ci[:, None] + jnp.arange(s)[None, :]
+    else:
+        positions = ci + jnp.arange(s)[None, :]
     win = cache["k"].shape[2]
-    write_idx = cache_index % win
-    valid_len = jnp.minimum(cache_index + s, win)
+    write_idx = ci % win
+    valid_len = jnp.minimum(ci + s, win)
+    fresh = jnp.broadcast_to(ci == 0, (b,))
+    cache = dict(
+        cache,
+        rnn_h=jnp.where(fresh[None, None, :, None],
+                        jnp.zeros_like(cache["rnn_h"]), cache["rnn_h"]),
+        conv=jnp.where(fresh[None, None, :, None, None],
+                       jnp.zeros_like(cache["conv"]), cache["conv"]))
+    if "lo_rnn_h" in cache:
+        cache = dict(
+            cache,
+            lo_rnn_h=jnp.where(fresh[None, :, None],
+                               jnp.zeros_like(cache["lo_rnn_h"]),
+                               cache["lo_rnn_h"]),
+            lo_conv=jnp.where(fresh[None, :, None, None],
+                              jnp.zeros_like(cache["lo_conv"]),
+                              cache["lo_conv"]))
 
     def group_body(x, inp):
         gp, h2, conv2, ck, cv = inp

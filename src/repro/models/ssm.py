@@ -225,10 +225,38 @@ def init_cache(cfg: ArchConfig, batch: int, s_max: int,
     }
 
 
+def mask_inactive_slots(old: dict, new: dict, active: Array) -> dict:
+    """Freeze inactive slots' recurrent state (slot engine contract).
+
+    Unlike a KV cache, the SSM state is NOT positional: there is no
+    ``valid_len`` mask at read time that could hide a clobbered ``h`` or
+    conv tail, so the fused slot step must leave inactive rows' state
+    bitwise untouched.  ``active`` is (B,); state batch axis is 1."""
+    return {
+        "h": jnp.where(active[None, :, None, None, None],
+                       new["h"], old["h"]),
+        "conv": jnp.where(active[None, :, None, None],
+                          new["conv"], old["conv"]),
+    }
+
+
 def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
                 cfg: ArchConfig, *, mode: QuantMode = FP
                 ) -> Tuple[Array, dict]:
+    """One-token decode.  ``cache_index`` is scalar () (lockstep batch) or
+    (B,) per-row for the slot engine.  The state is position-free, so the
+    index's only job here is the *reset-at-zero scrub*: a row decoding its
+    position-0 token by definition has no history, so its carried
+    ``h``/conv state is zeroed before the update — that is what makes a
+    reused slot's previous tenant invisible without scrubbing the pool."""
+    b, s = tokens.shape
     x = L.embed(params["embed"], tokens)
+    ci = jnp.asarray(cache_index)
+    fresh = jnp.broadcast_to(ci == 0, (b,))
+    h_in = jnp.where(fresh[None, :, None, None, None],
+                     jnp.zeros_like(cache["h"]), cache["h"])
+    conv_in = jnp.where(fresh[None, :, None, None],
+                        jnp.zeros_like(cache["conv"]), cache["conv"])
 
     def body(x, lp_and_state):
         lp, h, conv = lp_and_state
@@ -237,6 +265,6 @@ def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
         return out, (new_state["h"], new_state["conv"])
 
     x, (new_h, new_conv) = jax.lax.scan(
-        body, x, (params["layers"], cache["h"], cache["conv"]))
+        body, x, (params["layers"], h_in, conv_in))
     x = L.rmsnorm(params["ln_f"], x)
     return L.unembed(params["embed"], x), {"h": new_h, "conv": new_conv}

@@ -255,38 +255,115 @@ def jit_decode_loop(loop: Callable) -> Callable:
     return jax.jit(loop, donate_argnums=(2,))
 
 
-def make_slot_decode_step(cfg: ArchConfig, *, mode: QuantMode = FP
-                          ) -> Callable:
+def make_slot_decode_step(cfg: ArchConfig, *, mode: QuantMode = FP,
+                          temperature: float = 0.0) -> Callable:
     """One tick of the continuous-batching engine: advance EVERY slot of
     the fixed pool by one token, in one fused step of static shape.
 
     Returns ``step(params, tokens, cache, slot_index, active) ->
     (next_tokens, cache, slot_index)`` with ``tokens`` (S_slots, 1) int32,
     ``slot_index`` (S_slots,) int32 per-slot sequence positions, and
-    ``active`` (S_slots,) bool.  The active mask folds into sampling
-    (inactive rows emit 0) and into the index advance (inactive rows
-    freeze).  Cache writes are row-local scatters at each slot's own
-    frontier; an inactive slot's frozen frontier sits at-or-past its valid
-    region and every read is masked by ``slot_index``, so the dead rows
-    that keep the shape static can never leak into live requests (the
-    engine's isolation property test poisons them to prove it).  Wrap with
-    :func:`jit_slot_decode_step` to donate the cache.
+    ``active`` (S_slots,) bool; with ``temperature > 0`` the step takes a
+    trailing ``rng`` key and samples row ``r`` with
+    ``fold_in(rng, slot_index[r])`` — the per-row analogue of
+    :func:`make_decode_loop`'s key schedule, so engine sampling is
+    parity-testable against the fused loop and the per-token reference.
+
+    The active mask folds into sampling (inactive rows emit 0) and into
+    the index advance (inactive rows freeze).  Works for every registry
+    family with token-only decode (dense/moe/ssm/hybrid): positional KV
+    writes are row-local scatters at each slot's own frontier with reads
+    masked by ``slot_index``, while non-positional recurrent state is
+    frozen for inactive rows through ``registry.mask_inactive_slots`` and
+    scrubbed on slot reuse by the families' reset-at-position-0 rule (the
+    engine's isolation property test poisons dead rows to prove both).
+    Wrap with :func:`jit_slot_decode_step` to donate the cache.
     """
     decode = make_decode_step(cfg, mode=mode)
 
-    def step(params, tokens, cache, slot_index, active):
-        logits, cache = decode(
+    def _advance(params, tokens, cache, slot_index, active):
+        logits, new_cache = decode(
             params, {"tokens": tokens, "cache_index": slot_index}, cache)
-        nxt = greedy_sample(logits)
-        nxt = jnp.where(active, nxt, jnp.zeros_like(nxt))
-        slot_index = slot_index + active.astype(slot_index.dtype)
-        return nxt, cache, slot_index
+        new_cache = R.mask_inactive_slots(cfg, cache, new_cache, active)
+        return logits, new_cache
+
+    if temperature > 0.0:
+        def step(params, tokens, cache, slot_index, active, rng):
+            logits, cache = _advance(params, tokens, cache, slot_index,
+                                     active)
+            keys = jax.vmap(lambda p: jax.random.fold_in(rng, p))(slot_index)
+            nxt = temperature_sample_rows(logits, keys, temperature)
+            nxt = jnp.where(active, nxt, jnp.zeros_like(nxt))
+            return nxt, cache, slot_index + active.astype(slot_index.dtype)
+    else:
+        def step(params, tokens, cache, slot_index, active):
+            logits, cache = _advance(params, tokens, cache, slot_index,
+                                     active)
+            nxt = greedy_sample(logits)
+            nxt = jnp.where(active, nxt, jnp.zeros_like(nxt))
+            return nxt, cache, slot_index + active.astype(slot_index.dtype)
 
     return step
 
 
 def jit_slot_decode_step(step: Callable) -> Callable:
     """jit a slot decode step with the KV cache donated (argument 2)."""
+    return jax.jit(step, donate_argnums=(2,))
+
+
+def make_prefill_chunk_step(cfg: ArchConfig, *, mode: QuantMode = FP,
+                            chunk: int) -> Callable:
+    """Chunked prefill for ONE slot of the engine's pool: write ``chunk``
+    teacher-forced prompt tokens of KV/recurrent state in a single
+    dispatch, instead of one engine tick per token.
+
+    Returns ``step(params, tokens, cache, sid, start, n_valid) -> cache``
+    with ``tokens`` (chunk,) int32 prompt tokens, ``sid`` () int32 the
+    slot row, ``start`` () int32 the slot's current frontier, and
+    ``n_valid`` () int32 how many of the ``chunk`` tokens are real (the
+    rest is bucket padding whose state updates are reverted, so one
+    compilation per bucket on :func:`bucket_batch`'s power-of-two ladder
+    serves every prompt length).
+
+    Internally this slices the slot's row out of the pooled cache
+    (``registry.cache_batch_axes`` names the slot axis per leaf), runs a
+    ``lax.scan`` of the SAME per-token decode step the engine and the
+    sequential reference use — so the written state is bit-for-bit what
+    per-token prefill would have written — and scatters the row back.
+    Logits are discarded: the engine feeds the LAST prompt token through
+    the fused slot step, whose sample is the request's first output.
+    Wrap with :func:`jit_prefill_chunk_step` to donate the cache.
+    """
+    decode = make_decode_step(cfg, mode=mode)
+
+    def step(params, tokens, cache, sid, start, n_valid):
+        axes = R.cache_batch_axes(cfg, cache)
+        slot = {k: jax.lax.dynamic_slice_in_dim(v, sid, 1, axis=axes[k])
+                for k, v in cache.items()}
+
+        def body(carry, inp):
+            slot, idx = carry
+            tok, i = inp
+            _, new_slot = decode(
+                params, {"tokens": tok.reshape(1, 1), "cache_index": idx},
+                slot)
+            keep = i < n_valid
+            slot = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(keep, n, o), new_slot, slot)
+            return (slot, jnp.where(keep, idx + 1, idx)), None
+
+        (slot, _), _ = jax.lax.scan(
+            body, (slot, jnp.asarray(start, jnp.int32)),
+            (tokens, jnp.arange(chunk)))
+        return {k: jax.lax.dynamic_update_slice_in_dim(
+                    cache[k], slot[k], sid, axis=axes[k])
+                for k in cache}
+
+    return step
+
+
+def jit_prefill_chunk_step(step: Callable) -> Callable:
+    """jit a prefill chunk step with the KV cache donated (argument 2)."""
     return jax.jit(step, donate_argnums=(2,))
 
 
@@ -299,6 +376,20 @@ def temperature_sample(logits: jax.Array, rng: jax.Array,
     return jax.random.categorical(
         rng, logits[:, -1].astype(jnp.float32) / temperature
     ).astype(jnp.int32)
+
+
+def temperature_sample_rows(logits: jax.Array, keys: jax.Array,
+                            temperature: float = 1.0) -> jax.Array:
+    """Per-row temperature sampling: row ``r`` draws with ``keys[r]``.
+
+    This is the slot engine's schedule — every row is an independent
+    request at its own position, so each gets its own
+    ``fold_in(rng, position)`` key.  A single row's draw is bitwise equal
+    to :func:`temperature_sample` at batch 1 with the same key (the
+    categorical consumes the same random bits), which is what makes
+    engine sampling parity-testable against the sequential reference."""
+    last = logits[:, -1].astype(jnp.float32) / temperature
+    return jax.vmap(jax.random.categorical)(keys, last).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------

@@ -18,9 +18,10 @@ ROW_KEYS = {
     "chosen_tile": {"arch", "op", "m", "k", "n", "mode", "bm", "bn", "bk",
                     "vmem_bytes"},
     "kernel_bench": {"name", "us_per_call", "derived"},
-    "engine": {"arch", "rate", "n_requests", "num_slots", "p99_s",
-               "tokens_per_s", "mean_occupancy", "ticks",
-               "admissions_while_busy", "occupancy_curve"},
+    "engine": {"arch", "family", "rate", "n_requests", "num_slots",
+               "p99_s", "tokens_per_s", "mean_occupancy", "ticks",
+               "admissions_while_busy", "occupancy_curve",
+               "prefill_chunk", "mean_ttft_s", "p99_ttft_s"},
 }
 
 
@@ -78,3 +79,13 @@ def test_rows_are_sane(bench_doc):
             assert row["admissions_while_busy"] >= 0
             assert all(0 <= a <= row["num_slots"]
                        for a in row["occupancy_curve"])
+            assert 0 < row["mean_ttft_s"] <= row["p99_s"]
+
+
+def test_engine_rows_cover_all_decode_families(bench_doc):
+    """The paper's all-NN-families serving argument: every token-only
+    decode family serves through the slot engine and lands in the
+    trajectory JSON."""
+    fams = {row["family"] for row in bench_doc["rows"]
+            if row["kind"] == "engine"}
+    assert {"dense", "moe", "ssm", "hybrid"} <= fams, fams

@@ -1,0 +1,80 @@
+"""Docs cannot silently rot: fenced ``python`` blocks in README.md and
+docs/*.md must compile, and every repo path the docs mention must exist.
+
+This is deliberately syntactic (no execution): the point is catching
+renamed files, deleted flags and typo'd snippets at test time, not
+turning prose into a second test suite."""
+import os
+import re
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_FILES = ["README.md"] + sorted(
+    os.path.join("docs", f) for f in os.listdir(os.path.join(REPO, "docs"))
+    if f.endswith(".md"))
+
+FENCE = re.compile(r"```(\w+)\n(.*?)```", re.S)
+# path-like tokens anywhere in the doc (prose, inline code, bash blocks):
+# a known top-level directory followed by a /-path
+PATH = re.compile(r"\b(?:src|docs|benchmarks|tests|examples)/[\w./\-]+")
+
+
+def _read(rel):
+    with open(os.path.join(REPO, rel)) as f:
+        return f.read()
+
+
+def _fenced_blocks(lang):
+    out = []
+    for rel in DOC_FILES:
+        for m in FENCE.finditer(_read(rel)):
+            if m.group(1) == lang:
+                out.append((rel, m.group(2)))
+    return out
+
+
+def test_docs_exist():
+    assert "README.md" in DOC_FILES
+    names = {os.path.basename(p) for p in DOC_FILES}
+    assert {"architecture.md", "serving.md", "autotune.md"} <= names
+
+
+def test_python_blocks_compile():
+    blocks = _fenced_blocks("python")
+    assert blocks, "docs should contain at least one python block"
+    for rel, src in blocks:
+        try:
+            compile(src, f"<{rel}>", "exec")
+        except SyntaxError as e:  # pragma: no cover - failure reporting
+            pytest.fail(f"python block in {rel} does not compile: {e}")
+
+
+def test_bash_blocks_reference_real_entrypoints():
+    blocks = _fenced_blocks("bash")
+    assert blocks, "docs should contain at least one bash block"
+    for rel, src in blocks:
+        for script in re.findall(r"python\s+(?:-m\s+)?(\S+)", src):
+            if script.endswith(".py"):           # script form
+                path = os.path.join(REPO, script)
+            elif script.startswith("repro."):    # module form -> src/
+                path = os.path.join(REPO, "src",
+                                    script.replace(".", os.sep) + ".py")
+            else:                                # stdlib/third-party module
+                continue
+            assert os.path.exists(path), \
+                f"{rel}: bash block runs {script!r} but {path} is missing"
+
+
+def test_referenced_repo_paths_exist():
+    checked = 0
+    for rel in DOC_FILES:
+        for tok in PATH.findall(_read(rel)):
+            tok = tok.rstrip(".").split(":")[0]   # strip sentence period,
+            if "*" in tok:                        # line refs, glob patterns
+                continue
+            assert os.path.exists(os.path.join(REPO, tok)), \
+                f"{rel} references {tok!r}, which does not exist"
+            checked += 1
+    assert checked > 20, "path check should cover the docs' references"
