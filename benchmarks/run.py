@@ -104,8 +104,9 @@ def smoke(kernel_rows=None) -> int:
           f"{eng['admissions_while_busy']} mid-flight admissions, "
           f"ttft {eng['mean_ttft_s']*1e3:.2f} -> "
           f"{eng['chunked_mean_ttft_s']*1e3:.2f} ms chunked; "
-          f"sequential-reference parity (dense + ssm, per-token + "
-          f"chunked prefill) + append-path kernel parity OK")
+          f"sequential-reference parity (dense + ssm + encdec primed "
+          f"cross-K/V, per-token + chunked prefill) + append-path "
+          f"kernel parity OK")
 
     print("\nsmoke OK: flops/bytes nonzero, scan trip count exact")
     return 0

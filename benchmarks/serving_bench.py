@@ -20,9 +20,11 @@ Row schema (stable; asserted by tests/test_bench_smoke.py)::
 
 The ``engine`` rows are the continuous-batching section: one row per
 (family, offered rate) — p99 vs load is the Table 4 story told by the
-live engine, now for every token-only decode family (dense, moe, ssm,
-hybrid), with the slot-occupancy curve downsampled inline and the
-admission-to-first-token columns showing what chunked prefill buys.
+live engine, now for EVERY registry family (dense, moe, ssm, hybrid,
+encdec, vlm — the last two behind per-slot primed cross-K/V, so their
+ttft includes the prime dispatch), with the slot-occupancy curve
+downsampled inline and the admission-to-first-token columns showing
+what chunked prefill buys.
 Timing comes from a measured per-tick cost replayed under the virtual
 clock, so the rows are structurally deterministic offline while still
 tracking real step cost.
@@ -80,9 +82,12 @@ def serving_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
         r["kind"] = "chosen_tile"
         rows.append(r)
     rows.extend(engine_rows(arch, quant=quant))
-    # every token-only decode family through the same slot engine (the
-    # paper's all-NN-families serving argument): compact per-family rows
-    for fam_arch in ("qwen2-moe-a2.7b", "mamba2-1.3b", "recurrentgemma-9b"):
+    # EVERY registry family through the same slot engine (the paper's
+    # all-NN-families serving argument): compact per-family rows — the
+    # encdec/vlm entries decode behind per-slot primed cross-K/V, so
+    # their ttft columns include the prime dispatch cost
+    for fam_arch in ("qwen2-moe-a2.7b", "mamba2-1.3b", "recurrentgemma-9b",
+                     "whisper-medium", "llama-3.2-vision-90b"):
         rows.extend(engine_rows(fam_arch, quant=quant, rates=(400.0,),
                                 n_requests=10, num_slots=4, prompt_len=6,
                                 gen_tokens=4))
@@ -118,6 +123,9 @@ def engine_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
     eng = E.Engine(cfg, params, mode=mode, num_slots=num_slots,
                    max_seq=prompt_len + gen_tokens,   # Engine rounds up
                    prefill_chunk=prefill_chunk or None)
+    # encdec/vlm: per-request sources for the prime dispatch (their ttft
+    # columns therefore include the prime cost)
+    source_shape = R.source_shape(cfg)
 
     # warm the jit cache first (the first serve pays trace+compile), then
     # measure the real per-tick cost on a second wall-clock run and replay
@@ -125,7 +133,8 @@ def engine_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
     # deterministic shape, real steady-state timing
     warm_reqs = E.synthetic_requests(
         max(4, num_slots), rate_per_s=1e6, vocab=cfg.vocab,
-        prompt_len=prompt_len, max_new_tokens=gen_tokens)
+        prompt_len=prompt_len, max_new_tokens=gen_tokens,
+        source_shape=source_shape)
     eng.serve(warm_reqs, clock="wall")
     warm = eng.serve(warm_reqs, clock="wall")
     tick_s = warm.wall_s / max(warm.ticks, 1)
@@ -134,7 +143,8 @@ def engine_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
     for rate in rates:
         reqs = E.synthetic_requests(
             n_requests, rate_per_s=rate, vocab=cfg.vocab,
-            prompt_len=prompt_len, max_new_tokens=gen_tokens)
+            prompt_len=prompt_len, max_new_tokens=gen_tokens,
+            source_shape=source_shape)
         rep = eng.serve(reqs, clock="virtual", tick_s=tick_s)
         rows.append({
             "kind": "engine", "arch": cfg.name, "family": cfg.family,
@@ -156,7 +166,8 @@ def engine_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
 def engine_smoke(n_requests: int = 12) -> dict:
     """Offline smoke: a short continuous-batching run whose outputs must
     match the sequential per-token reference bit-for-bit (per-token AND
-    chunked prefill, dense AND a recurrent family), plus an
+    chunked prefill; dense AND a recurrent family AND an
+    encoder-conditioned family through its prime dispatch), plus an
     interpret-mode parity check of the fused decode-attention kernel's
     append path (current-token k/v operand).  Exercised by
     ``benchmarks/run.py --smoke`` so cost-engine or kernel regressions
@@ -206,6 +217,20 @@ def engine_smoke(n_requests: int = 12) -> dict:
     if srep.outputs() != E.reference_outputs(scfg, sparams, sreqs,
                                              max_seq=16):
         raise AssertionError("ssm engine outputs != sequential reference")
+    # an encoder-conditioned family through the same slot engine: a prime
+    # dispatch writes each request's cross-K/V into its slot row at
+    # admission, and slot reuse across tenants must stay bit-for-bit
+    wcfg = get_config("whisper-medium").reduced()
+    wparams = R.init(jax.random.PRNGKey(2), wcfg)
+    wreqs = E.synthetic_requests(
+        6, rate_per_s=2000.0, vocab=wcfg.vocab, prompt_len=3,
+        max_new_tokens=3, source_shape=R.source_shape(wcfg))
+    wrep = E.Engine(wcfg, wparams, num_slots=2, max_seq=16).serve(
+        wreqs, clock="virtual", tick_s=1e-3)
+    if wrep.outputs() != E.reference_outputs(wcfg, wparams, wreqs,
+                                             max_seq=16):
+        raise AssertionError("encdec engine outputs != sequential "
+                             "reference (primed cross-K/V slot path)")
 
     # append-path kernel parity, Pallas interpreter (offline-safe)
     ks = jax.random.split(jax.random.PRNGKey(1), 7)

@@ -227,11 +227,18 @@ class BatchQueue:
 
 
 def p99(latencies: Sequence[float]) -> float:
+    """Nearest-rank 99th percentile: the smallest value with at least 99%
+    of the sample at or below it — the ``ceil(0.99 n)``-th order
+    statistic.  The old ``int(0.99 * n)`` indexing had a nearest-rank
+    off-by-one at multiples of 100: at n=100 it indexed the MAX,
+    overstating the tail by a whole rank.  Integer arithmetic keeps the
+    rank exact by construction, with no reasoning about float rounding
+    required."""
     if not latencies:
         return 0.0
     xs = sorted(latencies)
-    idx = min(len(xs) - 1, int(0.99 * len(xs)))
-    return xs[idx]
+    rank = -((-99 * len(xs)) // 100)          # ceil(0.99 n), exactly
+    return xs[rank - 1]
 
 
 def poisson_arrivals(rate_per_s: float, n: int, deadline_s: float,

@@ -12,10 +12,15 @@ the paper's static-shape discipline):
   its next prompt token; a slot mid-generation feeds back its last
   sample; the first sample after the final prompt token is the request's
   first output token.
-- All token-only decode families serve through the same step: positional
-  KV state isolates per row behind each slot's ``valid_len`` frontier,
+- EVERY registry family serves through the same step: positional KV
+  state isolates per row behind each slot's ``valid_len`` frontier,
   recurrent state (ssm/hybrid) is frozen for inactive rows and scrubbed
-  on reuse by the families' reset-at-position-0 rule (docs/serving.md).
+  on reuse by the families' reset-at-position-0 rule, and the
+  encoder-conditioned families (encdec/vlm) decode against a second
+  slot-resident static operand — per-request primed cross-attention K/V,
+  written once at admission by a *prime dispatch* that runs the encoder
+  or vision tower and scatters the pre-projected cross K/V (plus the
+  row's ``xlen`` frontier) into the slot's row (docs/serving.md).
 - With ``prefill_chunk=c``, a newly admitted slot's prompt (all but the
   last token) is written by a chunked prefill step — one dispatch per
   bucketed chunk, concurrent with other slots' decoding — so
@@ -65,6 +70,12 @@ class EngineRequest:
     max_new_tokens: int
     arrival_s: float = 0.0
     deadline_s: float = float("inf")
+    # encdec/vlm: the request's source embeddings (src_len, d_model) —
+    # encoder frames / vision patches a prime dispatch turns into the
+    # slot's cross-K/V row at admission.  src_len may be shorter than the
+    # static source length; the pad is masked behind the row's xlen.
+    source: Optional[np.ndarray] = dataclasses.field(
+        default=None, compare=False, repr=False)
 
 
 @dataclasses.dataclass
@@ -76,14 +87,23 @@ class RequestResult:
     first_token_s: float
     finish_s: float
     slot: int
+    dropped: bool = False             # retired before completing (deadline)
 
     @property
     def latency_s(self) -> float:
         return self.finish_s - self.arrival_s
 
     @property
+    def emitted(self) -> bool:
+        """True once the request produced at least one token; ``ttft_s``
+        is meaningless (the -1.0 sentinel) until then."""
+        return self.first_token_s >= 0
+
+    @property
     def ttft_s(self) -> float:
-        """Admission-to-first-token: what chunked prefill shrinks."""
+        """Admission-to-first-token: what chunked prefill shrinks.  Only
+        defined when ``emitted`` — a request retired mid-prefill still
+        carries the -1.0 sentinel, which aggregates must exclude."""
         return self.first_token_s - self.admit_s
 
 
@@ -104,6 +124,7 @@ class EngineReport:
     mean_ttft_s: float = 0.0          # admission-to-first-token, mean
     p99_ttft_s: float = 0.0           # admission-to-first-token, p99
     prefill_chunk: Optional[int] = None
+    dropped: int = 0                  # requests retired on deadline miss
 
     def outputs(self) -> Dict[int, List[int]]:
         return {r.rid: r.tokens for r in self.results}
@@ -117,12 +138,6 @@ class Engine:
                  policy: Optional[bt.AdmissionPolicy] = None,
                  prefill_chunk: Optional[int] = None,
                  temperature: float = 0.0, rng=None):
-        if cfg.family in ("encdec", "vlm"):
-            raise NotImplementedError(
-                f"slot engine serves token-only decode families "
-                f"(dense/moe/ssm/hybrid), got {cfg.family!r} ({cfg.name}): "
-                f"its fused step carries no per-request encoder/vision "
-                f"states — see docs/serving.md")
         if temperature > 0.0 and rng is None:
             raise ValueError("temperature sampling needs an rng key: "
                              "Engine(..., temperature=t, rng=key)")
@@ -143,6 +158,12 @@ class Engine:
             ST.make_slot_decode_step(cfg, mode=mode,
                                      temperature=temperature))
         self._chunk_steps: Dict[int, Callable] = {}
+        # encdec/vlm: the prime dispatch that writes a slot's cross-K/V
+        # row (second slot-resident static operand) at admission, run
+        # concurrently with other slots' decoding like chunked prefill
+        self._prime_step = (
+            ST.jit_prime_step(ST.make_prime_step(cfg, mode=mode))
+            if R.needs_prime(cfg) else None)
 
     def _chunk_step(self, chunk: int) -> Callable:
         """The compiled prefill step for one bucket size (lazy, cached —
@@ -169,6 +190,13 @@ class Engine:
         with warnings.catch_warnings():
             warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
             cache = R.init_cache(self.cfg, self.num_slots, self.max_seq)
+            if self._prime_step is not None:
+                cache = self._prime_step(
+                    self.params,
+                    jnp.zeros((1, R.source_len(self.cfg),
+                               self.cfg.d_model), jnp.bfloat16),
+                    cache, jnp.zeros((), jnp.int32),
+                    jnp.zeros((), jnp.int32))
             _, cache, _ = self._fused(
                 jnp.zeros((self.num_slots, 1), jnp.int32), cache,
                 jnp.zeros((self.num_slots,), jnp.int32),
@@ -190,7 +218,8 @@ class Engine:
     def serve(self, requests: Sequence[EngineRequest], *,
               clock: str = "virtual",
               tick_s: Union[float, Callable[[int], float]] = 1e-3,
-              max_ticks: Optional[int] = None) -> EngineReport:
+              max_ticks: Optional[int] = None,
+              drop_missed_deadlines: bool = False) -> EngineReport:
         """Serve a whole request trace; return per-request outputs and
         achieved latency/throughput/occupancy metrics.
 
@@ -199,6 +228,12 @@ class Engine:
         used by tests and the offline benchmark.  ``clock="wall"``: time
         is the measured host clock — the live mode, where arrivals
         interleave with real step latency.
+
+        ``drop_missed_deadlines=True`` retires a slot the tick its
+        deadline passes (possibly mid-prefill, before any token): its
+        result is recorded with ``dropped=True``, whatever it generated,
+        and — crucially — the ``first_token_s = -1.0`` sentinel, which
+        the ttft aggregates below exclude.
         """
         if clock not in ("virtual", "wall"):
             raise ValueError(f"clock must be 'virtual' or 'wall': {clock!r}")
@@ -212,6 +247,8 @@ class Engine:
                 raise ValueError(
                     f"request {r.rid} needs {need} cache positions > "
                     f"max_seq={self.max_seq}")
+            if self._prime_step is not None:
+                _validate_source(self.cfg, r)
         reqs = sorted(requests, key=lambda r: r.arrival_s)
         S = self.num_slots
         pool = SlotPool(S)
@@ -222,6 +259,7 @@ class Engine:
         results: List[RequestResult] = []
         occupancy: List[int] = []
         admissions_while_busy = 0
+        dropped = 0
         ticks = 0
         gen_tokens = 0
         i, now = 0, 0.0
@@ -242,13 +280,33 @@ class Engine:
                 generating = any(s.active and not s.in_prefill
                                  for s in pool.slots)
                 cohort = sched.admit(now, pool.free_count, next_arrival)
-                if generating:
-                    admissions_while_busy += len(cohort)
+                admitted = 0
                 for req in cohort:
+                    if drop_missed_deadlines and now > req.deadline_s:
+                        # expired while queued: retire WITHOUT taking a
+                        # slot — no prime or prefill dispatch is wasted
+                        # on a request that is already dead
+                        results.append(RequestResult(
+                            rid=req.rid, tokens=[],
+                            arrival_s=req.arrival_s, admit_s=now,
+                            first_token_s=-1.0, finish_s=now, slot=-1,
+                            dropped=True))
+                        dropped += 1
+                        continue
+                    admitted += 1
                     st = pool.alloc(req.rid, req.prompt, req.max_new_tokens,
                                     now=now, arrival_s=req.arrival_s,
                                     deadline_s=req.deadline_s)
                     index[st.sid] = 0
+                    if self._prime_step is not None:
+                        # prime dispatch: write this slot's cross-K/V row
+                        # (and its xlen frontier) once, concurrently with
+                        # other slots' decoding — like a prefill chunk,
+                        # its cost lands on this tick's clock
+                        src, n_valid = _padded_source(self.cfg, req)
+                        cache = self._prime_step(
+                            self.params, src, cache,
+                            jnp.asarray(st.sid, jnp.int32), n_valid)
                     if self.prefill_chunk and len(req.prompt) > 1:
                         # all but the last prompt token go through the
                         # chunked prefill step; the last one rides the
@@ -256,6 +314,8 @@ class Engine:
                         st.chunk_left = len(req.prompt) - 1
                     else:
                         tokens[st.sid, 0] = st.next_input()
+                if generating:
+                    admissions_while_busy += admitted
                 # 3) idle: nothing active -> jump to the next event
                 if pool.active_count == 0:
                     if next_arrival is None and not sched.pending:
@@ -314,6 +374,18 @@ class Engine:
                 # 6) host bookkeeping: teacher-force prefill, collect
                 #    samples, retire finished slots for immediate reuse
                 for st in pool.active_slots():
+                    if drop_missed_deadlines and now > st.deadline_s:
+                        # deadline miss — possibly mid-prefill, before
+                        # any token: record with the first_token_s
+                        # sentinel intact (ttft aggregates exclude it)
+                        results.append(RequestResult(
+                            rid=st.rid, tokens=list(st.generated),
+                            arrival_s=st.arrival_s, admit_s=st.admit_s,
+                            first_token_s=st.first_token_s, finish_s=now,
+                            slot=st.sid, dropped=True))
+                        dropped += 1
+                        pool.free(st.sid)
+                        continue
                     if st.chunk_left > 0:          # mid-chunk: no sample
                         continue
                     st.pos += 1
@@ -340,8 +412,11 @@ class Engine:
 
         wall = time.perf_counter() - t0
         results.sort(key=lambda r: r.rid)
-        lat = [r.latency_s for r in results]
-        ttft = [r.ttft_s for r in results]
+        lat = [r.latency_s for r in results if not r.dropped]
+        # a request retired before emitting a token still carries the
+        # first_token_s = -1.0 sentinel: it must never leak a negative
+        # ttft into the aggregates
+        ttft = [r.ttft_s for r in results if r.emitted]
         dur = max(now, 1e-12)
         return EngineReport(
             results=results, ticks=ticks, generated_tokens=gen_tokens,
@@ -355,12 +430,49 @@ class Engine:
             num_slots=S,
             mean_ttft_s=float(np.mean(ttft)) if ttft else 0.0,
             p99_ttft_s=bt.p99(ttft),
-            prefill_chunk=self.prefill_chunk)
+            prefill_chunk=self.prefill_chunk,
+            dropped=dropped)
 
 
 # ---------------------------------------------------------------------------
 # sequential reference + trace synthesis (shared by tests / serve / bench)
 # ---------------------------------------------------------------------------
+
+def _validate_source(cfg: ArchConfig, req: EngineRequest) -> np.ndarray:
+    """Host-side shape/length checks only (no device array is built —
+    ``serve`` validates the whole trace up front before admitting
+    anything, and builds the padded array once, at admission)."""
+    smax = R.source_len(cfg)
+    if req.source is None:
+        raise ValueError(
+            f"request {req.rid}: {cfg.family!r} serves against per-request "
+            f"source embeddings; EngineRequest.source must be "
+            f"(src_len <= {smax}, {cfg.d_model})")
+    src = np.asarray(req.source, np.float32)
+    if src.ndim != 2 or src.shape[1] != cfg.d_model:
+        raise ValueError(
+            f"request {req.rid}: source must be (src_len, {cfg.d_model}), "
+            f"got {src.shape}")
+    n = src.shape[0]
+    if not 0 < n <= smax:
+        raise ValueError(
+            f"request {req.rid}: source length {n} outside (0, {smax}]")
+    return src
+
+
+def _padded_source(cfg: ArchConfig, req: EngineRequest):
+    """One request's source embeddings padded to the static prime shape:
+    (1, source_len(cfg), d_model) bf16 plus the () int32 count of real
+    positions.  Shared by the engine's prime dispatch and the sequential
+    reference, so both prime with byte-identical inputs — the pad is
+    masked behind the row's xlen frontier at decode time."""
+    src = _validate_source(cfg, req)
+    n = src.shape[0]
+    buf = np.zeros((1, R.source_len(cfg), cfg.d_model), np.float32)
+    buf[0, :n] = src
+    return (jnp.asarray(buf, jnp.bfloat16),
+            jnp.asarray(n, jnp.int32))
+
 
 def reference_outputs(cfg: ArchConfig, params,
                       requests: Sequence[EngineRequest], *,
@@ -378,19 +490,32 @@ def reference_outputs(cfg: ArchConfig, params,
     if temperature > 0.0 and rng is None:
         raise ValueError("temperature sampling needs an rng key")
     decode = jax.jit(ST.make_decode_step(cfg, mode=mode))
+    # encdec/vlm: the same prime computation the engine dispatches, at a
+    # pool of one slot (no donation: the reference is not a hot path)
+    prime = (jax.jit(ST.make_prime_step(cfg, mode=mode))
+             if R.needs_prime(cfg) else None)
     out: Dict[int, List[int]] = {}
     for r in sorted(requests, key=lambda x: x.rid):
         cache = R.init_cache(cfg, 1, max_seq)
+        if prime is not None:
+            src, n_valid = _padded_source(cfg, r)
+            cache = prime(params, src, cache,
+                          jnp.zeros((), jnp.int32), n_valid)
         tok = None
         gen: List[int] = []
         feed = list(r.prompt)
         pos = 0
         while len(gen) < r.max_new_tokens:
             cur = feed[pos] if pos < len(feed) else tok
+            # prime families decode with a (1,)-vector index: the per-row
+            # path is where the xlen frontier masks the padded source, and
+            # the engine's slot rows take exactly that path
+            idx = (jnp.asarray([pos], jnp.int32) if prime is not None
+                   else jnp.asarray(pos, jnp.int32))
             logits, cache = decode(
                 params,
                 {"tokens": jnp.asarray([[cur]], jnp.int32),
-                 "cache_index": jnp.asarray(pos, jnp.int32)}, cache)
+                 "cache_index": idx}, cache)
             pos += 1
             if pos >= len(feed):
                 if temperature > 0.0:
@@ -408,17 +533,32 @@ def reference_outputs(cfg: ArchConfig, params,
 def synthetic_requests(n: int, *, rate_per_s: float, vocab: int,
                        prompt_len: int = 4, max_new_tokens: int = 8,
                        deadline_s: float = float("inf"),
-                       seed: int = 0) -> List[EngineRequest]:
+                       seed: int = 0,
+                       source_shape: Optional[Tuple[int, int]] = None
+                       ) -> List[EngineRequest]:
     """Deterministic pseudo-Poisson request trace with synthetic prompts
-    (derived from the rid, so any two runs see identical streams)."""
+    (derived from the rid, so any two runs see identical streams).
+
+    ``source_shape=(source_len, d_model)`` additionally attaches
+    per-request source embeddings for the prime families (encdec/vlm):
+    rid-seeded gaussian frames/patches whose length varies across
+    requests (full, -1, -2 cyclically), so a shared slot pool holds rows
+    of different xlen frontiers at once."""
     arr = bt.poisson_arrivals(rate_per_s, n, 0.0, seed)
     reqs = []
     for a in arr:
         prompt = tuple(1 + (a.rid * 7 + 3 * j) % (vocab - 1)
                        for j in range(prompt_len))
+        source = None
+        if source_shape is not None:
+            smax, d = source_shape
+            src_len = max(1, smax - a.rid % 3)
+            g = np.random.default_rng((seed + 1) * 1_000_003 + a.rid)
+            source = g.standard_normal((src_len, d)).astype(np.float32)
         reqs.append(EngineRequest(
             rid=a.rid, prompt=prompt, max_new_tokens=max_new_tokens,
             arrival_s=a.arrival_s,
             deadline_s=(a.arrival_s + deadline_s
-                        if deadline_s != float("inf") else float("inf"))))
+                        if deadline_s != float("inf") else float("inf")),
+            source=source))
     return reqs

@@ -2,11 +2,14 @@
 
 Pure host-side state (no jax): which slot serves which request, how far
 each request has advanced, what it has generated.  The device-side cache
-row `sid` belongs to whichever request currently owns slot `sid`; a freed
-slot is reusable immediately — per-row masking (positional KV reads stop
-at the slot's own frontier) and the recurrent families' reset-at-
-position-0 rule make stale cache contents invisible, so there is nothing
-to scrub between tenants.
+row `sid` belongs to whichever request currently owns slot `sid` — its
+positional KV, its recurrent state, and (encdec/vlm) its primed
+cross-attention K/V row.  A freed slot is reusable immediately: per-row
+masking (positional KV reads stop at the slot's own frontier, cross
+reads at the row's primed ``xlen``), the recurrent families' reset-at-
+position-0 rule, and the prime dispatch overwriting the whole cross row
+at the next admission make stale cache contents invisible, so there is
+nothing to scrub between tenants.
 """
 from __future__ import annotations
 

@@ -257,8 +257,18 @@ def default_cache_path() -> str:
 class AutotuneCache:
     """JSON-backed (shape, mode, dtype, backend) -> TileConfig store.
 
-    Writes are atomic (tmp file + rename) and tolerated to fail on
-    read-only filesystems — the cache is an accelerator, not a dependency.
+    Concurrency discipline (same as ``checkpoint/manager.py``): every
+    write goes to a same-directory ``*.tmp`` that is flushed, fsync'd and
+    ``os.replace``d into place, so a reader can never observe a torn
+    file.  Before replacing, the entries already on disk are re-read and
+    merged, under the in-process lock plus a best-effort ``flock`` on a
+    ``.lock`` sidecar — so two bench processes tuning different shapes
+    keep each other's winners (last writer wins only on identical keys;
+    where ``flock`` is unavailable the merge still narrows the lost-
+    update window to the read-merge-replace itself).  A torn or
+    stale-schema file on disk is discarded, not fatal — the analytic
+    model refills it.  Writes are tolerated to fail on read-only
+    filesystems; the cache is an accelerator, not a dependency.
     ``AutotuneCache(path="")`` gives a purely in-memory cache (tests).
     """
 
@@ -273,20 +283,20 @@ class AutotuneCache:
         bias = "bias" if has_bias else "nobias"
         return f"{m}x{k}x{n}|{mode}|{x_dtype}>{out_dtype}|{bias}|{backend}"
 
+    def _read_disk(self) -> Dict[str, dict]:
+        """Entries currently on disk; {} for missing/torn/stale files."""
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+            if data.get("schema_version") == SCHEMA_VERSION:
+                return dict(data.get("entries", {}))
+        except (OSError, ValueError):
+            pass
+        return {}
+
     def _load(self) -> Dict[str, dict]:
         if self._entries is None:
-            if not self.path:               # in-memory only
-                self._entries = {}
-                return self._entries
-            try:
-                with open(self.path) as f:
-                    data = json.load(f)
-                if data.get("schema_version") == SCHEMA_VERSION:
-                    self._entries = dict(data.get("entries", {}))
-                else:                       # stale schema: start over
-                    self._entries = {}
-            except (OSError, ValueError):
-                self._entries = {}
+            self._entries = self._read_disk() if self.path else {}
         return self._entries
 
     def get(self, key: str) -> Optional[TileConfig]:
@@ -308,11 +318,33 @@ class AutotuneCache:
                 d = os.path.dirname(self.path)
                 if d:
                     os.makedirs(d, exist_ok=True)
-                fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tmp")
-                with os.fdopen(fd, "w") as f:
-                    json.dump({"schema_version": SCHEMA_VERSION,
-                               "entries": entries}, f, indent=1)
-                os.replace(tmp, self.path)
+                lockf = None
+                try:                         # cross-PROCESS exclusion
+                    import fcntl
+                    lf = open(self.path + ".lock", "w")
+                    try:
+                        fcntl.flock(lf, fcntl.LOCK_EX)
+                        lockf = lf
+                    except OSError:          # e.g. ENOLCK on NFS
+                        lf.close()
+                except (ImportError, OSError):
+                    pass                     # best-effort: merge below
+                try:
+                    # merge whatever landed on disk since we loaded, so
+                    # a concurrent bench run's winners survive this write
+                    merged = self._read_disk()
+                    merged.update(entries)
+                    self._entries = entries = merged
+                    fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tmp")
+                    with os.fdopen(fd, "w") as f:
+                        json.dump({"schema_version": SCHEMA_VERSION,
+                                   "entries": entries}, f, indent=1)
+                        f.flush()
+                        os.fsync(f.fileno())
+                    os.replace(tmp, self.path)
+                finally:
+                    if lockf is not None:
+                        lockf.close()        # releases the flock
             except OSError:
                 pass                         # read-only fs: stay in-memory
 

@@ -16,18 +16,20 @@ tokens/s, and slot occupancy.
   python -m repro.launch.serve --arch starcoder2-3b --reduced \
       --deadline-ms 50 --rate 200
 
-Every token-only decode family serves through the engine — dense, moe,
-ssm, and hybrid all share the one fused slot step (per-row cache
-indices; see docs/serving.md).  ``--prefill-chunk`` turns on chunked
-prefill (admission-to-first-token drops from prompt_len ticks to
+EVERY registry family serves through the engine — dense, moe, ssm and
+hybrid share the one fused slot step (per-row cache indices), and the
+encoder-conditioned families (encdec/vlm) ride the same step behind a
+per-slot prime dispatch that writes each request's cross-attention K/V
+into its slot row at admission (see docs/serving.md; time-to-first-token
+includes the prime cost).  ``--prefill-chunk`` turns on chunked prefill
+(admission-to-first-token drops from prompt_len ticks to
 ``ceil(prompt_len/chunk)``), ``--temperature`` turns on per-row
 ``fold_in(rng, position)`` sampling.  ``--sim`` runs the virtual-time
 BatchQueue simulator backend instead (same admission policy, no model
-execution) — the Table 4 sanity check; only encoder-conditioned families
-(encdec/vlm) still fall back to it.  The fused multi-token decode loop
-is still timed separately (``--decode-tokens``): it remains the right
-tool for fixed-length batch completion, while the engine serves the
-ragged live stream.
+execution) — the Table 4 sanity check.  The fused multi-token decode
+loop is still timed separately (``--decode-tokens``): it remains the
+right tool for fixed-length batch completion, while the engine serves
+the ragged live stream.
 """
 from __future__ import annotations
 
@@ -176,7 +178,7 @@ def main(argv=None):
           f"chosen batch={batch}  modeled p99={model.p99_latency(batch)*1e3:.2f} ms"
           f"  modeled IPS={model.ips(batch):,.0f}")
 
-    if args.decode_tokens > 0 and cfg.family not in ("encdec", "vlm"):
+    if args.decode_tokens > 0:
         bb, tps, dt = measure_decode_tps(
             cfg, params, mode, batch, s_max=max(args.seq * 2, 64),
             num_tokens=args.decode_tokens, seed=args.seed)
@@ -184,12 +186,7 @@ def main(argv=None):
               f"{args.decode_tokens} steps in {dt*1e3:.1f} ms -> "
               f"{tps:,.0f} tok/s")
 
-    if args.sim or cfg.family in ("encdec", "vlm"):
-        if not args.sim:
-            print(f"[serve] {cfg.family!r} family: the fused slot step "
-                  f"carries no per-request encoder/vision states "
-                  f"(docs/serving.md); falling back to the simulator "
-                  f"backend")
+    if args.sim:
         reqs = bt.poisson_arrivals(args.rate, args.n_requests, deadline,
                                    args.seed)
         q = bt.BatchQueue(model.service_time, max_batch=batch)
@@ -224,7 +221,8 @@ def main(argv=None):
     reqs = E.synthetic_requests(
         args.n_requests, rate_per_s=args.rate, vocab=cfg.vocab,
         prompt_len=args.prompt_len, max_new_tokens=args.gen_tokens,
-        deadline_s=deadline, seed=args.seed)
+        deadline_s=deadline, seed=args.seed,
+        source_shape=R.source_shape(cfg))
     eng.warmup()         # compile before the clock starts: the measured
     rep = eng.serve(reqs, clock="wall")       # p99 is serving, not tracing
     deadline_of = {r.rid: r.deadline_s for r in reqs}

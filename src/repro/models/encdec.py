@@ -105,7 +105,8 @@ def encode(params: dict, frame_embeds: Array, cfg: ArchConfig, *,
 
 
 def _dec_layer(cfg, mode, lp, x, enc_out, positions, kv_cache=None,
-               cache_index=None, valid_len=None, xattn_precomputed=None):
+               cache_index=None, valid_len=None, xattn_precomputed=None,
+               xattn_valid_len=None):
     acfg_s = _attn_cfg(cfg, causal=True)
     acfg_x = _attn_cfg(cfg, causal=False)
     h = L.layernorm(lp["ln_self"], x)
@@ -116,7 +117,8 @@ def _dec_layer(cfg, mode, lp, x, enc_out, positions, kv_cache=None,
     h = L.layernorm(lp["ln_cross"], x)
     a, _ = L.attention(lp["cross_attn"], h, acfg_x, mode=mode,
                        xattn_kv=None if xattn_precomputed else enc_out,
-                       xattn_precomputed=xattn_precomputed)
+                       xattn_precomputed=xattn_precomputed,
+                       xattn_valid_len=xattn_valid_len)
     x = x + a
     h = L.layernorm(lp["ln_mlp"], x)
     x = x + L.mlp(lp["mlp"], h, gated=False, activation="gelu", mode=mode)
@@ -153,19 +155,31 @@ def init_cache(cfg: ArchConfig, batch: int, s_max: int,
     §Perf iteration D: the encoder output is static across decode steps,
     so each decoder layer's cross K/V projections run once at prime time —
     the per-step decode never touches enc_out or the wk/wv matmuls
-    (baseline: recomputed every step for every layer)."""
+    (baseline: recomputed every step for every layer).
+
+    ``xlen`` (B,) is the per-row cross frontier: decode masks each row's
+    source reads at its own primed length, so the slot engine can hold a
+    different request's source per row.  It initializes to the full
+    static source length so un-primed batchwide flows keep attending the
+    whole (zero) source, exactly as before."""
     k, v = L.init_kv_cache(batch, s_max, cfg.n_kv_heads, cfg.head_dim, dtype)
     zeros = jnp.zeros((cfg.n_layers,) + k.shape, dtype)
     xshape = (cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv_heads,
               cfg.head_dim)
     return {"k": zeros, "v": jnp.zeros_like(zeros),
-            "xk": jnp.zeros(xshape, dtype), "xv": jnp.zeros(xshape, dtype)}
+            "xk": jnp.zeros(xshape, dtype), "xv": jnp.zeros(xshape, dtype),
+            "xlen": jnp.full((batch,), cfg.enc_seq, jnp.int32)}
 
 
-def prime_cache(params, cache, encoder_embeds, cfg, *, mode=FP):
-    """Run the encoder once and pre-project every decoder layer's cross
-    K/V; decode steps reuse both."""
-    enc_out = encode(params, encoder_embeds, cfg, mode=mode)
+def cache_batch_axes(cache: dict) -> dict:
+    """Batch (slot) axis per cache leaf: layer-stacked leaves keep batch
+    at axis 1; the per-row cross frontier ``xlen`` IS the batch axis."""
+    return {k: (0 if k == "xlen" else 1) for k in cache}
+
+
+def _cross_kv(params, enc_out, cfg, *, mode=FP):
+    """Pre-project every decoder layer's cross K/V from encoder output
+    (shared by the batchwide prime and the engine's per-slot prime)."""
     b, se, d = enc_out.shape
     kvh, hd = cfg.n_kv_heads, cfg.head_dim
 
@@ -177,24 +191,70 @@ def prime_cache(params, cache, encoder_embeds, cfg, *, mode=FP):
         return None, (xk, xv)
 
     _, (xk, xv) = jax.lax.scan(project, None, params["dec_layers"])
+    return xk, xv
+
+
+def prime_cache(params, cache, encoder_embeds, cfg, *, mode=FP):
+    """Run the encoder once and pre-project every decoder layer's cross
+    K/V; decode steps reuse both."""
+    enc_out = encode(params, encoder_embeds, cfg, mode=mode)
+    xk, xv = _cross_kv(params, enc_out, cfg, mode=mode)
     return dict(cache, xk=xk.astype(cache["xk"].dtype),
-                xv=xv.astype(cache["xv"].dtype))
+                xv=xv.astype(cache["xv"].dtype),
+                xlen=jnp.full((enc_out.shape[0],), enc_out.shape[1],
+                              jnp.int32))
+
+
+def prime_slot(params, source, n_valid, cfg, *, mode=FP):
+    """Per-request prime for the slot engine: encode ONE request's source
+    (``source`` (1, enc_seq, D), padded to the static length) and return
+    the slot-resident leaves a prime dispatch scatters into row ``sid``
+    of the pooled cache — pre-projected cross K/V plus the row's cross
+    frontier ``n_valid`` (decode masks cross reads past it).  The
+    encoder attends over the full padded input — Whisper's own
+    pad-to-30s recipe, so frames near the frontier legitimately see the
+    zero pad; what the frontier guarantees is that K/V *past* it (pad
+    projections or a previous tenant's stale tail) is never read.
+    No remat: priming is inference, there is no backward pass."""
+    enc_out = encode(params, source, cfg, mode=mode, remat=False)
+    xk, xv = _cross_kv(params, enc_out, cfg, mode=mode)
+    return {"xk": xk, "xv": xv,
+            "xlen": jnp.asarray(n_valid, jnp.int32).reshape(1)}
 
 
 def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
                 cfg: ArchConfig, *, mode: QuantMode = FP
                 ) -> Tuple[Array, dict]:
+    """One decode step.  ``cache_index`` is scalar () (lockstep batch) or
+    (B,) per-row for the slot engine: learned decoder positions, cache
+    writes and self-attention masks become per-row, and every row's
+    cross-attention reads mask at its OWN primed frontier
+    (``cache["xlen"]``) — the per-slot primed cross-K/V contract."""
     b, s = tokens.shape
     x = L.embed(params["embed"], tokens)
-    pos_ids = (cache_index + jnp.arange(s)) % DEC_POS_TABLE
-    x = x + params["dec_pos"][pos_ids][None].astype(x.dtype)
-    positions = cache_index + jnp.arange(s)[None, :]
+    cache_index = jnp.asarray(cache_index)
+    if cache_index.ndim:                    # (B,): per-slot positions
+        pos_ids = (cache_index[:, None] + jnp.arange(s)[None, :]) \
+            % DEC_POS_TABLE
+        x = x + params["dec_pos"][pos_ids].astype(x.dtype)
+        positions = cache_index[:, None] + jnp.arange(s)[None, :]
+    else:
+        pos_ids = (cache_index + jnp.arange(s)) % DEC_POS_TABLE
+        x = x + params["dec_pos"][pos_ids][None].astype(x.dtype)
+        positions = cache_index + jnp.arange(s)[None, :]
+
+    # per-row cross frontier only on the slot-engine (vector) path: the
+    # lockstep batch primed batchwide attends exactly what it primed, so
+    # masking is a no-op there and would only disable the TPU flash
+    # cross-attention kernel
+    xlen = cache["xlen"] if cache_index.ndim else None
 
     def body(x, lp_and_kv):
         lp, ck, cv, xk, xv = lp_and_kv
         out, new_kv = _dec_layer(cfg, mode, lp, x, None, positions,
                                  kv_cache=(ck, cv), cache_index=cache_index,
-                                 xattn_precomputed=(xk, xv))
+                                 xattn_precomputed=(xk, xv),
+                                 xattn_valid_len=xlen)
         return out, new_kv
 
     x, (nk, nv) = jax.lax.scan(

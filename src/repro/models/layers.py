@@ -131,7 +131,8 @@ def _cache_write(c: Array, new: Array, idx: Array) -> Array:
 
 def _chunked_attention(q: Array, k: Array, v: Array, *, causal: bool,
                        window: Optional[int], q_block: int,
-                       q_offset: int = 0) -> Array:
+                       q_offset: int = 0,
+                       kv_valid_len: Optional[Array] = None) -> Array:
     """Memory-bounded attention: scan over query blocks, masked scores.
 
     q: (B, Sq, H, hd); k, v: (B, Sk, H, hd).  Keeps the live score tensor at
@@ -169,6 +170,11 @@ def _chunked_attention(q: Array, k: Array, v: Array, *, causal: bool,
         if window is not None:
             mask &= kpos[None, :] > qpos[:, None] - window
         scores = jnp.where(mask[None, None], scores, -1e30)
+        if kv_valid_len is not None:
+            # per-row KV frontier (slot engine: each row's primed source
+            # has its own valid length)
+            vmask = kpos[None, :] < kv_valid_len.reshape(-1, 1)   # (B, Sk)
+            scores = jnp.where(vmask[:, None, None, :], scores, -1e30)
         probs = jax.nn.softmax(scores, axis=-1)
         out = jnp.einsum("bhqk,bhkd->bhqd", probs, vt.astype(jnp.float32))
         return carry, out.astype(q.dtype)
@@ -191,6 +197,7 @@ def attention(p: dict, x: Array, cfg: AttnConfig, *,
               positions_k: Optional[Array] = None,
               xattn_kv: Optional[Array] = None,
               xattn_precomputed: Optional[Tuple[Array, Array]] = None,
+              xattn_valid_len: Optional[Array] = None,
               append_only: bool = False,
               ) -> Tuple[Array, Optional[Tuple[Array, Array]]]:
     """GQA attention with three modes:
@@ -209,6 +216,11 @@ def attention(p: dict, x: Array, cfg: AttnConfig, *,
     - cross-attention: xattn_kv = encoder/vision states (B, S_src, D);
       non-causal over the source (cache unused; K/V recomputed — static
       source states make this a pure matmul, MXU-friendly).
+      ``xattn_precomputed`` = (K, V) projected once at prime time (the
+      slot engine's per-slot primed cross operand); ``xattn_valid_len``
+      () or (B,) masks each row's source reads at its own primed length,
+      so a slot row holding a shorter source (or a previous tenant's
+      stale tail) contributes nothing past the frontier.
     """
     b, s, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -364,9 +376,11 @@ def attention(p: dict, x: Array, cfg: AttnConfig, *,
         vfull = _expand_kv(v, h)
         causal = cfg.causal and xattn_kv is None
         window = cfg.window if xattn_kv is None else None
-        if jax.default_backend() == "tpu":
+        if jax.default_backend() == "tpu" and xattn_valid_len is None:
             # Pallas fused flash kernel: probs never leave VMEM (the
-            # Unified-Buffer discipline); HBM traffic = Q+K+V+O.
+            # Unified-Buffer discipline); HBM traffic = Q+K+V+O.  The
+            # kernel carries no per-row KV frontier, so a primed source
+            # with per-row valid lengths takes the masked chunked path.
             from repro.kernels import ops as kops
             out = kops.flash_attention(q, kfull, vfull, causal=causal,
                                        window=window)
@@ -374,7 +388,8 @@ def attention(p: dict, x: Array, cfg: AttnConfig, *,
             # pure-JAX chunked path: identical math (tests assert so),
             # used on CPU and in the dry-run.
             out = _chunked_attention(q, kfull, vfull, causal=causal,
-                                     window=window, q_block=cfg.q_block)
+                                     window=window, q_block=cfg.q_block,
+                                     kv_valid_len=xattn_valid_len)
     out = constrain(out, "act_heads")
     out = linear(p["wo"], out.reshape(b, s, h * hd), mode=mode)
     return constrain(out, "act"), new_cache

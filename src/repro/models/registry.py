@@ -70,6 +70,44 @@ def apply_decode(params, cfg: ArchConfig, batch: dict, cache, *,
 # slot-engine contract (per-row decode state; see docs/serving.md)
 # ---------------------------------------------------------------------------
 
+def needs_prime(cfg: ArchConfig) -> bool:
+    """True when the family decodes against per-request primed state
+    (encoder frames / vision patches) that must be written into a slot
+    row at admission by a prime dispatch (encdec/vlm)."""
+    return hasattr(module_for(cfg), "prime_slot")
+
+
+def source_len(cfg: ArchConfig) -> int:
+    """Static source length of a prime dispatch: how many frames/patches
+    one slot row's primed cross-K/V holds (0 for token-only families)."""
+    if cfg.family == "encdec":
+        return cfg.enc_seq
+    if cfg.family == "vlm":
+        return cfg.n_patches
+    return 0
+
+
+def source_shape(cfg: ArchConfig) -> Optional[tuple]:
+    """(source_len, d_model) of one request's source embeddings, or None
+    for token-only families — the single contract request generators
+    (serve CLI, benches, tests) build per-request sources against."""
+    if not needs_prime(cfg):
+        return None
+    return (source_len(cfg), cfg.d_model)
+
+
+def prime_slot(cfg: ArchConfig, params, source, n_valid, *,
+               mode: QuantMode = FP) -> dict:
+    """Run one request's encoder / vision tower and return the
+    slot-resident primed leaves (pre-projected cross K/V + the row's
+    ``xlen`` frontier) that a prime dispatch scatters into the pooled
+    cache at the slot's row.  ``source`` is (1, source_len(cfg), D)
+    padded to the static length; ``n_valid`` () is how many positions
+    are real (decode masks reads past it)."""
+    return module_for(cfg).prime_slot(params, source, n_valid, cfg,
+                                      mode=mode)
+
+
 def cache_batch_axes(cfg: ArchConfig, cache: dict) -> dict:
     """Batch (slot) axis per cache leaf.  Families whose cache stacks
     extra leading dims (hybrid groups) override ``cache_batch_axes`` in

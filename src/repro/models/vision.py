@@ -115,7 +115,12 @@ def init_cache(cfg: ArchConfig, batch: int, s_max: int,
                dtype=jnp.bfloat16) -> dict:
     """Self-attn KV cache + PRE-PROJECTED vision cross K/V (§Perf iter D:
     patch embeddings are static across decode, so each cross-attn layer's
-    wk/wv run once at prime time, not per step)."""
+    wk/wv run once at prime time, not per step).
+
+    ``xlen`` (B,) is the per-row cross frontier (slot engine: each row
+    masks its patch reads at its own primed count); it initializes to
+    the full static patch count so un-primed batchwide flows behave
+    exactly as before."""
     n_groups, leftover = _layout(cfg)
     k, v = L.init_kv_cache(batch, s_max, cfg.n_kv_heads, cfg.head_dim, dtype)
     xshape = (n_groups, batch, cfg.n_patches, cfg.n_kv_heads, cfg.head_dim)
@@ -124,6 +129,7 @@ def init_cache(cfg: ArchConfig, batch: int, s_max: int,
         "v": jnp.zeros((n_groups, cfg.xattn_every) + k.shape, dtype),
         "xk": jnp.zeros(xshape, dtype),
         "xv": jnp.zeros(xshape, dtype),
+        "xlen": jnp.full((batch,), cfg.n_patches, jnp.int32),
     }
     if leftover:
         cache["lo_k"] = jnp.zeros((leftover,) + k.shape, dtype)
@@ -131,7 +137,21 @@ def init_cache(cfg: ArchConfig, batch: int, s_max: int,
     return cache
 
 
-def prime_cache(params, cache, vision_embeds, cfg, *, mode=FP):
+def cache_batch_axes(cache: dict) -> dict:
+    """Batch (slot) axis per cache leaf: grouped self-KV stacks
+    (group, layer-in-group) ahead of batch, cross K/V stacks the group
+    axis only, leftover layers stack one layer axis, and ``xlen`` IS the
+    batch axis."""
+    axes = {"k": 2, "v": 2, "xk": 1, "xv": 1, "xlen": 0}
+    if "lo_k" in cache:
+        axes["lo_k"] = 1
+        axes["lo_v"] = 1
+    return axes
+
+
+def _cross_kv(params, vision_embeds, cfg, *, mode=FP):
+    """Pre-project every cross-attn group's K/V from patch embeddings
+    (shared by the batchwide prime and the engine's per-slot prime)."""
     from repro.core.qlinear import linear
     b, npatch, d = vision_embeds.shape
     kvh, hd = cfg.n_kv_heads, cfg.head_dim
@@ -145,16 +165,47 @@ def prime_cache(params, cache, vision_embeds, cfg, *, mode=FP):
         return None, (xk, xv)
 
     _, (xk, xv) = jax.lax.scan(project, None, params["groups"])
+    return xk, xv
+
+
+def prime_cache(params, cache, vision_embeds, cfg, *, mode=FP):
+    xk, xv = _cross_kv(params, vision_embeds, cfg, mode=mode)
     return dict(cache, xk=xk.astype(cache["xk"].dtype),
-                xv=xv.astype(cache["xv"].dtype))
+                xv=xv.astype(cache["xv"].dtype),
+                xlen=jnp.full((vision_embeds.shape[0],),
+                              vision_embeds.shape[1], jnp.int32))
+
+
+def prime_slot(params, source, n_valid, cfg, *, mode=FP):
+    """Per-request prime for the slot engine: project ONE request's patch
+    embeddings (``source`` (1, n_patches, D), padded to the static
+    count) into the slot-resident cross K/V leaves plus the row's
+    frontier ``n_valid`` (real patches; reads past it are masked)."""
+    xk, xv = _cross_kv(params, source, cfg, mode=mode)
+    return {"xk": xk, "xv": xv,
+            "xlen": jnp.asarray(n_valid, jnp.int32).reshape(1)}
 
 
 def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
                 cfg: ArchConfig, *, mode: QuantMode = FP
                 ) -> Tuple[Array, dict]:
+    """One decode step.  ``cache_index`` is scalar () (lockstep batch) or
+    (B,) per-row for the slot engine: RoPE positions, cache writes and
+    self-attention masks become per-row, and every row's gated
+    cross-attention masks patch reads at its OWN primed frontier
+    (``cache["xlen"]``) — the per-slot primed cross-K/V contract."""
     b, s = tokens.shape
     x = L.embed(params["embed"], tokens)
-    positions = cache_index + jnp.arange(s)[None, :]
+    cache_index = jnp.asarray(cache_index)
+    if cache_index.ndim:                    # (B,): per-slot positions
+        positions = cache_index[:, None] + jnp.arange(s)[None, :]
+    else:
+        positions = cache_index + jnp.arange(s)[None, :]
+    # per-row cross frontier only on the slot-engine (vector) path: the
+    # lockstep batch primed batchwide attends exactly what it primed, so
+    # masking is a no-op there and would only disable the TPU flash
+    # cross-attention kernel
+    xlen = cache["xlen"] if cache_index.ndim else None
     acfg = TF.attn_config(cfg)
 
     def one_layer(x, lp, ck, cv):
@@ -180,7 +231,8 @@ def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
                                     ck[-1], cv[-1])
         h = TF.norm_apply(cfg, gp["xattn"]["ln_x"], x)
         a, _ = L.attention(gp["xattn"]["xattn"], h, _xattn_cfg(cfg),
-                           mode=mode, xattn_precomputed=(xk, xv))
+                           mode=mode, xattn_precomputed=(xk, xv),
+                           xattn_valid_len=xlen)
         gated = (jnp.tanh(gp["xattn"]["x_gate"])
                  * a.astype(jnp.float32)).astype(x.dtype)
         x = constrain(x + gated, "act")

@@ -335,6 +335,11 @@ def make_prefill_chunk_step(cfg: ArchConfig, *, mode: QuantMode = FP,
     Wrap with :func:`jit_prefill_chunk_step` to donate the cache.
     """
     decode = make_decode_step(cfg, mode=mode)
+    # prime families decode with a (1,)-vector index inside the chunk
+    # scan: the per-row path is where their xlen frontier masks the
+    # padded source, and the fused slot step takes exactly that path —
+    # token-only families keep the scalar (lockstep) variant bit-for-bit
+    vec_index = R.needs_prime(cfg)
 
     def step(params, tokens, cache, sid, start, n_valid):
         axes = R.cache_batch_axes(cfg, cache)
@@ -345,7 +350,9 @@ def make_prefill_chunk_step(cfg: ArchConfig, *, mode: QuantMode = FP,
             slot, idx = carry
             tok, i = inp
             _, new_slot = decode(
-                params, {"tokens": tok.reshape(1, 1), "cache_index": idx},
+                params, {"tokens": tok.reshape(1, 1),
+                         "cache_index": (idx.reshape(1) if vec_index
+                                         else idx)},
                 slot)
             keep = i < n_valid
             slot = jax.tree_util.tree_map(
@@ -364,6 +371,46 @@ def make_prefill_chunk_step(cfg: ArchConfig, *, mode: QuantMode = FP,
 
 def jit_prefill_chunk_step(step: Callable) -> Callable:
     """jit a prefill chunk step with the KV cache donated (argument 2)."""
+    return jax.jit(step, donate_argnums=(2,))
+
+
+def make_prime_step(cfg: ArchConfig, *, mode: QuantMode = FP) -> Callable:
+    """Prime dispatch for ONE slot of the engine's pool: run the request's
+    encoder / vision tower once and scatter the pre-projected cross-K/V
+    (plus the row's ``xlen`` frontier) into the slot's row of the pooled
+    cache — the second slot-resident static operand that lets encdec/vlm
+    decode through the same fused slot step as every other family.
+
+    Returns ``step(params, source, cache, sid, n_valid) -> cache`` with
+    ``source`` (1, source_len(cfg), D) the request's frame/patch
+    embeddings padded to the static source length, ``sid`` () int32 the
+    slot row, and ``n_valid`` () int32 how many source positions are
+    real.  Decode masks cross reads at the frontier, so K/V past
+    ``n_valid`` — pad projections, or a previous tenant's stale tail —
+    is never read.  The pad itself is deterministic zero frames: the
+    vlm's position-wise projections are pad-exact, while the encdec
+    encoder attends over the padded input like Whisper encodes its
+    pad-to-30s silence (both the engine and the sequential reference
+    prime with byte-identical padded sources, so the semantics is one
+    and parity is exact).  One static shape, one compilation, like every
+    other engine dispatch.  Wrap with :func:`jit_prime_step` to donate
+    the cache.
+    """
+
+    def step(params, source, cache, sid, n_valid):
+        leaves = R.prime_slot(cfg, params, source, n_valid, mode=mode)
+        axes = R.cache_batch_axes(cfg, cache)
+        out = dict(cache)
+        for k, v in leaves.items():
+            out[k] = jax.lax.dynamic_update_slice_in_dim(
+                cache[k], v.astype(cache[k].dtype), sid, axis=axes[k])
+        return out
+
+    return step
+
+
+def jit_prime_step(step: Callable) -> Callable:
+    """jit a prime step with the pooled cache donated (argument 2)."""
     return jax.jit(step, donate_argnums=(2,))
 
 

@@ -153,6 +153,41 @@ def test_cache_roundtrip_and_schema(tmp_path):
     assert again == tc
 
 
+def test_cache_recovers_from_injected_partial_write(tmp_path):
+    """A torn cache file (a writer that died mid-file, or a
+    pre-atomic-discipline interleaving) is discarded on load — never
+    fatal — and the next atomic put leaves a valid file again."""
+    import os
+    path = tmp_path / "autotune.json"
+    tc = AT.TileConfig(16, 128, 128)
+    AT.AutotuneCache(str(path)).put("k1", tc)
+    text = path.read_text()
+    path.write_text(text[:len(text) // 2])          # inject the tear
+    torn = AT.AutotuneCache(str(path))
+    assert torn.get("k1") is None                   # discarded, no crash
+    torn.put("k2", tc)
+    reread = json.loads(path.read_text())           # valid JSON again
+    assert reread["schema_version"] == AT.SCHEMA_VERSION
+    assert AT.AutotuneCache(str(path)).get("k2") == tc
+    # the tmp staging file was replaced, not left behind (the .lock
+    # sidecar for cross-process exclusion is expected)
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+
+def test_cache_concurrent_writers_merge_not_clobber(tmp_path):
+    """Two processes tuning different shapes against one cache file:
+    the second writer's read-merge-replace must keep the first's entry
+    (a plain rewrite of its own stale snapshot would drop it)."""
+    path = str(tmp_path / "autotune.json")
+    a, b = AT.AutotuneCache(path), AT.AutotuneCache(path)
+    assert b.get("anything") is None       # b snapshots the (empty) file
+    a.put("ka", AT.TileConfig(16, 128, 128))
+    b.put("kb", AT.TileConfig(32, 256, 256))
+    fresh = AT.AutotuneCache(path)
+    assert fresh.get("ka") == AT.TileConfig(16, 128, 128)
+    assert fresh.get("kb") == AT.TileConfig(32, 256, 256)
+
+
 def test_cache_hit_skips_ranking(tmp_path, monkeypatch):
     cache = AT.AutotuneCache(str(tmp_path / "autotune.json"))
     first = AT.best_config(16, 512, 512, backend="cpu", cache=cache)

@@ -79,6 +79,34 @@ class TestBatchQueue:
             assert b.start_s >= a.finish_s - 1e-12
 
 
+class TestP99:
+    """Nearest-rank p99: ceil(0.99 n)-th order statistic, exactly."""
+
+    @pytest.mark.parametrize("n,want_rank", [
+        (1, 1),      # a single sample IS its own p99
+        (99, 99),    # ceil(98.01) = 99 -> the max, correctly
+        (100, 99),   # the regression: int(0.99*100)=100th (max) was wrong
+        (101, 100),  # ceil(99.99) = 100 -> second-largest
+    ])
+    def test_boundary_ranks(self, n, want_rank):
+        xs = [float(i) for i in range(n)]
+        assert bt.p99(xs) == xs[want_rank - 1]
+
+    def test_n100_is_not_the_max(self):
+        """The off-by-one this fixes: at n=100 the old int(0.99*n)
+        indexing returned the maximum, overstating tail latency by a
+        whole rank."""
+        xs = [1.0] * 99 + [1000.0]
+        assert bt.p99(xs) == 1.0
+
+    def test_input_order_irrelevant_and_empty(self):
+        import random
+        xs = [float(i) for i in range(101)]
+        random.Random(3).shuffle(xs)
+        assert bt.p99(xs) == 99.0
+        assert bt.p99([]) == 0.0
+
+
 def test_perfmodel_integration():
     """batching consumes core.perfmodel service times end-to-end."""
     from repro.core import perfmodel as pm

@@ -83,9 +83,10 @@ def test_rows_are_sane(bench_doc):
 
 
 def test_engine_rows_cover_all_decode_families(bench_doc):
-    """The paper's all-NN-families serving argument: every token-only
-    decode family serves through the slot engine and lands in the
-    trajectory JSON."""
+    """The paper's all-NN-families serving argument: EVERY registry
+    family serves through the slot engine and lands in the trajectory
+    JSON — including encdec/vlm, whose rows decode behind per-slot
+    primed cross-K/V (their ttft includes the prime dispatch)."""
     fams = {row["family"] for row in bench_doc["rows"]
             if row["kind"] == "engine"}
-    assert {"dense", "moe", "ssm", "hybrid"} <= fams, fams
+    assert {"dense", "moe", "ssm", "hybrid", "encdec", "vlm"} <= fams, fams

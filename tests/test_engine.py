@@ -207,14 +207,41 @@ def test_engine_fp_cache_and_wall_clock(dense_setup):
                                               max_seq=16)
 
 
-@pytest.mark.parametrize("arch", ["whisper-medium", "llama-3.2-vision-90b"])
-def test_engine_rejects_encoder_conditioned_family(arch):
-    """Only encdec/vlm stay unsupported (their decode needs per-request
-    encoder/vision states the fused slot step does not carry); the error
-    says so and points at the serving docs."""
-    cfg = get_config(arch).reduced()
-    with pytest.raises(NotImplementedError, match="docs/serving.md"):
-        E.Engine(cfg, params=None, num_slots=2, max_seq=16)
+def test_retired_mid_prefill_never_leaks_negative_ttft(dense_setup):
+    """Regression (first_token_s = -1.0 sentinel): a request retired on a
+    deadline miss BEFORE emitting any token must not poison the ttft
+    aggregates with a negative value — they are computed only over
+    requests that actually emitted."""
+    cfg, params = dense_setup
+    reqs = [
+        # deadline passes at tick 3 of an 8-token prefill: dropped with
+        # the sentinel still in place
+        E.EngineRequest(rid=0, prompt=(1, 2, 3, 4, 5, 6, 7, 8),
+                        max_new_tokens=4, deadline_s=2.5e-3),
+        E.EngineRequest(rid=1, prompt=(3, 4), max_new_tokens=4),
+        # already expired on arrival: retired at admission, before ever
+        # taking a slot (no prime/prefill dispatch is wasted on it)
+        E.EngineRequest(rid=2, prompt=(5,), max_new_tokens=2,
+                        deadline_s=-1.0),
+    ]
+    eng = E.Engine(cfg, params, num_slots=2, max_seq=16)
+    rep = eng.serve(reqs, clock="virtual", tick_s=1e-3,
+                    drop_missed_deadlines=True)
+    by_rid = {r.rid: r for r in rep.results}
+    assert rep.dropped == 2
+    assert by_rid[0].dropped and not by_rid[0].emitted
+    assert by_rid[0].tokens == [] and by_rid[0].first_token_s == -1.0
+    assert by_rid[2].dropped and by_rid[2].slot == -1   # never admitted
+    # the sentinel never leaks: aggregates are >= 0 and equal the sole
+    # emitting request's ttft
+    assert rep.mean_ttft_s >= 0.0 and rep.p99_ttft_s >= 0.0
+    assert rep.mean_ttft_s == pytest.approx(by_rid[1].ttft_s)
+    assert rep.p99_ttft_s == pytest.approx(by_rid[1].ttft_s)
+    # the surviving request's tokens are untouched by its neighbor's drop
+    assert by_rid[1].tokens == E.reference_outputs(
+        cfg, params, [reqs[1]], max_seq=16)[1]
+    # dropped requests do not enter the completion-latency percentile
+    assert rep.p99_latency_s == pytest.approx(by_rid[1].latency_s)
 
 
 def test_engine_temperature_requires_rng(dense_setup):
@@ -437,3 +464,153 @@ def test_engine_temperature_multi_request_reference_parity(dense_setup):
                      temperature=0.9, rng=jax.random.PRNGKey(99))
     assert other.serve(reqs, clock="virtual",
                        tick_s=1e-3).outputs() != want
+
+
+# ---------------------------------------------------------------------------
+# encdec/vlm: per-slot primed cross-K/V through the same slot engine
+# ---------------------------------------------------------------------------
+
+PRIME_ARCHS = ["whisper-medium", "llama-3.2-vision-90b"]
+
+
+@pytest.fixture(scope="module", params=PRIME_ARCHS)
+def prime_setup(request):
+    cfg = get_config(request.param).reduced()
+    return cfg, R.init(KEY, cfg)
+
+
+def _prime_requests(cfg, n, **kw):
+    kw.setdefault("rate_per_s", 3000.0)
+    return E.synthetic_requests(
+        n, vocab=cfg.vocab, source_shape=R.source_shape(cfg), **kw)
+
+
+def test_engine_prime_family_200_requests_bit_for_bit(prime_setup):
+    """Acceptance: encdec/vlm serve LIVE through the slot engine (no
+    simulator fallback) — a 200-request pseudo-Poisson trace with
+    per-request sources of varying length, through slot reuse,
+    reproduces the sequential per-token reference bit-for-bit."""
+    cfg, params = prime_setup
+    reqs = _prime_requests(cfg, 200, prompt_len=3, max_new_tokens=4)
+    eng = E.Engine(cfg, params, num_slots=8, max_seq=16)
+    rep = eng.serve(reqs, clock="virtual", tick_s=1e-3)
+    assert rep.outputs() == E.reference_outputs(cfg, params, reqs,
+                                                max_seq=16)
+    assert len(rep.results) == 200
+    assert rep.admissions_while_busy > 0     # continuous, no drain barrier
+    assert {r.slot for r in rep.results} == set(range(8))  # reuse happened
+
+
+def test_engine_prime_family_chunked_prefill(prime_setup):
+    """Chunked prefill composes with the prime dispatch: the chunk step
+    slices a slot row whose cross-K/V was already primed at admission,
+    so outputs stay bit-for-bit."""
+    cfg, params = prime_setup
+    reqs = _prime_requests(cfg, 10, prompt_len=7, max_new_tokens=3)
+    want = E.reference_outputs(cfg, params, reqs, max_seq=16)
+    eng = E.Engine(cfg, params, num_slots=4, max_seq=16, prefill_chunk=4)
+    rep = eng.serve(reqs, clock="virtual", tick_s=1e-3)
+    assert rep.outputs() == want
+
+
+def test_engine_prime_family_requires_source(prime_setup):
+    """encdec/vlm requests must carry per-request source embeddings of a
+    legal shape; the engine validates before admitting anything."""
+    cfg, params = prime_setup
+    eng = E.Engine(cfg, params, num_slots=2, max_seq=16)
+    with pytest.raises(ValueError, match="source"):
+        eng.serve([E.EngineRequest(rid=0, prompt=(1, 2), max_new_tokens=2)],
+                  clock="virtual")
+    too_long = np.zeros((R.source_len(cfg) + 1, cfg.d_model), np.float32)
+    with pytest.raises(ValueError, match="source length"):
+        eng.serve([E.EngineRequest(rid=0, prompt=(1, 2), max_new_tokens=2,
+                                   source=too_long)], clock="virtual")
+
+
+def test_primed_cross_kv_isolated_and_scrubbed_on_reuse(prime_setup):
+    """The prime contract, mirroring the recurrent-state scrub test:
+    (a) poisoned cross-K/V in inactive rows (a retired tenant's
+    leftovers) never changes active rows' outputs or self-cache writes;
+    (b) poison past an active row's own xlen frontier is invisible;
+    (c) decode never writes cross state (poison is frozen bitwise);
+    (d) re-priming a poisoned row — slot reuse — fully overwrites it:
+    the new tenant decodes exactly as in a fresh pool."""
+    cfg, params = prime_setup
+    step = ST.jit_slot_decode_step(ST.make_slot_decode_step(cfg))
+    prime = jax.jit(ST.make_prime_step(cfg))
+    S, smax = 4, 32
+    src_max = R.source_len(cfg)
+    axes = R.cache_batch_axes(cfg, R.init_cache(cfg, S, smax))
+
+    def src_for(seed, n):
+        g = np.random.default_rng(seed)
+        buf = np.zeros((1, src_max, cfg.d_model), np.float32)
+        buf[0, :n] = g.standard_normal((n, cfg.d_model)).astype(np.float32)
+        return jnp.asarray(buf, jnp.bfloat16)
+
+    n0, n2 = src_max, max(1, src_max - 2)
+    cache = R.init_cache(cfg, S, smax)
+    cache = prime(params, src_for(7, n0), cache,
+                  jnp.asarray(0, jnp.int32), jnp.asarray(n0, jnp.int32))
+    cache = prime(params, src_for(8, n2), cache,
+                  jnp.asarray(2, jnp.int32), jnp.asarray(n2, jnp.int32))
+    idx = jnp.array([1, 0, 2, 1], jnp.int32)
+    active = jnp.array([True, False, True, False])
+    tokens = jnp.array([[5], [1], [9], [2]], jnp.int32)
+
+    def run(c):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            return step(params, tokens,
+                        jax.tree_util.tree_map(lambda x: x.copy(), c),
+                        idx, active)
+
+    n1, c1, i1 = run(cache)
+
+    poisoned = {k: np.array(v) for k, v in cache.items()}
+    for leaf in ("xk", "xv"):
+        m = np.moveaxis(poisoned[leaf], axes[leaf], 0)
+        m[1] = 107.0                        # dead rows: whole cross state
+        m[3] = -9.0
+        m[2][:, n2:] = 55.0                 # active short row: masked tail
+    poisoned["xlen"][1] = 9999
+    poisoned["xlen"][3] = -5
+    poisoned = {k: jnp.asarray(v) for k, v in poisoned.items()}
+    poisoned_np = {k: np.asarray(v) for k, v in poisoned.items()}
+    n2_, c2, i2 = run(poisoned)
+
+    np.testing.assert_array_equal(np.asarray(n1[active]),
+                                  np.asarray(n2_[active]))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    for k in c1:
+        if k in ("xk", "xv", "xlen"):
+            # (c) cross state is a static operand: returned bitwise as
+            # passed in, poison and all
+            np.testing.assert_array_equal(np.asarray(c2[k]),
+                                          poisoned_np[k])
+            continue
+        a = np.moveaxis(np.asarray(c1[k]), axes[k], 0)
+        b = np.moveaxis(np.asarray(c2[k]), axes[k], 0)
+        np.testing.assert_array_equal(a[np.asarray(active)],
+                                      b[np.asarray(active)])
+
+    # (d) slot reuse: re-prime the poisoned row 1 and decode it from
+    # position 0 — must equal the same tenant in a fresh pool
+    nB = max(1, src_max - 1)
+    srcB = src_for(9, nB)
+    reused = prime(params, srcB, c2,
+                   jnp.asarray(1, jnp.int32), jnp.asarray(nB, jnp.int32))
+    fresh = prime(params, srcB, R.init_cache(cfg, S, smax),
+                  jnp.asarray(1, jnp.int32), jnp.asarray(nB, jnp.int32))
+    tok2 = jnp.array([[5], [7], [9], [2]], jnp.int32)
+    only1 = jnp.array([False, True, False, False])
+    zero = jnp.zeros((S,), jnp.int32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        nr, _, _ = step(params, tok2,
+                        jax.tree_util.tree_map(lambda x: x.copy(), reused),
+                        zero, only1)
+        nf, _, _ = step(params, tok2,
+                        jax.tree_util.tree_map(lambda x: x.copy(), fresh),
+                        zero, only1)
+    assert int(nr[1]) == int(nf[1])
