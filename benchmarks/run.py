@@ -106,7 +106,13 @@ def smoke(kernel_rows=None) -> int:
           f"{eng['chunked_mean_ttft_s']*1e3:.2f} ms chunked; "
           f"sequential-reference parity (dense + ssm + encdec primed "
           f"cross-K/V, per-token + chunked prefill) + append-path "
-          f"kernel parity OK")
+          f"kernel parity OK; paged KV: {eng['paged_requests']}-request "
+          f"shared-prefix trace parity OK "
+          f"({eng['paged_shared_block_hits']} shared block hits, "
+          f"{eng['paged_prefill_tokens_skipped']} prefill tokens "
+          f"skipped), blocks-limited admission served "
+          f"{eng['paged_limited_peak_occupancy']} concurrent requests "
+          f"from a 4-row block budget, block-gather kernel parity OK")
 
     print("\nsmoke OK: flops/bytes nonzero, scan trip count exact")
     return 0

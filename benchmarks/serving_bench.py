@@ -16,7 +16,10 @@ Row schema (stable; asserted by tests/test_bench_smoke.py)::
   {"kind": "engine",        "arch", "family", "rate", "n_requests",
    "num_slots", "p99_s", "tokens_per_s", "mean_occupancy", "ticks",
    "admissions_while_busy", "occupancy_curve", "prefill_chunk",
-   "mean_ttft_s", "p99_ttft_s"}
+   "mean_ttft_s", "p99_ttft_s", "block_size", "num_blocks",
+   "kv_hbm_bytes", "peak_blocks_used", "mean_block_util",
+   "shared_block_hits", "shared_hit_rate", "prefill_tokens_skipped",
+   "effective_concurrency"}
 
 The ``engine`` rows are the continuous-batching section: one row per
 (family, offered rate) — p99 vs load is the Table 4 story told by the
@@ -24,7 +27,11 @@ live engine, now for EVERY registry family (dense, moe, ssm, hybrid,
 encdec, vlm — the last two behind per-slot primed cross-K/V, so their
 ttft includes the prime dispatch), with the slot-occupancy curve
 downsampled inline and the admission-to-first-token columns showing
-what chunked prefill buys.
+what chunked prefill buys.  The memory columns (KV-HBM bytes resident,
+block utilization, shared-prefix hit rate, effective concurrency) are
+live on every row; the non-default values come from the paged-KV rows
+(``block_size`` set), where admission is priced in worst-case blocks
+and identical prompt prefixes share refcounted blocks.
 Timing comes from a measured per-tick cost replayed under the virtual
 clock, so the rows are structurally deterministic offline while still
 tracking real step cost.
@@ -91,6 +98,12 @@ def serving_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
         rows.extend(engine_rows(fam_arch, quant=quant, rates=(400.0,),
                                 n_requests=10, num_slots=4, prompt_len=6,
                                 gen_tokens=4))
+    # the paged-KV engine row: block-table decode with a shared system
+    # prompt, so the memory columns show block reuse under load
+    rows.extend(engine_rows(arch, quant=quant, rates=(800.0,),
+                            n_requests=16, num_slots=4, prompt_len=6,
+                            gen_tokens=6, block_size=4,
+                            shared_prefix_len=4))
     return rows
 
 
@@ -104,9 +117,14 @@ def _downsample(xs, n=32):
 def engine_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
                 rates=(200.0, 800.0), n_requests: int = 24,
                 num_slots: int = 8, prompt_len: int = 3,
-                gen_tokens: int = 6, prefill_chunk: int = 4):
+                gen_tokens: int = 6, prefill_chunk: int = 4,
+                block_size=None, num_blocks=None,
+                shared_prefix_len: int = 0):
     """Continuous-batching engine rows: p99 + occupancy + admission-to-
-    first-token vs offered rate, for any token-only decode family."""
+    first-token vs offered rate, for any token-only decode family.
+    ``block_size`` switches the engine to the paged KV cache (and
+    ``shared_prefix_len`` gives the trace a common system prompt whose
+    blocks the paged engine shares across requests)."""
     import jax
 
     from repro import engine as E
@@ -122,7 +140,8 @@ def engine_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
         params = quantize_tree(params, min_size=2048)
     eng = E.Engine(cfg, params, mode=mode, num_slots=num_slots,
                    max_seq=prompt_len + gen_tokens,   # Engine rounds up
-                   prefill_chunk=prefill_chunk or None)
+                   prefill_chunk=prefill_chunk or None,
+                   block_size=block_size, num_blocks=num_blocks)
     # encdec/vlm: per-request sources for the prime dispatch (their ttft
     # columns therefore include the prime cost)
     source_shape = R.source_shape(cfg)
@@ -144,6 +163,7 @@ def engine_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
         reqs = E.synthetic_requests(
             n_requests, rate_per_s=rate, vocab=cfg.vocab,
             prompt_len=prompt_len, max_new_tokens=gen_tokens,
+            shared_prefix_len=shared_prefix_len,
             source_shape=source_shape)
         rep = eng.serve(reqs, clock="virtual", tick_s=tick_s)
         rows.append({
@@ -159,6 +179,15 @@ def engine_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
             "prefill_chunk": rep.prefill_chunk,
             "mean_ttft_s": rep.mean_ttft_s,
             "p99_ttft_s": rep.p99_ttft_s,
+            "block_size": rep.block_size,
+            "num_blocks": rep.num_blocks,
+            "kv_hbm_bytes": rep.kv_hbm_bytes,
+            "peak_blocks_used": rep.peak_blocks_used,
+            "mean_block_util": rep.mean_block_util,
+            "shared_block_hits": rep.shared_block_hits,
+            "shared_hit_rate": rep.shared_hit_rate,
+            "prefill_tokens_skipped": rep.prefill_tokens_skipped,
+            "effective_concurrency": rep.effective_concurrency,
         })
     return rows
 
@@ -171,7 +200,17 @@ def engine_smoke(n_requests: int = 12) -> dict:
     interpret-mode parity check of the fused decode-attention kernel's
     append path (current-token k/v operand).  Exercised by
     ``benchmarks/run.py --smoke`` so cost-engine or kernel regressions
-    surface in the smoke gate."""
+    surface in the smoke gate.
+
+    The paged-KV gates ride along: (1) a 200-request pseudo-Poisson
+    shared-prefix trace served from KV blocks behind per-slot block
+    tables (chunked prefill, slot AND block reuse, shared-prefix blocks
+    refcounted across tenants) must match the sequential reference
+    bit-for-bit; (2) so must a prime family (whisper) through the same
+    paged path; (3) a trace whose live requests exceed what the block
+    budget could hold contiguously must complete under blocks-limited
+    admission; (4) the block-gather decode-attention kernel must match
+    ``kernels/ref.py`` under the Pallas interpreter."""
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -232,6 +271,72 @@ def engine_smoke(n_requests: int = 12) -> dict:
         raise AssertionError("encdec engine outputs != sequential "
                              "reference (primed cross-K/V slot path)")
 
+    # ---- paged-KV gates ----------------------------------------------
+    # (1) the acceptance trace: 200 pseudo-Poisson requests with a shared
+    # system-prompt prefix through the paged engine (blocks + tables +
+    # chunked prefill + refcounted prefix sharing), bit-for-bit vs the
+    # sequential reference, with slot reuse AND block reuse exercised
+    preqs = E.synthetic_requests(200, rate_per_s=2000.0, vocab=cfg.vocab,
+                                 prompt_len=6, max_new_tokens=5,
+                                 shared_prefix_len=4)
+    pwant = E.reference_outputs(cfg, params, preqs, max_seq=16)
+    peng = E.Engine(cfg, params, num_slots=4, max_seq=16,
+                    prefill_chunk=4, block_size=4)
+    prep = peng.serve(preqs, clock="virtual", tick_s=1e-3)
+    if prep.outputs() != pwant:
+        raise AssertionError("paged engine outputs != sequential "
+                             "reference (200-request shared-prefix trace)")
+    if prep.shared_block_hits <= 0:
+        raise AssertionError("paged engine shared no prefix blocks on a "
+                             "shared-prefix trace")
+    if prep.admissions_while_busy <= 0:
+        raise AssertionError("paged engine admitted nothing mid-flight")
+    # (2) a prime family (encdec) through the same paged path
+    pwrep = E.Engine(wcfg, wparams, num_slots=2, max_seq=16,
+                     prefill_chunk=2, block_size=4).serve(
+        wreqs, clock="virtual", tick_s=1e-3)
+    if pwrep.outputs() != E.reference_outputs(wcfg, wparams, wreqs,
+                                              max_seq=16):
+        raise AssertionError("paged encdec outputs != sequential "
+                             "reference")
+    # (3) blocks-limited admission: 8 slots but only 16 usable blocks
+    # (what 4 contiguous rows would hold) — more live requests than the
+    # contiguous pool could serve, and every request still completes
+    lreqs = E.synthetic_requests(20, rate_per_s=5000.0, vocab=cfg.vocab,
+                                 prompt_len=6, max_new_tokens=5)
+    lwant = E.reference_outputs(cfg, params, lreqs, max_seq=16)
+    lrep = E.Engine(cfg, params, num_slots=8, max_seq=16, prefill_chunk=4,
+                    block_size=4, num_blocks=17).serve(
+        lreqs, clock="virtual", tick_s=1e-3)
+    if lrep.outputs() != lwant or len(lrep.results) != len(lreqs):
+        raise AssertionError("blocks-limited paged engine failed to "
+                             "complete the trace bit-for-bit")
+    if max(lrep.occupancy) <= 4:
+        raise AssertionError("blocks-limited trace never exceeded the "
+                             "contiguous-equivalent concurrency")
+    if lrep.peak_blocks_used > 16:
+        raise AssertionError("paged engine overran the block budget")
+
+    # (4) block-gather kernel parity, Pallas interpreter (offline-safe)
+    rng = np.random.default_rng(3)
+    nb, bs_, bq, mb, kvp, gq, hdp = 5, 128, 2, 2, 2, 2, 64
+    pq = jnp.asarray(rng.standard_normal((bq, kvp, gq, hdp)), jnp.float32)
+    pk = jnp.asarray(rng.integers(-127, 127, (nb, bs_, kvp, hdp)), jnp.int8)
+    pv = jnp.asarray(rng.integers(-127, 127, (nb, bs_, kvp, hdp)), jnp.int8)
+    pks = jnp.asarray(rng.uniform(.005, .05, (nb, bs_, kvp, 1)), jnp.float32)
+    pvs = jnp.asarray(rng.uniform(.005, .05, (nb, bs_, kvp, 1)), jnp.float32)
+    pvl = jnp.asarray([200, 130], jnp.int32)
+    ptbl = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+    pkn = jnp.asarray(rng.standard_normal((bq, kvp, 1, hdp)), jnp.float32)
+    pvn = jnp.asarray(rng.standard_normal((bq, kvp, 1, hdp)), jnp.float32)
+    pgot = ops.decode_attention(pq, pk, pv, pks, pvs, pvl,
+                                block_tables=ptbl, k_new=pkn, v_new=pvn,
+                                interpret=True)
+    poracle = ref.decode_attention_paged_ref(pq, pk, pv, pks, pvs, pvl,
+                                             ptbl, k_new=pkn, v_new=pvn)
+    np.testing.assert_allclose(np.asarray(pgot), np.asarray(poracle),
+                               rtol=2e-5, atol=2e-5)
+
     # append-path kernel parity, Pallas interpreter (offline-safe)
     ks = jax.random.split(jax.random.PRNGKey(1), 7)
     b, s, kv, g, hd = 1, 128, 2, 2, 64
@@ -253,7 +358,11 @@ def engine_smoke(n_requests: int = 12) -> dict:
             "mean_occupancy": rep.mean_occupancy,
             "admissions_while_busy": rep.admissions_while_busy,
             "mean_ttft_s": rep.mean_ttft_s,
-            "chunked_mean_ttft_s": repc.mean_ttft_s}
+            "chunked_mean_ttft_s": repc.mean_ttft_s,
+            "paged_requests": len(prep.results),
+            "paged_shared_block_hits": prep.shared_block_hits,
+            "paged_prefill_tokens_skipped": prep.prefill_tokens_skipped,
+            "paged_limited_peak_occupancy": max(lrep.occupancy)}
 
 
 def rows():

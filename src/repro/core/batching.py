@@ -142,11 +142,21 @@ class AdmissionPolicy:
 
     def decide(self, now: float, deadlines: Sequence[float],
                next_arrival: Optional[float] = None,
-               capacity: Optional[int] = None) -> Admission:
+               capacity: Optional[int] = None,
+               costs: Optional[Sequence[int]] = None,
+               budget: Optional[int] = None) -> Admission:
         """``deadlines``: absolute deadlines of pending requests, sorted
         ascending (an empty queue is a no-launch wait).  ``capacity``
         caps the batch below ``max_batch`` (the live engine passes its
-        free-slot count)."""
+        free-slot count).
+
+        ``costs``/``budget`` add memory-aware admission (the paged KV
+        engine): ``costs[i]`` is pending request i's worst-case resource
+        claim (KV blocks not already shared) and ``budget`` what the pool
+        has free — the batch shrinks until its summed cost fits, and an
+        unaffordable head-of-line request waits (blocks drain at
+        retirement, so waiting makes progress; "free slot exists" is no
+        longer sufficient)."""
         if not deadlines:
             return Admission(False, wait_until=(
                 next_arrival if next_arrival is not None else now))
@@ -157,6 +167,13 @@ class AdmissionPolicy:
         # shrink until the batch finishes by the earliest deadline
         while b > 1 and now + self.service_time(b) > earliest:
             b -= 1
+        if costs is not None and budget is not None:
+            # memory-aware: shrink until the cohort's worst-case claim fits
+            while b > 0 and sum(costs[:b]) > budget:
+                b -= 1
+            if b == 0:
+                return Admission(False, wait_until=(
+                    next_arrival if next_arrival is not None else now))
         # can we afford to wait for more work?
         can_wait = (
             b < cap and next_arrival is not None

@@ -16,15 +16,22 @@ Modules:
                  uses — property-tested identical),
 - ``engine``:    the engine itself + the sequential reference decoder the
                  parity tests compare against bit-for-bit.
+
+``Engine(block_size=...)`` switches the positional KV leaves to a paged
+layout: fixed-size physical blocks behind a per-slot block table
+(``slots.BlockPool`` holds the free list / refcounts / prefix-hash
+registry), with identical-prompt prefixes shared copy-on-extend and
+admission priced in worst-case blocks instead of free slots alone.
 """
 from repro.engine.engine import (Engine, EngineReport, EngineRequest,
                                  RequestResult, reference_outputs,
                                  synthetic_requests)
 from repro.engine.scheduler import SlotScheduler
-from repro.engine.slots import SlotPool, SlotState
+from repro.engine.slots import (BlockPool, RequestTooLong, SlotPool,
+                                SlotState)
 
 __all__ = [
-    "Engine", "EngineReport", "EngineRequest", "RequestResult",
-    "SlotPool", "SlotScheduler", "SlotState", "reference_outputs",
-    "synthetic_requests",
+    "BlockPool", "Engine", "EngineReport", "EngineRequest",
+    "RequestResult", "RequestTooLong", "SlotPool", "SlotScheduler",
+    "SlotState", "reference_outputs", "synthetic_requests",
 ]

@@ -58,7 +58,7 @@ from repro.configs.base import ArchConfig
 from repro.core import batching as bt
 from repro.core.qlinear import FP, QuantMode
 from repro.engine.scheduler import SlotScheduler
-from repro.engine.slots import SlotPool
+from repro.engine.slots import BlockPool, RequestTooLong, SlotPool
 from repro.models import registry as R
 from repro.runtime import steps as ST
 
@@ -125,6 +125,17 @@ class EngineReport:
     p99_ttft_s: float = 0.0           # admission-to-first-token, p99
     prefill_chunk: Optional[int] = None
     dropped: int = 0                  # requests retired on deadline miss
+    # paged KV cache (Engine(block_size=...)) memory accounting — all
+    # defaults when the engine runs contiguous rows
+    block_size: Optional[int] = None
+    num_blocks: int = 0               # physical blocks incl. reserved trash
+    kv_hbm_bytes: int = 0             # resident KV-cache bytes (all leaves)
+    peak_blocks_used: int = 0         # high-water mark of held blocks
+    mean_block_util: float = 0.0      # mean held / usable blocks, per tick
+    shared_block_hits: int = 0        # prefix blocks reused at admission
+    shared_hit_rate: float = 0.0      # hits / worst-case blocks demanded
+    prefill_tokens_skipped: int = 0   # prompt tokens served from shared blocks
+    effective_concurrency: float = 0.0  # mean active requests per tick
 
     def outputs(self) -> Dict[int, List[int]]:
         return {r.rid: r.tokens for r in self.results}
@@ -137,6 +148,8 @@ class Engine:
                  num_slots: int = 8, max_seq: int = 64,
                  policy: Optional[bt.AdmissionPolicy] = None,
                  prefill_chunk: Optional[int] = None,
+                 block_size: Optional[int] = None,
+                 num_blocks: Optional[int] = None,
                  temperature: float = 0.0, rng=None):
         if temperature > 0.0 and rng is None:
             raise ValueError("temperature sampling needs an rng key: "
@@ -146,8 +159,35 @@ class Engine:
         # the pool size IS the compiled batch shape: bucket it so the
         # engine's one decode step sits on the static ladder; the cache
         # length rounds up to 16 so the slot dimension tiles cleanly
+        # (paged mode additionally rounds to a whole number of blocks)
+        if num_blocks is not None and block_size is None:
+            raise ValueError("num_blocks needs block_size: paged mode is "
+                             "enabled by Engine(..., block_size=...)")
+        if block_size is not None:
+            if block_size < 1 or block_size & (block_size - 1):
+                raise ValueError(
+                    f"block_size must be a power of two, got {block_size}")
+            if not R.supports_paging(cfg):
+                raise ValueError(
+                    f"family {cfg.family!r} (window={cfg.window}) does not "
+                    f"support the paged KV cache")
         self.num_slots = ST.bucket_batch(num_slots)
-        self.max_seq = max_seq + (-max_seq) % 16
+        align = max(16, block_size) if block_size else 16
+        self.max_seq = max_seq + (-max_seq) % align
+        self.block_size = block_size
+        if block_size:
+            self.max_blocks = self.max_seq // block_size
+            # default pool: every slot can hold a full row privately, +1
+            # for the reserved trash block — byte-parity with contiguous
+            # rows; pass a smaller num_blocks for memory-bound admission
+            self.num_blocks = (num_blocks if num_blocks is not None
+                               else self.num_slots * self.max_blocks + 1)
+            if self.num_blocks < 2:
+                raise ValueError(f"num_blocks must be >= 2, "
+                                 f"got {self.num_blocks}")
+        else:
+            self.max_blocks = 0
+            self.num_blocks = 0
         # chunked prefill: cap rounds up to the same power-of-two ladder,
         # so chunk shapes and pool shapes share one bounded compile set
         self.prefill_chunk = (ST.bucket_batch(prefill_chunk)
@@ -164,6 +204,15 @@ class Engine:
         self._prime_step = (
             ST.jit_prime_step(ST.make_prime_step(cfg, mode=mode))
             if R.needs_prime(cfg) else None)
+
+    def _init_cache(self):
+        """The pooled device cache: contiguous slot rows, or (paged mode)
+        physical KV blocks behind an all-trash block table."""
+        if self.block_size:
+            return R.init_paged_cache(self.cfg, self.num_slots,
+                                      self.max_seq, self.block_size,
+                                      self.num_blocks)
+        return R.init_cache(self.cfg, self.num_slots, self.max_seq)
 
     def _chunk_step(self, chunk: int) -> Callable:
         """The compiled prefill step for one bucket size (lazy, cached —
@@ -189,7 +238,7 @@ class Engine:
         compilation."""
         with warnings.catch_warnings():
             warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
-            cache = R.init_cache(self.cfg, self.num_slots, self.max_seq)
+            cache = self._init_cache()
             if self._prime_step is not None:
                 cache = self._prime_step(
                     self.params,
@@ -214,6 +263,50 @@ class Engine:
                     c *= 2
 
     # ------------------------------------------------------------------
+    # paged-mode admission helpers (host-side; see docs/serving.md)
+
+    def _prefix_keys(self, req: EngineRequest) -> Tuple:
+        """Exact prefix hash chain, one key per FULL prompt block:
+        ``key_j = (key_{j-1}, block_j_tokens)`` — nested tuples compared
+        by value, so equal keys mean equal token prefixes (no hash
+        collisions by construction).  Prime families seed the chain with
+        the request's source bytes: their self-KV at any position depends
+        on the cross-attended source, so two prefixes only share when
+        source AND tokens match."""
+        bs = self.block_size
+        key: Tuple = ()
+        if self._prime_step is not None:
+            src = np.asarray(req.source, np.float32)
+            key = (src.shape, src.tobytes())
+        keys = []
+        for j in range(len(req.prompt) // bs):
+            key = (key, tuple(req.prompt[j * bs:(j + 1) * bs]))
+            keys.append(key)
+        return tuple(keys)
+
+    def _usable_hits(self, req: EngineRequest, bpool: BlockPool,
+                     keys: Optional[Tuple] = None) -> int:
+        """Leading prompt blocks already resident (registered by an
+        earlier tenant).  Capped at ``(prompt-1) // bs``: the LAST prompt
+        token always rides the fused step, and its KV write must land in
+        a privately owned block, never a shared one."""
+        if keys is None:
+            keys = self._prefix_keys(req)
+        cap = (len(req.prompt) - 1) // self.block_size
+        hits = 0
+        for j in range(min(cap, len(keys))):
+            if bpool.lookup(keys[j]) is None:
+                break
+            hits += 1
+        return hits
+
+    def _block_cost(self, req: EngineRequest, bpool: BlockPool) -> int:
+        """Worst-case FRESH blocks this request claims if admitted now:
+        ceil((prompt + max_new) / bs) minus currently shareable prefix
+        blocks — what memory-aware admission prices against the pool."""
+        bs = self.block_size
+        need = -(-(len(req.prompt) + req.max_new_tokens) // bs)
+        return need - self._usable_hits(req, bpool)
 
     def serve(self, requests: Sequence[EngineRequest], *,
               clock: str = "virtual",
@@ -244,16 +337,23 @@ class Engine:
                     f"(got {r.max_new_tokens})")
             need = len(r.prompt) + r.max_new_tokens
             if need > self.max_seq:
-                raise ValueError(
+                raise RequestTooLong(
                     f"request {r.rid} needs {need} cache positions > "
                     f"max_seq={self.max_seq}")
+            if self.block_size:
+                nb = -(-need // self.block_size)
+                if nb > self.num_blocks - 1:
+                    # would wait forever even against an empty pool
+                    raise RequestTooLong(
+                        f"request {r.rid} needs {nb} KV blocks > "
+                        f"{self.num_blocks - 1} usable in the pool")
             if self._prime_step is not None:
                 _validate_source(self.cfg, r)
         reqs = sorted(requests, key=lambda r: r.arrival_s)
         S = self.num_slots
-        pool = SlotPool(S)
+        pool = SlotPool(S, max_seq=self.max_seq)
         sched = SlotScheduler(self.policy)
-        cache = R.init_cache(self.cfg, S, self.max_seq)
+        cache = self._init_cache()
         tokens = np.zeros((S, 1), np.int32)
         index = np.zeros((S,), np.int32)
         results: List[RequestResult] = []
@@ -262,6 +362,38 @@ class Engine:
         dropped = 0
         ticks = 0
         gen_tokens = 0
+        # paged-mode state: the host block pool + the host mirror of the
+        # device block-table leaf (pushed before any dispatch reads it)
+        paged = self.block_size is not None
+        bpool = BlockPool(self.num_blocks, self.block_size) if paged \
+            else None
+        tables_np = (np.zeros((S, self.max_blocks), np.int32)
+                     if paged else None)
+        tables_dirty = False
+        shared_hits = 0
+        skipped_tokens = 0
+        blocks_demanded = 0
+        peak_used = 0
+        util_sum = 0.0
+
+        def _register_blocks(st) -> None:
+            # publish each prompt block for prefix sharing the moment the
+            # slot's frontier passes its end (its KV writes are already
+            # issued in dispatch order, so any later gather sees them)
+            while (st.registered < len(st.prompt_keys)
+                   and st.pos >= (st.registered + 1) * self.block_size):
+                bpool.register(st.prompt_keys[st.registered],
+                               st.block_table[st.registered])
+                st.registered += 1
+
+        def _release_blocks(st) -> None:
+            nonlocal tables_dirty
+            for bid in st.block_table:
+                bpool.release(bid)
+            st.block_table, st.prompt_keys, st.registered = None, (), 0
+            tables_np[st.sid, :] = 0          # retired row scatters to trash
+            tables_dirty = True
+
         i, now = 0, 0.0
         t0 = time.perf_counter()
         limit = max_ticks if max_ticks is not None else \
@@ -279,7 +411,11 @@ class Engine:
                 # 2) admit into free slots — mid-flight, no drain barrier
                 generating = any(s.active and not s.in_prefill
                                  for s in pool.slots)
-                cohort = sched.admit(now, pool.free_count, next_arrival)
+                cohort = sched.admit(
+                    now, pool.free_count, next_arrival,
+                    cost_fn=((lambda r: self._block_cost(r, bpool))
+                             if paged else None),
+                    budget=bpool.free_blocks if paged else None)
                 admitted = 0
                 for req in cohort:
                     if drop_missed_deadlines and now > req.deadline_s:
@@ -298,6 +434,33 @@ class Engine:
                                     now=now, arrival_s=req.arrival_s,
                                     deadline_s=req.deadline_s)
                     index[st.sid] = 0
+                    if paged:
+                        # build the slot's block table: ref every shared
+                        # prefix block (their prefill chunks are skipped
+                        # entirely), alloc the rest privately — the
+                        # admission decision priced exactly this claim
+                        keys = self._prefix_keys(req)
+                        hits = self._usable_hits(req, bpool, keys)
+                        need = -(-(len(req.prompt) + req.max_new_tokens)
+                                 // self.block_size)
+                        table = []
+                        for j in range(hits):
+                            bid = bpool.lookup(keys[j])
+                            bpool.ref(bid)
+                            table.append(bid)
+                        for _ in range(need - hits):
+                            table.append(bpool.alloc())
+                        st.block_table = table
+                        st.prompt_keys = keys
+                        st.registered = hits
+                        st.pos = hits * self.block_size
+                        index[st.sid] = st.pos
+                        tables_np[st.sid, :] = 0
+                        tables_np[st.sid, :len(table)] = table
+                        tables_dirty = True
+                        shared_hits += hits
+                        skipped_tokens += hits * self.block_size
+                        blocks_demanded += need
                     if self._prime_step is not None:
                         # prime dispatch: write this slot's cross-K/V row
                         # (and its xlen frontier) once, concurrently with
@@ -307,15 +470,24 @@ class Engine:
                         cache = self._prime_step(
                             self.params, src, cache,
                             jnp.asarray(st.sid, jnp.int32), n_valid)
-                    if self.prefill_chunk and len(req.prompt) > 1:
-                        # all but the last prompt token go through the
-                        # chunked prefill step; the last one rides the
-                        # fused step (its sample = first output token)
-                        st.chunk_left = len(req.prompt) - 1
+                    left = len(req.prompt) - 1 - st.pos
+                    if self.prefill_chunk and left > 0:
+                        # remaining prompt (all but the last token, minus
+                        # any shared-prefix positions already resident)
+                        # goes through the chunked prefill step; the last
+                        # token rides the fused step (its sample = first
+                        # output token)
+                        st.chunk_left = left
                     else:
                         tokens[st.sid, 0] = st.next_input()
                 if generating:
                     admissions_while_busy += admitted
+                if paged and tables_dirty:
+                    # push the host table mirror before any dispatch this
+                    # tick gathers or scatters through it
+                    cache = dict(cache,
+                                 block_tables=jnp.asarray(tables_np))
+                    tables_dirty = False
                 # 3) idle: nothing active -> jump to the next event
                 if pool.active_count == 0:
                     if next_arrival is None and not sched.pending:
@@ -348,6 +520,8 @@ class Engine:
                     st.pos += n
                     st.chunk_left -= n
                     index[st.sid] = st.pos
+                    if paged:
+                        _register_blocks(st)
                     if st.chunk_left == 0:
                         tokens[st.sid, 0] = st.prompt[st.pos]
                 # 5) one fused slot-masked step: every ready slot (not
@@ -364,6 +538,10 @@ class Engine:
                     jax.block_until_ready(cache)   # charge chunk time here
                 ticks += 1
                 occupancy.append(pool.active_count)
+                if paged:
+                    used = bpool.used_blocks
+                    peak_used = max(peak_used, used)
+                    util_sum += used / max(1, self.num_blocks - 1)
                 if clock == "wall":
                     # np.asarray(nxt) above already blocked on the step
                     now = time.perf_counter() - t0
@@ -384,11 +562,15 @@ class Engine:
                             first_token_s=st.first_token_s, finish_s=now,
                             slot=st.sid, dropped=True))
                         dropped += 1
+                        if paged:
+                            _release_blocks(st)
                         pool.free(st.sid)
                         continue
                     if st.chunk_left > 0:          # mid-chunk: no sample
                         continue
                     st.pos += 1
+                    if paged:
+                        _register_blocks(st)
                     if st.pos < len(st.prompt):        # still prefilling
                         tokens[st.sid, 0] = st.prompt[st.pos]
                         continue
@@ -403,6 +585,8 @@ class Engine:
                             arrival_s=st.arrival_s, admit_s=st.admit_s,
                             first_token_s=st.first_token_s, finish_s=now,
                             slot=st.sid))
+                        if paged:
+                            _release_blocks(st)
                         pool.free(st.sid)
                     else:
                         tokens[st.sid, 0] = tok
@@ -418,6 +602,8 @@ class Engine:
         # ttft into the aggregates
         ttft = [r.ttft_s for r in results if r.emitted]
         dur = max(now, 1e-12)
+        kv_bytes = int(sum(x.size * x.dtype.itemsize
+                           for x in jax.tree_util.tree_leaves(cache)))
         return EngineReport(
             results=results, ticks=ticks, generated_tokens=gen_tokens,
             duration_s=now, wall_s=wall,
@@ -431,7 +617,18 @@ class Engine:
             mean_ttft_s=float(np.mean(ttft)) if ttft else 0.0,
             p99_ttft_s=bt.p99(ttft),
             prefill_chunk=self.prefill_chunk,
-            dropped=dropped)
+            dropped=dropped,
+            block_size=self.block_size,
+            num_blocks=self.num_blocks,
+            kv_hbm_bytes=kv_bytes,
+            peak_blocks_used=peak_used,
+            mean_block_util=(util_sum / ticks if paged and ticks else 0.0),
+            shared_block_hits=shared_hits,
+            shared_hit_rate=(shared_hits / blocks_demanded
+                             if blocks_demanded else 0.0),
+            prefill_tokens_skipped=skipped_tokens,
+            effective_concurrency=(sum(occupancy) / len(occupancy)
+                                   if occupancy else 0.0))
 
 
 # ---------------------------------------------------------------------------
@@ -534,21 +731,35 @@ def synthetic_requests(n: int, *, rate_per_s: float, vocab: int,
                        prompt_len: int = 4, max_new_tokens: int = 8,
                        deadline_s: float = float("inf"),
                        seed: int = 0,
+                       shared_prefix_len: int = 0,
                        source_shape: Optional[Tuple[int, int]] = None
                        ) -> List[EngineRequest]:
     """Deterministic pseudo-Poisson request trace with synthetic prompts
     (derived from the rid, so any two runs see identical streams).
+
+    ``shared_prefix_len=k`` makes the first ``k`` prompt tokens identical
+    across ALL requests (a seed-derived "system prompt") with rid-seeded
+    suffixes after it — the workload shape the paged engine's
+    shared-prefix block reuse exists for.  The default 0 reproduces the
+    fully rid-derived prompts exactly.
 
     ``source_shape=(source_len, d_model)`` additionally attaches
     per-request source embeddings for the prime families (encdec/vlm):
     rid-seeded gaussian frames/patches whose length varies across
     requests (full, -1, -2 cyclically), so a shared slot pool holds rows
     of different xlen frontiers at once."""
+    if not 0 <= shared_prefix_len <= prompt_len:
+        raise ValueError(
+            f"shared_prefix_len must be in [0, prompt_len={prompt_len}], "
+            f"got {shared_prefix_len}")
     arr = bt.poisson_arrivals(rate_per_s, n, 0.0, seed)
     reqs = []
     for a in arr:
-        prompt = tuple(1 + (a.rid * 7 + 3 * j) % (vocab - 1)
-                       for j in range(prompt_len))
+        prompt = tuple(
+            (1 + (11 * j + 13 * seed) % (vocab - 1))
+            if j < shared_prefix_len
+            else (1 + (a.rid * 7 + 3 * j) % (vocab - 1))
+            for j in range(prompt_len))
         source = None
         if source_shape is not None:
             smax, d = source_shape

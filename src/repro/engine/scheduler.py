@@ -33,14 +33,22 @@ class SlotScheduler:
         bisect.insort(self.pending, req, key=lambda r: r.deadline_s)
 
     def admit(self, now: float, capacity: int,
-              next_arrival: Optional[float] = None) -> List:
+              next_arrival: Optional[float] = None, *,
+              cost_fn=None, budget: Optional[int] = None) -> List:
         """Requests to admit right now into ``capacity`` free slots
-        (possibly none: the policy may prefer to wait for more work)."""
+        (possibly none: the policy may prefer to wait for more work).
+
+        ``cost_fn(req) -> int`` + ``budget`` enable memory-aware
+        admission (the paged KV engine): each pending request's
+        worst-case block claim is priced and the policy shrinks the
+        cohort until the summed claim fits what the pool has free."""
         if capacity <= 0 or not self.pending:
             return []
+        costs = ([cost_fn(r) for r in self.pending]
+                 if cost_fn is not None else None)
         act = self.policy.decide(
             now, [r.deadline_s for r in self.pending], next_arrival,
-            capacity=capacity)
+            capacity=capacity, costs=costs, budget=budget)
         if not act.launch:
             return []
         cohort = self.pending[:act.batch]

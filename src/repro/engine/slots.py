@@ -14,7 +14,14 @@ nothing to scrub between tenants.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
+
+
+class RequestTooLong(ValueError):
+    """Typed admission rejection: the request cannot fit the cache
+    (prompt + max_new exceeds ``max_seq``, or needs more KV blocks than
+    the whole pool holds).  Raised at validation/admission time so an
+    oversized request can never silently overrun a slot row."""
 
 
 @dataclasses.dataclass
@@ -33,6 +40,13 @@ class SlotState:
     admit_s: float = 0.0
     deadline_s: float = float("inf")
     first_token_s: float = -1.0
+    # paged KV cache (engine with block_size set): the physical block ids
+    # this slot's logical positions map to (entry j covers positions
+    # [j*block_size, (j+1)*block_size)), the request's prefix hash-chain
+    # keys, and how many leading keys are registered for sharing
+    block_table: Optional[List[int]] = None
+    prompt_keys: Tuple = ()
+    registered: int = 0
 
     @property
     def active(self) -> bool:
@@ -54,10 +68,17 @@ class SlotState:
 
 class SlotPool:
     """Fixed pool of ``num_slots`` KV-cache slots: alloc on admission,
-    free on retirement, reuse immediately."""
+    free on retirement, reuse immediately.
 
-    def __init__(self, num_slots: int):
+    ``max_seq`` (when given) is the slot row's capacity in cache
+    positions: ``alloc`` rejects any request whose ``prompt + max_new``
+    would overrun it with the typed :class:`RequestTooLong`, so the
+    admission layer cannot hand a slot to a request the device cache
+    cannot hold."""
+
+    def __init__(self, num_slots: int, max_seq: Optional[int] = None):
         self.num_slots = num_slots
+        self.max_seq = max_seq
         self.slots = [SlotState(sid=i) for i in range(num_slots)]
         self._free = list(range(num_slots - 1, -1, -1))   # pop() -> slot 0 first
 
@@ -80,11 +101,16 @@ class SlotPool:
                                "free_count)")
         if not prompt:
             raise ValueError(f"request {rid}: empty prompt")
+        if self.max_seq is not None and len(prompt) + max_new > self.max_seq:
+            raise RequestTooLong(
+                f"request {rid} needs {len(prompt) + max_new} cache "
+                f"positions > max_seq={self.max_seq}")
         st = self.slots[self._free.pop()]
         st.rid, st.prompt, st.max_new = rid, tuple(prompt), max_new
         st.pos, st.chunk_left, st.generated = 0, 0, []
         st.arrival_s, st.admit_s, st.deadline_s = arrival_s, now, deadline_s
         st.first_token_s = -1.0
+        st.block_table, st.prompt_keys, st.registered = None, (), 0
         return st
 
     def free(self, sid: int) -> None:
@@ -93,3 +119,82 @@ class SlotPool:
         st.rid = -1
         st.prompt, st.generated = (), None
         self._free.append(sid)
+
+
+class BlockPool:
+    """Fixed pool of physical KV blocks for the paged cache: a free list,
+    per-block refcounts, and a prefix-hash registry for shared blocks.
+
+    Block 0 is the reserved *trash* block: it is never allocated, every
+    unallocated/inactive table entry points at it, so inactive rows'
+    per-tick scatter-writes land there harmlessly, and reads never see
+    it because attention masks positions past each row's own frontier.
+
+    Sharing is copy-on-extend: a registered block is immutable (its
+    logical positions hold a fully-written prompt-prefix block, keyed by
+    the exact token chain that produced it), extra refs only ever read
+    it, and each tenant's own writes always land in privately allocated
+    blocks.  ``alloc`` therefore never hands out a block whose refcount
+    is nonzero, and ``release`` drops the hash entry the moment the last
+    ref goes away so a recycled block can never be found by lookup."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError(f"num_blocks must be >= 2 (block 0 is the "
+                             f"reserved trash block), got {num_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.refcounts = [0] * num_blocks
+        self._free = list(range(num_blocks - 1, 0, -1))   # pop() -> block 1
+        self._hash_to_block: Dict[Any, int] = {}
+        self._block_to_hash: Dict[int, Any] = {}
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    def alloc(self) -> int:
+        """Take a private block (refcount 0 -> 1)."""
+        if not self._free:
+            raise RuntimeError("KV block pool exhausted (admission must "
+                               "respect free_blocks)")
+        bid = self._free.pop()
+        assert self.refcounts[bid] == 0, bid
+        self.refcounts[bid] = 1
+        return bid
+
+    def ref(self, bid: int) -> None:
+        """Add a ref to a live block (shared-prefix hit)."""
+        if bid <= 0 or self.refcounts[bid] <= 0:
+            raise RuntimeError(f"ref on dead block {bid}")
+        self.refcounts[bid] += 1
+
+    def release(self, bid: int) -> None:
+        """Drop one ref; the last ref frees the block and evicts its
+        hash entry so no future lookup can alias the recycled block."""
+        if bid <= 0 or self.refcounts[bid] <= 0:
+            raise RuntimeError(f"release on dead block {bid} "
+                               f"(refcount must never go negative)")
+        self.refcounts[bid] -= 1
+        if self.refcounts[bid] == 0:
+            key = self._block_to_hash.pop(bid, None)
+            if key is not None:
+                del self._hash_to_block[key]
+            self._free.append(bid)
+
+    def register(self, key: Any, bid: int) -> None:
+        """Publish a fully-written prompt block for prefix sharing."""
+        if self.refcounts[bid] <= 0:
+            raise RuntimeError(f"register of dead block {bid}")
+        if key not in self._hash_to_block:
+            self._hash_to_block[key] = bid
+            self._block_to_hash[bid] = key
+
+    def lookup(self, key: Any) -> Optional[int]:
+        return self._hash_to_block.get(key)

@@ -178,3 +178,89 @@ def decode_attention_int8(q: jax.Array, k: jax.Array, ks: jax.Array,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(*operands)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "sm_scale", "out_dtype", "interpret"))
+def decode_attention_int8_paged(q: jax.Array, k: jax.Array, ks: jax.Array,
+                                v: jax.Array, vs: jax.Array,
+                                valid_len: jax.Array,
+                                block_tables: jax.Array,
+                                k_new=None, v_new=None, *,
+                                sm_scale: float, out_dtype=jnp.float32,
+                                interpret: bool = False) -> jax.Array:
+    """Paged variant: the same online-softmax sweep, but K/V tiles are
+    physical KV blocks gathered through a per-row block table.
+
+    q (B, KV, G, hd) fp; k/v (NB, bs, KV, hd) int8 physical blocks;
+    ks/vs (NB, bs, KV) f32; block_tables (B, MB) int32; valid_len () or
+    (B,) int32 counts LOGICAL positions.  ``k_new``/``v_new``
+    (B, 1, KV, hd) fp: the current token's k/v (the engine scatters the
+    new entry into its block after attention, so the cache holds tokens
+    < valid_len and the new token rides as the append column).
+
+    The table is a scalar-prefetch operand (PrefetchScalarGridSpec): grid
+    step (bi, ki, si) streams block ``block_tables[bi, si]`` — the sweep
+    that already walked contiguous slot tiles now walks table entries, so
+    the kernel body is reused unchanged with ns=MB, blk_s=bs (its
+    position mask ``si*bs + i < valid_len`` is logical-position math
+    either way).  Entries past a row's frontier point at the reserved
+    trash block 0; their finite garbage is masked exactly like padding.
+    """
+    b, kvh, g, hd = q.shape
+    bs = k.shape[1]
+    mb = block_tables.shape[1]
+    assert (k_new is None) == (v_new is None)
+    has_new = k_new is not None
+
+    def kernel(tbl_ref, *refs):
+        del tbl_ref    # consumed by the index maps below
+        _decode_attn_kernel(*refs, ns=mb, blk_s=bs, sm_scale=sm_scale,
+                            out_dtype=out_dtype, has_new=has_new)
+
+    vl = jnp.broadcast_to(jnp.asarray(valid_len).reshape(-1), (b,))
+    vl = vl.reshape(b, 1).astype(jnp.int32)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd), lambda bi, ki, si, tbl: (bi, ki, 0, 0)),
+        pl.BlockSpec((1, bs, 1, hd),
+                     lambda bi, ki, si, tbl: (tbl[bi, si], 0, ki, 0)),
+        pl.BlockSpec((1, bs, 1),
+                     lambda bi, ki, si, tbl: (tbl[bi, si], 0, ki)),
+        pl.BlockSpec((1, bs, 1, hd),
+                     lambda bi, ki, si, tbl: (tbl[bi, si], 0, ki, 0)),
+        pl.BlockSpec((1, bs, 1),
+                     lambda bi, ki, si, tbl: (tbl[bi, si], 0, ki)),
+    ]
+    operands = [q, k, ks, v, vs]
+    if has_new:
+        in_specs += [
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda bi, ki, si, tbl: (bi, 0, ki, 0)),
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda bi, ki, si, tbl: (bi, 0, ki, 0)),
+        ]
+        operands += [k_new, v_new]
+    in_specs.append(pl.BlockSpec((1, 1), lambda bi, ki, si, tbl: (bi, 0)))
+    operands.append(vl)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, mb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda bi, ki, si, tbl: (bi, ki, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),      # running context acc
+            pltpu.VMEM((g,), jnp.float32),         # running max
+            pltpu.VMEM((g,), jnp.float32),         # running denominator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), out_dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables, *operands)

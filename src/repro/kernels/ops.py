@@ -142,7 +142,7 @@ def qmatmul_dynamic(x, w: QTensor, bias=None, *, activation: str = "none",
 
 
 def decode_attention(q, k, v, k_scale, v_scale, valid_len, *,
-                     k_new=None, v_new=None,
+                     block_tables=None, k_new=None, v_new=None,
                      blk_s: int = 128, out_dtype=jnp.float32,
                      interpret: bool = False):
     """Fused one-token attention against an int8 KV cache.
@@ -157,22 +157,50 @@ def decode_attention(q, k, v, k_scale, v_scale, valid_len, *,
     < valid_len and the new token joins the softmax as one extra operand
     column inside the kernel (no cache rewrite inside the layer scan).
 
+    ``block_tables`` (B, MB) int32 switches to the PAGED cache layout:
+    k/v become physical blocks (NB, bs, KV, hd) (scales (NB, bs, KV) or
+    (NB, bs, KV, 1)) and the kernel gathers each row's tiles through its
+    table via scalar prefetch; valid_len still counts logical positions.
+
     TPU (or ``interpret=True``) -> the Pallas kernel, which dequantizes
     tile-by-tile in VMEM; CPU -> the dense jnp oracle (identical math).
     Padding: G to the 8-sublane floor, hd to the 128 lane width, S to a
     blk_s multiple (padded slots are masked by ``valid_len``).
     """
     b, kvh, g, hd = q.shape
-    s_slots = k.shape[1]
     sm_scale = hd ** -0.5
-    ks = k_scale.reshape(b, s_slots, kvh)
-    vs = v_scale.reshape(b, s_slots, kvh)
     if (k_new is None) != (v_new is None):
         raise ValueError("k_new and v_new must be passed together")
     if k_new is not None:
         k_new = k_new.reshape(b, 1, kvh, hd)
         v_new = v_new.reshape(b, 1, kvh, hd)
     use_pallas = _on_tpu() or interpret
+    if block_tables is not None:
+        nb, bs = k.shape[0], k.shape[1]
+        ks = k_scale.reshape(nb, bs, kvh)
+        vs = v_scale.reshape(nb, bs, kvh)
+        if not use_pallas:
+            return _ref.decode_attention_paged_ref(
+                q, k, v, ks, vs, valid_len, block_tables,
+                k_new=k_new, v_new=v_new, sm_scale=sm_scale,
+                out_dtype=out_dtype)
+        sub = 8 if q.dtype == jnp.float32 else 16
+        gp = max(sub, -(-g // sub) * sub)
+        qp = _pad_to(_pad_to(q, gp, 2), 128, 3)
+        kp = _pad_to(k, 128, 3)
+        vp = _pad_to(v, 128, 3)
+        knp = _pad_to(k_new, 128, 3) if k_new is not None else None
+        vnp = _pad_to(v_new, 128, 3) if v_new is not None else None
+        from repro.kernels import decode_attention as _da
+        out = _da.decode_attention_int8_paged(
+            qp, kp, ks, vp, vs, jnp.asarray(valid_len),
+            jnp.asarray(block_tables, jnp.int32), knp, vnp,
+            sm_scale=sm_scale, out_dtype=out_dtype,
+            interpret=interpret and not _on_tpu())
+        return out[:, :, :g, :hd]
+    s_slots = k.shape[1]
+    ks = k_scale.reshape(b, s_slots, kvh)
+    vs = v_scale.reshape(b, s_slots, kvh)
     if not use_pallas:
         out = _ref.decode_attention_int8_ref(
             q, k, v, ks, vs, valid_len, k_new=k_new, v_new=v_new,

@@ -101,6 +101,33 @@ def decode_attention_int8_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.astype(out_dtype)
 
 
+def decode_attention_paged_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                               k_scale: jax.Array, v_scale: jax.Array,
+                               valid_len, block_tables: jax.Array, *,
+                               k_new=None, v_new=None, sm_scale=None,
+                               out_dtype=jnp.float32) -> jax.Array:
+    """Oracle for the paged (block-table) decode-attention kernel.
+
+    k, v: (NB, bs, KV, hd) int8 physical blocks; k_scale, v_scale:
+    (NB, bs, KV) or (NB, bs, KV, 1) fp32; block_tables: (B, MB) int32 —
+    row b's logical position p lives at block ``block_tables[b, p // bs]``
+    offset ``p % bs``.  Gathers the blocks into the contiguous
+    (B, MB*bs, ...) layout and delegates to the dense oracle, so the
+    paged kernel's contract IS the dense kernel's contract composed with
+    the table gather.
+    """
+    def gather(c):
+        g = c[block_tables]                   # (B, MB, bs, ...)
+        return g.reshape((g.shape[0], g.shape[1] * g.shape[2])
+                         + g.shape[3:])
+
+    ks = k_scale.reshape(k.shape[:3])
+    vs = v_scale.reshape(v.shape[:3])
+    return decode_attention_int8_ref(
+        q, gather(k), gather(v), gather(ks), gather(vs), valid_len,
+        k_new=k_new, v_new=v_new, sm_scale=sm_scale, out_dtype=out_dtype)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, window=None,
                         kv_len=None, out_dtype=jnp.bfloat16) -> jax.Array:

@@ -142,6 +142,16 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="engine: chunked-prefill bucket cap (0 = "
                          "per-token prefill)")
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="engine: paged KV cache block size in positions "
+                         "(power of two; 0 = contiguous slot rows)")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="engine: physical KV blocks incl. the reserved "
+                         "trash block (0 = every slot can hold a full "
+                         "row privately)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="engine: identical leading prompt tokens across "
+                         "requests (paged mode shares their KV blocks)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="engine: per-row sampling temperature "
                          "(0 = greedy)")
@@ -210,21 +220,32 @@ def main(argv=None):
     from repro import engine as E
     num_slots = ST.bucket_batch(max(batch, 1))
     policy = bt.AdmissionPolicy(model.service_time, max_batch=num_slots)
-    eng = E.Engine(cfg, params, mode=mode, num_slots=num_slots,
-                   max_seq=args.prompt_len + args.gen_tokens,
-                   policy=policy,
-                   prefill_chunk=args.prefill_chunk or None,
-                   temperature=args.temperature,
-                   rng=(jax.random.PRNGKey(args.seed + 1)
-                        if args.temperature > 0 else None))
+    try:
+        eng = E.Engine(cfg, params, mode=mode, num_slots=num_slots,
+                       max_seq=args.prompt_len + args.gen_tokens,
+                       policy=policy,
+                       prefill_chunk=args.prefill_chunk or None,
+                       block_size=args.block_size or None,
+                       num_blocks=args.num_blocks or None,
+                       temperature=args.temperature,
+                       rng=(jax.random.PRNGKey(args.seed + 1)
+                            if args.temperature > 0 else None))
+    except ValueError as e:
+        print(f"[engine] config rejected: {e}")
+        return 1
     max_seq = eng.max_seq
     reqs = E.synthetic_requests(
         args.n_requests, rate_per_s=args.rate, vocab=cfg.vocab,
         prompt_len=args.prompt_len, max_new_tokens=args.gen_tokens,
         deadline_s=deadline, seed=args.seed,
+        shared_prefix_len=args.shared_prefix_len,
         source_shape=R.source_shape(cfg))
     eng.warmup()         # compile before the clock starts: the measured
-    rep = eng.serve(reqs, clock="wall")       # p99 is serving, not tracing
+    try:                                      # p99 is serving, not tracing
+        rep = eng.serve(reqs, clock="wall")
+    except E.RequestTooLong as e:
+        print(f"[engine] request rejected at admission: {e}")
+        return 1
     deadline_of = {r.rid: r.deadline_s for r in reqs}
     met = np.mean([r.finish_s <= deadline_of[r.rid]
                    for r in rep.results]) if rep.results else 0.0
@@ -241,6 +262,15 @@ def main(argv=None):
     print(f"[engine] time-to-first-token {rep.mean_ttft_s*1e3:.2f} ms mean "
           f"/ {rep.p99_ttft_s*1e3:.2f} ms p99 "
           f"(prefill chunk {rep.prefill_chunk or 'off'})")
+    if rep.block_size:
+        print(f"[engine] paged KV: {rep.num_blocks} blocks x "
+              f"{rep.block_size} positions, {rep.kv_hbm_bytes/1e6:.2f} MB "
+              f"resident; peak {rep.peak_blocks_used} blocks used "
+              f"({rep.mean_block_util:.1%} mean util); "
+              f"{rep.shared_block_hits} shared-prefix block hits "
+              f"({rep.shared_hit_rate:.1%} of demand, "
+              f"{rep.prefill_tokens_skipped} prefill tokens skipped); "
+              f"effective concurrency {rep.effective_concurrency:.1f}")
     return 0
 
 

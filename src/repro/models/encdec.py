@@ -106,13 +106,14 @@ def encode(params: dict, frame_embeds: Array, cfg: ArchConfig, *,
 
 def _dec_layer(cfg, mode, lp, x, enc_out, positions, kv_cache=None,
                cache_index=None, valid_len=None, xattn_precomputed=None,
-               xattn_valid_len=None):
+               xattn_valid_len=None, block_tables=None):
     acfg_s = _attn_cfg(cfg, causal=True)
     acfg_x = _attn_cfg(cfg, causal=False)
     h = L.layernorm(lp["ln_self"], x)
     a, new_kv = L.attention(lp["self_attn"], h, acfg_s, mode=mode,
                             positions=positions, kv_cache=kv_cache,
-                            cache_index=cache_index, valid_len=valid_len)
+                            cache_index=cache_index, valid_len=valid_len,
+                            block_tables=block_tables)
     x = x + a
     h = L.layernorm(lp["ln_cross"], x)
     a, _ = L.attention(lp["cross_attn"], h, acfg_x, mode=mode,
@@ -171,10 +172,38 @@ def init_cache(cfg: ArchConfig, batch: int, s_max: int,
             "xlen": jnp.full((batch,), cfg.enc_seq, jnp.int32)}
 
 
+def init_paged_cache(cfg: ArchConfig, num_slots: int, s_max: int,
+                     block_size: int, num_blocks: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Paged self-attention KV (physical blocks (L, NB, bs, KV, hd) + a
+    per-slot block table); cross-attention K/V stays slot-resident — the
+    primed source row is written whole at admission and has no growing
+    positional frontier to page."""
+    if s_max % block_size:
+        raise ValueError(f"s_max={s_max} must tile into whole blocks of "
+                         f"{block_size}")
+    shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads,
+             cfg.head_dim)
+    xshape = (cfg.n_layers, num_slots, cfg.enc_seq, cfg.n_kv_heads,
+              cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "xk": jnp.zeros(xshape, dtype), "xv": jnp.zeros(xshape, dtype),
+            "xlen": jnp.full((num_slots,), cfg.enc_seq, jnp.int32),
+            "block_tables": jnp.zeros((num_slots, s_max // block_size),
+                                      jnp.int32)}
+
+
+def paged_block_axes(cache: dict) -> dict:
+    """Physical-block (NB) axis per PAGED leaf; xk/xv/xlen stay
+    slot-resident (see init_paged_cache)."""
+    return {"k": 1, "v": 1}
+
+
 def cache_batch_axes(cache: dict) -> dict:
     """Batch (slot) axis per cache leaf: layer-stacked leaves keep batch
-    at axis 1; the per-row cross frontier ``xlen`` IS the batch axis."""
-    return {k: (0 if k == "xlen" else 1) for k in cache}
+    at axis 1; the per-row cross frontier ``xlen`` and the per-slot block
+    table ARE batch-leading."""
+    return {k: (0 if k in ("xlen", "block_tables") else 1) for k in cache}
 
 
 def _cross_kv(params, enc_out, cfg, *, mode=FP):
@@ -248,13 +277,14 @@ def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
     # masking is a no-op there and would only disable the TPU flash
     # cross-attention kernel
     xlen = cache["xlen"] if cache_index.ndim else None
+    tables = cache.get("block_tables")      # (B, MB) int32: paged mode
 
     def body(x, lp_and_kv):
         lp, ck, cv, xk, xv = lp_and_kv
         out, new_kv = _dec_layer(cfg, mode, lp, x, None, positions,
                                  kv_cache=(ck, cv), cache_index=cache_index,
                                  xattn_precomputed=(xk, xv),
-                                 xattn_valid_len=xlen)
+                                 xattn_valid_len=xlen, block_tables=tables)
         return out, new_kv
 
     x, (nk, nv) = jax.lax.scan(
@@ -262,4 +292,13 @@ def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
                   cache["xk"], cache["xv"]))
     x = L.layernorm(params["ln_f"], x)
     logits = L.unembed(params["embed"], x)
+    if tables is not None:
+        # paged: the scan emitted only the new-token entries (L, B, 1, ...)
+        # — scatter them through each row's table into the physical pool
+        return logits, dict(
+            cache,
+            k=L.paged_append(cache["k"], nk, tables, cache_index,
+                             block_axis=1),
+            v=L.paged_append(cache["v"], nv, tables, cache_index,
+                             block_axis=1))
     return logits, dict(cache, k=nk, v=nv)

@@ -129,6 +129,34 @@ def _cache_write(c: Array, new: Array, idx: Array) -> Array:
     )(c, new, idx)
 
 
+def paged_gather(c: Array, block_tables: Array) -> Array:
+    """Gather physical KV blocks (NB, bs, ...) through per-row tables
+    (B, MB) into the contiguous (B, MB*bs, ...) logical layout the dense
+    decode path uses — identical bytes in, identical einsums out, so the
+    paged path stays bit-for-bit with the contiguous reference."""
+    g = c[block_tables]                       # (B, MB, bs, ...)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def paged_append(c: Array, new: Array, block_tables: Array, idx: Array, *,
+                 block_axis: int) -> Array:
+    """Scatter each row's new-token entry (..., B, 1, KV, hd) into the
+    physical block pool (..., NB, bs, KV, hd) through its table at
+    logical position ``idx`` (() or (B,)).  ``block_axis`` is the NB axis
+    of ``c`` (the batch axis of ``new``).  Rows whose table entry is the
+    reserved trash block 0 write there harmlessly — trash is never read
+    because attention masks past each row's frontier."""
+    blk = c.shape[block_axis + 1]
+    batch = new.shape[block_axis]
+    idx = jnp.asarray(idx)
+    if idx.ndim == 0:
+        idx = jnp.full((batch,), idx, jnp.int32)
+    phys = block_tables[jnp.arange(batch), idx // blk]    # (B,)
+    off = idx % blk                                       # (B,)
+    pre = (slice(None),) * block_axis
+    return c.at[pre + (phys, off)].set(new[pre + (slice(None), 0)])
+
+
 def _chunked_attention(q: Array, k: Array, v: Array, *, causal: bool,
                        window: Optional[int], q_block: int,
                        q_offset: int = 0,
@@ -199,6 +227,7 @@ def attention(p: dict, x: Array, cfg: AttnConfig, *,
               xattn_precomputed: Optional[Tuple[Array, Array]] = None,
               xattn_valid_len: Optional[Array] = None,
               append_only: bool = False,
+              block_tables: Optional[Array] = None,
               ) -> Tuple[Array, Optional[Tuple[Array, Array]]]:
     """GQA attention with three modes:
 
@@ -221,6 +250,16 @@ def attention(p: dict, x: Array, cfg: AttnConfig, *,
       () or (B,) masks each row's source reads at its own primed length,
       so a slot row holding a shorter source (or a previous tenant's
       stale tail) contributes nothing past the frontier.
+
+    ``block_tables`` (B, MB) int32 switches decode to the paged KV cache:
+    ``kv_cache`` leaves are physical blocks (NB, bs, KV, hd) and each
+    row's logical position p lives at block ``table[b, p // bs]``, offset
+    ``p % bs``.  The einsum path gathers the blocks into the SAME
+    contiguous layout as above and writes the new token into the gathered
+    view, so the math (and its rounding) is bit-identical to the
+    contiguous non-append path; ``new_cache`` returns just the new-token
+    entries for the caller to scatter through the table outside the layer
+    scan (see :func:`paged_append`).
     """
     b, s, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -254,6 +293,7 @@ def attention(p: dict, x: Array, cfg: AttnConfig, *,
         # (measured: the dominant collective term of the decode baseline).
         q = constrain(q, "act_heads_decode")
         quantized = len(kv_cache) == 4          # (k, v, k_scale, v_scale)
+        paged = block_tables is not None
 
         def q8(t):                              # (B, s, KV, hd) -> int8
             tf = t.astype(jnp.float32)
@@ -270,7 +310,24 @@ def attention(p: dict, x: Array, cfg: AttnConfig, *,
             ck, cv, cks, cvs = kv_cache
             kq, ks = q8(k)
             vq, vs = q8(v)
-            if append_only:
+            if paged:
+                # Paged: gather physical blocks into the contiguous layout
+                # and write the new token into the gathered VIEW — the
+                # einsum below then sees byte-identical inputs to the
+                # contiguous non-append path (bit parity).  Only the
+                # new-token entries return; the caller scatters them
+                # through the table post-scan.
+                pck, pcv, pcks, pcvs = ck, cv, cks, cvs
+                ck = _cache_write(paged_gather(pck, block_tables), kq,
+                                  cache_index)
+                cv = _cache_write(paged_gather(pcv, block_tables), vq,
+                                  cache_index)
+                cks = _cache_write(paged_gather(pcks, block_tables), ks,
+                                   cache_index)
+                cvs = _cache_write(paged_gather(pcvs, block_tables), vs,
+                                   cache_index)
+                new_cache = (kq, vq, ks, vs)
+            elif append_only:
                 # §Perf iteration A4/C3: do NOT rewrite the cache slice
                 # inside the layer scan (that costs a full slice write+read
                 # per layer per step); return just the new token's entry —
@@ -290,7 +347,14 @@ def attention(p: dict, x: Array, cfg: AttnConfig, *,
                 vq.astype(jnp.float32) * vs
         else:
             ck, cv = kv_cache                   # (B, S_slots, KV, hd)
-            if append_only:
+            if paged:
+                pck, pcv = ck, cv
+                ck = _cache_write(paged_gather(pck, block_tables),
+                                  k.astype(pck.dtype), cache_index)
+                cv = _cache_write(paged_gather(pcv, block_tables),
+                                  v.astype(pcv.dtype), cache_index)
+                new_cache = (k.astype(pck.dtype), v.astype(pcv.dtype))
+            elif append_only:
                 new_cache = (k.astype(ck.dtype), v.astype(cv.dtype))
             else:
                 ck = _cache_write(ck, k.astype(ck.dtype), cache_index)
@@ -313,7 +377,17 @@ def attention(p: dict, x: Array, cfg: AttnConfig, *,
             # so the fused kernel now serves ALL quantized decode, not
             # only the in-scan-update (non-append) variant.
             from repro.kernels import ops as kops
-            if append_only:
+            if paged:
+                # physical blocks stream through the per-row table inside
+                # the kernel (scalar-prefetch grid); the cache holds tokens
+                # < cache_index, the current token's k/v ride along as the
+                # append column.  The gathered view above is dead code on
+                # this branch and gets DCE'd.
+                out = kops.decode_attention(
+                    q.reshape(b, kvh, g, hd), pck, pcv, pcks, pcvs,
+                    cache_index, block_tables=block_tables,
+                    k_new=k_self, v_new=v_self, out_dtype=jnp.float32)
+            elif append_only:
                 out = kops.decode_attention(
                     q.reshape(b, kvh, g, hd), ck, cv, cks, cvs,
                     cache_index, k_new=k_self, v_new=v_self,

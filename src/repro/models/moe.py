@@ -210,6 +210,8 @@ def forward(params: dict, tokens: Array, cfg: ArchConfig, *,
 
 
 init_cache = TF.init_cache
+init_paged_cache = TF.init_paged_cache
+paged_block_axes = TF.paged_block_axes
 
 
 def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
@@ -228,11 +230,16 @@ def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
     else:
         positions = cache_index + jnp.arange(s)[None, :]
     acfg = TF.attn_config(cfg)
-    s_alloc = cache["k"].shape[2]
+    tables = cache.get("block_tables")      # (B, MB) int32: paged mode
+    if tables is not None:
+        s_alloc = tables.shape[1] * cache["k"].shape[2]   # MB * bs
+    else:
+        s_alloc = cache["k"].shape[2]
     write_idx = cache_index % s_alloc if cfg.window else cache_index
     valid_len = jnp.minimum(cache_index + s, s_alloc)
     quant = "k_scale" in cache
-    append = cfg.window is None and cfg.n_kv_heads >= 16  # see TF.decode_step
+    append = (tables is None and cfg.window is None
+              and cfg.n_kv_heads >= 16)     # see TF.decode_step
 
     def body(x, lp_and_cache):
         if quant:
@@ -246,7 +253,7 @@ def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
             lp["attn"], h, acfg, mode=mode, positions=positions,
             kv_cache=kv, cache_index=write_idx,
             valid_len=valid_len, positions_k=positions,
-            append_only=append)
+            append_only=append, block_tables=tables)
         x = x + attn_out
         h = TF.norm_apply(cfg, lp["ln_mlp"], x)
         x = x + moe_ffn(lp["moe"], h, cfg, mode=mode)
@@ -257,7 +264,13 @@ def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
         xs = (params["layers"], cache["k"], cache["v"],
               cache["k_scale"], cache["v_scale"])
         x, (nk, nv, nks, nvs) = jax.lax.scan(body, x, xs)
-        if append:
+        if tables is not None:
+            new_cache = dict(cache)
+            for key, new in (("k", nk), ("v", nv),
+                             ("k_scale", nks), ("v_scale", nvs)):
+                new_cache[key] = L.paged_append(cache[key], new, tables,
+                                                write_idx, block_axis=1)
+        elif append:
             new_cache = {
                 "k": w(cache["k"], nk, write_idx),
                 "v": w(cache["v"], nv, write_idx),
@@ -268,7 +281,13 @@ def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
     else:
         x, (nk, nv) = jax.lax.scan(
             body, x, (params["layers"], cache["k"], cache["v"]))
-        if append:
+        if tables is not None:
+            new_cache = dict(cache)
+            new_cache["k"] = L.paged_append(cache["k"], nk, tables,
+                                            write_idx, block_axis=1)
+            new_cache["v"] = L.paged_append(cache["v"], nv, tables,
+                                            write_idx, block_axis=1)
+        elif append:
             new_cache = {"k": w(cache["k"], nk, write_idx),
                          "v": w(cache["v"], nv, write_idx)}
         else:

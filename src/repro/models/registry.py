@@ -66,6 +66,39 @@ def apply_decode(params, cfg: ArchConfig, batch: dict, cache, *,
                          batch["cache_index"], cfg, mode=mode)
 
 
+def supports_paging(cfg: ArchConfig) -> bool:
+    """True when the family can serve from a paged (block-table) KV
+    cache: it must have a growing positional KV frontier (excludes the
+    recurrent ssm/hybrid state) and full attention (a sliding window's
+    ring overwrite has no stable position -> block mapping)."""
+    return (cfg.window is None
+            and hasattr(module_for(cfg), "init_paged_cache"))
+
+
+def init_paged_cache(cfg: ArchConfig, num_slots: int, s_max: int,
+                     block_size: int, num_blocks: int, dtype=None):
+    """Paged KV cache: positional leaves become physical blocks
+    (..., num_blocks, block_size, KV, hd) shared by all slots through the
+    per-slot ``cache["block_tables"]`` (num_slots, s_max // block_size)
+    int32 leaf; block 0 is the reserved trash block.  Non-positional
+    leaves (primed cross K/V, xlen) stay slot-resident."""
+    import jax.numpy as jnp
+    if not supports_paging(cfg):
+        raise ValueError(f"family {cfg.family!r} (window={cfg.window}) "
+                         f"does not support the paged KV cache")
+    return module_for(cfg).init_paged_cache(cfg, num_slots, s_max,
+                                            block_size, num_blocks,
+                                            dtype or jnp.bfloat16)
+
+
+def paged_block_axes(cfg: ArchConfig, cache: dict) -> dict:
+    """Physical-block (NB) axis per PAGED cache leaf — the axis a block
+    table entry indexes.  Leaves absent from this dict (cross K/V, xlen,
+    the table itself) are slot-resident and keep cache_batch_axes
+    semantics."""
+    return module_for(cfg).paged_block_axes(cache)
+
+
 # ---------------------------------------------------------------------------
 # slot-engine contract (per-row decode state; see docs/serving.md)
 # ---------------------------------------------------------------------------

@@ -115,6 +115,38 @@ def init_cache(cfg: ArchConfig, batch: int, s_max: int,
     return {"k": zeros, "v": jnp.zeros_like(zeros)}
 
 
+def init_paged_cache(cfg: ArchConfig, num_slots: int, s_max: int,
+                     block_size: int, num_blocks: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Paged KV cache: physical blocks (L, NB, bs, KV, hd) plus a per-slot
+    block table (num_slots, s_max // bs) int32.  Block 0 is the reserved
+    trash block every unallocated entry points at.  Only full-attention
+    archs page (a window's ring overwrite has no stable positional
+    frontier to map through a table)."""
+    if cfg.window:
+        raise ValueError("paged KV cache requires full attention "
+                         f"(window=None), got window={cfg.window}")
+    if s_max % block_size:
+        raise ValueError(f"s_max={s_max} must tile into whole blocks of "
+                         f"{block_size}")
+    shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads,
+             cfg.head_dim)
+    tables = jnp.zeros((num_slots, s_max // block_size), jnp.int32)
+    if cfg.kv_quant:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+                "v_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+                "block_tables": tables}
+    zeros = jnp.zeros(shape, dtype)
+    return {"k": zeros, "v": jnp.zeros_like(zeros), "block_tables": tables}
+
+
+def paged_block_axes(cache: dict) -> dict:
+    """Physical-block (NB) axis of each paged cache leaf."""
+    return {k: 1 for k in cache if k != "block_tables"}
+
+
 def _stacked_cache_write(c: Array, new: Array, idx: Array) -> Array:
     """Append ``new`` (L, B, s, KV, hd) into the stacked cache
     (L, B, S, KV, hd) at sequence position ``idx`` — scalar () lockstep or
@@ -149,7 +181,11 @@ def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
     else:
         positions = cache_index + jnp.arange(s)[None, :]
     acfg = attn_config(cfg)
-    s_alloc = cache["k"].shape[2]
+    tables = cache.get("block_tables")      # (B, MB) int32: paged mode
+    if tables is not None:
+        s_alloc = tables.shape[1] * cache["k"].shape[2]   # MB * bs
+    else:
+        s_alloc = cache["k"].shape[2]
     write_idx = cache_index % s_alloc if cfg.window else cache_index
     valid_len = jnp.minimum(cache_index + s, s_alloc)
 
@@ -165,7 +201,8 @@ def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
     # starcoder2 37.8 ms vs 7.9 ms), so they keep the in-scan update.
     # Ring (windowed) caches also keep it: their overwrite slot must leave
     # the masked set.
-    append = cfg.window is None and cfg.n_kv_heads >= 16
+    append = (tables is None and cfg.window is None
+              and cfg.n_kv_heads >= 16)
 
     def body(x, lp_and_cache):
         if quant:
@@ -179,7 +216,7 @@ def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
             lp["attn"], h, acfg, mode=mode, positions=positions,
             kv_cache=kv, cache_index=write_idx,
             valid_len=valid_len, positions_k=positions,
-            append_only=append)
+            append_only=append, block_tables=tables)
         x = x + attn_out
         h = norm_apply(cfg, lp["ln_mlp"], x)
         x = x + L.mlp(lp["mlp"], h, gated=cfg.gated_mlp,
@@ -190,7 +227,16 @@ def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
         xs = (params["layers"], cache["k"], cache["v"],
               cache["k_scale"], cache["v_scale"])
         x, (nk, nv, nks, nvs) = jax.lax.scan(body, x, xs)
-        if append:
+        if tables is not None:
+            # paged append: scatter each row's new-token entry through its
+            # block table into the physical pool (inactive rows' tables
+            # point at trash block 0)
+            new_cache = dict(cache)
+            for key, new in (("k", nk), ("v", nv),
+                             ("k_scale", nks), ("v_scale", nvs)):
+                new_cache[key] = L.paged_append(cache[key], new, tables,
+                                                write_idx, block_axis=1)
+        elif append:
             w = _stacked_cache_write
             new_cache = {
                 "k": w(cache["k"], nk, write_idx),
@@ -202,7 +248,13 @@ def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
     else:
         x, (nk, nv) = jax.lax.scan(
             body, x, (params["layers"], cache["k"], cache["v"]))
-        if append:
+        if tables is not None:
+            new_cache = dict(cache)
+            new_cache["k"] = L.paged_append(cache["k"], nk, tables,
+                                            write_idx, block_axis=1)
+            new_cache["v"] = L.paged_append(cache["v"], nv, tables,
+                                            write_idx, block_axis=1)
+        elif append:
             w = _stacked_cache_write
             new_cache = {"k": w(cache["k"], nk, write_idx),
                          "v": w(cache["v"], nv, write_idx)}

@@ -137,12 +137,52 @@ def init_cache(cfg: ArchConfig, batch: int, s_max: int,
     return cache
 
 
+def init_paged_cache(cfg: ArchConfig, num_slots: int, s_max: int,
+                     block_size: int, num_blocks: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Paged self-attention KV: physical blocks replace the per-slot S
+    axis in every self-KV leaf (grouped AND leftover — all layers share
+    ONE block pool, indexed by the same per-slot table); cross K/V and
+    ``xlen`` stay slot-resident exactly as in init_cache."""
+    if s_max % block_size:
+        raise ValueError(f"s_max={s_max} must tile into whole blocks of "
+                         f"{block_size}")
+    n_groups, leftover = _layout(cfg)
+    blk = (num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+    xshape = (n_groups, num_slots, cfg.n_patches, cfg.n_kv_heads,
+              cfg.head_dim)
+    cache = {
+        "k": jnp.zeros((n_groups, cfg.xattn_every) + blk, dtype),
+        "v": jnp.zeros((n_groups, cfg.xattn_every) + blk, dtype),
+        "xk": jnp.zeros(xshape, dtype),
+        "xv": jnp.zeros(xshape, dtype),
+        "xlen": jnp.full((num_slots,), cfg.n_patches, jnp.int32),
+        "block_tables": jnp.zeros((num_slots, s_max // block_size),
+                                  jnp.int32),
+    }
+    if leftover:
+        cache["lo_k"] = jnp.zeros((leftover,) + blk, dtype)
+        cache["lo_v"] = jnp.zeros((leftover,) + blk, dtype)
+    return cache
+
+
+def paged_block_axes(cache: dict) -> dict:
+    """Physical-block (NB) axis per PAGED leaf; cross K/V stays
+    slot-resident (see init_paged_cache)."""
+    axes = {"k": 2, "v": 2}
+    if "lo_k" in cache:
+        axes["lo_k"] = 1
+        axes["lo_v"] = 1
+    return axes
+
+
 def cache_batch_axes(cache: dict) -> dict:
     """Batch (slot) axis per cache leaf: grouped self-KV stacks
     (group, layer-in-group) ahead of batch, cross K/V stacks the group
-    axis only, leftover layers stack one layer axis, and ``xlen`` IS the
-    batch axis."""
-    axes = {"k": 2, "v": 2, "xk": 1, "xv": 1, "xlen": 0}
+    axis only, leftover layers stack one layer axis, and ``xlen`` /
+    the per-slot block table ARE batch-leading."""
+    axes = {"k": 2, "v": 2, "xk": 1, "xv": 1, "xlen": 0,
+            "block_tables": 0}
     if "lo_k" in cache:
         axes["lo_k"] = 1
         axes["lo_v"] = 1
@@ -206,13 +246,15 @@ def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
     # masking is a no-op there and would only disable the TPU flash
     # cross-attention kernel
     xlen = cache["xlen"] if cache_index.ndim else None
+    tables = cache.get("block_tables")      # (B, MB) int32: paged mode
     acfg = TF.attn_config(cfg)
 
     def one_layer(x, lp, ck, cv):
         h = TF.norm_apply(cfg, lp["ln_attn"], x)
         a, new_kv = L.attention(lp["attn"], h, acfg, mode=mode,
                                 positions=positions, kv_cache=(ck, cv),
-                                cache_index=cache_index)
+                                cache_index=cache_index,
+                                block_tables=tables)
         x = x + a
         h = TF.norm_apply(cfg, lp["ln_mlp"], x)
         x = x + L.mlp(lp["mlp"], h, gated=cfg.gated_mlp,
@@ -243,7 +285,17 @@ def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
     x, (nk, nv) = jax.lax.scan(
         group_body, x, (params["groups"], cache["k"], cache["v"],
                         cache["xk"], cache["xv"]))
-    new_cache = dict(cache, k=nk, v=nv)
+    if tables is not None:
+        # paged: nk/nv are new-token entries (G, E, B, 1, KV, hd) —
+        # scatter through each row's table into the physical pool
+        new_cache = dict(
+            cache,
+            k=L.paged_append(cache["k"], nk, tables, cache_index,
+                             block_axis=2),
+            v=L.paged_append(cache["v"], nv, tables, cache_index,
+                             block_axis=2))
+    else:
+        new_cache = dict(cache, k=nk, v=nv)
     if "leftover" in params:
         def plain_body(x, lp_kv):
             lp, ck1, cv1 = lp_kv
@@ -251,8 +303,14 @@ def decode_step(params: dict, tokens: Array, cache: dict, cache_index: Array,
         x, (lk, lv) = jax.lax.scan(
             plain_body, x, (params["leftover"], cache["lo_k"],
                             cache["lo_v"]))
-        new_cache["lo_k"] = lk
-        new_cache["lo_v"] = lv
+        if tables is not None:
+            new_cache["lo_k"] = L.paged_append(cache["lo_k"], lk, tables,
+                                               cache_index, block_axis=1)
+            new_cache["lo_v"] = L.paged_append(cache["lo_v"], lv, tables,
+                                               cache_index, block_axis=1)
+        else:
+            new_cache["lo_k"] = lk
+            new_cache["lo_v"] = lv
     x = TF.norm_apply(cfg, params["ln_f"], x)
     head = params.get("unembed", params["embed"])
     return L.unembed(head, x), new_cache

@@ -341,11 +341,7 @@ def make_prefill_chunk_step(cfg: ArchConfig, *, mode: QuantMode = FP,
     # token-only families keep the scalar (lockstep) variant bit-for-bit
     vec_index = R.needs_prime(cfg)
 
-    def step(params, tokens, cache, sid, start, n_valid):
-        axes = R.cache_batch_axes(cfg, cache)
-        slot = {k: jax.lax.dynamic_slice_in_dim(v, sid, 1, axis=axes[k])
-                for k, v in cache.items()}
-
+    def _scan_slot(params, tokens, slot, start, n_valid):
         def body(carry, inp):
             slot, idx = carry
             tok, i = inp
@@ -362,9 +358,63 @@ def make_prefill_chunk_step(cfg: ArchConfig, *, mode: QuantMode = FP,
         (slot, _), _ = jax.lax.scan(
             body, (slot, jnp.asarray(start, jnp.int32)),
             (tokens, jnp.arange(chunk)))
+        return slot
+
+    def step(params, tokens, cache, sid, start, n_valid):
+        if "block_tables" in cache:
+            return _paged_step(params, tokens, cache, sid, start, n_valid)
+        axes = R.cache_batch_axes(cfg, cache)
+        slot = {k: jax.lax.dynamic_slice_in_dim(v, sid, 1, axis=axes[k])
+                for k, v in cache.items()}
+        slot = _scan_slot(params, tokens, slot, start, n_valid)
         return {k: jax.lax.dynamic_update_slice_in_dim(
                     cache[k], slot[k], sid, axis=axes[k])
                 for k in cache}
+
+    def _paged_step(params, tokens, cache, sid, start, n_valid):
+        # Paged cache: gather the slot's logical row through its block
+        # table into a CONTIGUOUS one-slot view (bit-identical bytes to
+        # what the contiguous engine would hold), run the same per-token
+        # scan on it, then scatter the row's blocks back at the table's
+        # physical entries.  Unwritten/shared table entries are rewritten
+        # with the bytes just gathered — byte-identical, so shared blocks
+        # are never mutated and duplicate trash entries (block 0) all
+        # write the same block-0 content back.
+        axes = R.cache_batch_axes(cfg, cache)
+        paxes = R.paged_block_axes(cfg, cache)
+        trow = jax.lax.dynamic_slice_in_dim(
+            cache["block_tables"], sid, 1, axis=0)[0]       # (MB,) int32
+        slot = {}
+        for k, v in cache.items():
+            if k == "block_tables":
+                continue
+            a = paxes.get(k)
+            if a is None:                    # slot-resident leaf (xk/xv/xlen)
+                slot[k] = jax.lax.dynamic_slice_in_dim(v, sid, 1,
+                                                       axis=axes[k])
+            else:                            # paged leaf: gather via table
+                gat = jnp.take(v, trow, axis=a)     # (..., MB, bs, ...)
+                shp = (gat.shape[:a] + (gat.shape[a] * gat.shape[a + 1],)
+                       + gat.shape[a + 2:])
+                slot[k] = jnp.expand_dims(gat.reshape(shp), axis=a)
+        # the inner decode sees a contiguous (no-table) slot view, so it
+        # takes the exact same write/mask path as the contiguous engine
+        slot = _scan_slot(params, tokens, slot, start, n_valid)
+        out = dict(cache)
+        for k, v in cache.items():
+            if k == "block_tables":
+                continue
+            a = paxes.get(k)
+            if a is None:
+                out[k] = jax.lax.dynamic_update_slice_in_dim(
+                    v, slot[k], sid, axis=axes[k])
+            else:
+                row = jnp.squeeze(slot[k], axis=a)
+                shp = (row.shape[:a] + (trow.shape[0], v.shape[a + 1])
+                       + row.shape[a + 1:])
+                blocks = row.reshape(shp)
+                out[k] = v.at[(slice(None),) * a + (trow,)].set(blocks)
+        return out
 
     return step
 

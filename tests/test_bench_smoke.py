@@ -21,7 +21,11 @@ ROW_KEYS = {
     "engine": {"arch", "family", "rate", "n_requests", "num_slots",
                "p99_s", "tokens_per_s", "mean_occupancy", "ticks",
                "admissions_while_busy", "occupancy_curve",
-               "prefill_chunk", "mean_ttft_s", "p99_ttft_s"},
+               "prefill_chunk", "mean_ttft_s", "p99_ttft_s",
+               "block_size", "num_blocks", "kv_hbm_bytes",
+               "peak_blocks_used", "mean_block_util", "shared_block_hits",
+               "shared_hit_rate", "prefill_tokens_skipped",
+               "effective_concurrency"},
 }
 
 
@@ -80,6 +84,26 @@ def test_rows_are_sane(bench_doc):
             assert all(0 <= a <= row["num_slots"]
                        for a in row["occupancy_curve"])
             assert 0 < row["mean_ttft_s"] <= row["p99_s"]
+            assert row["kv_hbm_bytes"] > 0
+            assert row["effective_concurrency"] > 0
+            if row["block_size"]:             # a paged-engine row
+                assert row["num_blocks"] >= 2
+                assert 0 < row["peak_blocks_used"] < row["num_blocks"]
+                assert 0 < row["mean_block_util"] <= 1
+                assert 0 <= row["shared_hit_rate"] < 1
+            else:
+                assert row["peak_blocks_used"] == 0
+                assert row["shared_block_hits"] == 0
+
+
+def test_paged_engine_row_present(bench_doc):
+    """The paged-KV trajectory row: block-table decode with a shared
+    system prompt, so block reuse shows up in the memory columns."""
+    paged = [row for row in bench_doc["rows"]
+             if row["kind"] == "engine" and row["block_size"]]
+    assert paged, "no paged engine row in the trajectory JSON"
+    assert any(row["shared_block_hits"] > 0 for row in paged)
+    assert any(row["prefill_tokens_skipped"] > 0 for row in paged)
 
 
 def test_engine_rows_cover_all_decode_families(bench_doc):
