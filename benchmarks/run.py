@@ -114,6 +114,23 @@ def smoke(kernel_rows=None) -> int:
           f"{eng['paged_limited_peak_occupancy']} concurrent requests "
           f"from a 4-row block budget, block-gather kernel parity OK")
 
+    # chaos gate: a bursty two-class trace with seeded faults and forced
+    # preemptions must complete with zero uncaught exceptions, no leaked
+    # KV blocks, and bit-for-bit parity on every non-failed output (plus
+    # a no-fault control arm matching the sequential reference)
+    chaos = serving_bench.chaos_smoke()
+    print(f"[chaos] smoke: {chaos['requests']} requests survived "
+          f"{chaos['faults_fired']} injected faults "
+          f"({chaos['dispatch_retries']} dispatch retries, "
+          f"{chaos['nonfinite_samples']} non-finite samples caught, "
+          f"{chaos['torn_rows_repaired']} torn block-table rows "
+          f"repaired) and {chaos['preempted']} preemptions with "
+          f"{chaos['failed']} typed failures, {chaos['leaked_blocks']} "
+          f"leaked blocks, exact-resume parity on every non-failed "
+          f"output; goodput {chaos['goodput_tokens_per_s']:.0f} tok/s "
+          f"at {chaos['slo_attainment']:.1%} SLO attainment; no-fault "
+          f"control arm bit-for-bit OK")
+
     print("\nsmoke OK: flops/bytes nonzero, scan trip count exact")
     return 0
 

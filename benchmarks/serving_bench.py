@@ -104,6 +104,9 @@ def serving_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
                             n_requests=16, num_slots=4, prompt_len=6,
                             gen_tokens=6, block_size=4,
                             shared_prefix_len=4))
+    # the multi-tenant row: bursty MMPP two-class trace under per-class
+    # quotas + preemption — per-class p99/ttft and goodput-under-SLO
+    rows.extend(two_class_rows(arch, quant=quant))
     return rows
 
 
@@ -166,30 +169,92 @@ def engine_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
             shared_prefix_len=shared_prefix_len,
             source_shape=source_shape)
         rep = eng.serve(reqs, clock="virtual", tick_s=tick_s)
-        rows.append({
-            "kind": "engine", "arch": cfg.name, "family": cfg.family,
-            "rate": rate,
-            "n_requests": n_requests, "num_slots": rep.num_slots,
-            "p99_s": rep.p99_latency_s,
-            "tokens_per_s": rep.tokens_per_s,
-            "mean_occupancy": rep.mean_occupancy,
-            "ticks": rep.ticks,
-            "admissions_while_busy": rep.admissions_while_busy,
-            "occupancy_curve": _downsample(rep.occupancy),
-            "prefill_chunk": rep.prefill_chunk,
-            "mean_ttft_s": rep.mean_ttft_s,
-            "p99_ttft_s": rep.p99_ttft_s,
-            "block_size": rep.block_size,
-            "num_blocks": rep.num_blocks,
-            "kv_hbm_bytes": rep.kv_hbm_bytes,
-            "peak_blocks_used": rep.peak_blocks_used,
-            "mean_block_util": rep.mean_block_util,
-            "shared_block_hits": rep.shared_block_hits,
-            "shared_hit_rate": rep.shared_hit_rate,
-            "prefill_tokens_skipped": rep.prefill_tokens_skipped,
-            "effective_concurrency": rep.effective_concurrency,
-        })
+        rows.append(_engine_row(cfg, rate, n_requests, rep))
     return rows
+
+
+def _engine_row(cfg, rate, n_requests, rep):
+    """One BENCH engine row from an EngineReport (schema pinned by
+    tests/test_bench_smoke.py)."""
+    return {
+        "kind": "engine", "arch": cfg.name, "family": cfg.family,
+        "rate": rate,
+        "n_requests": n_requests, "num_slots": rep.num_slots,
+        "p99_s": rep.p99_latency_s,
+        "tokens_per_s": rep.tokens_per_s,
+        "mean_occupancy": rep.mean_occupancy,
+        "ticks": rep.ticks,
+        "admissions_while_busy": rep.admissions_while_busy,
+        "occupancy_curve": _downsample(rep.occupancy),
+        "prefill_chunk": rep.prefill_chunk,
+        "mean_ttft_s": rep.mean_ttft_s,
+        "p99_ttft_s": rep.p99_ttft_s,
+        "block_size": rep.block_size,
+        "num_blocks": rep.num_blocks,
+        "kv_hbm_bytes": rep.kv_hbm_bytes,
+        "peak_blocks_used": rep.peak_blocks_used,
+        "mean_block_util": rep.mean_block_util,
+        "shared_block_hits": rep.shared_block_hits,
+        "shared_hit_rate": rep.shared_hit_rate,
+        "prefill_tokens_skipped": rep.prefill_tokens_skipped,
+        "effective_concurrency": rep.effective_concurrency,
+        # overload robustness: per-SLO-class tails + the honest metric
+        # at scale (goodput counts only completed-on-time requests)
+        "class_p99_latency_s": dict(rep.class_p99_latency_s),
+        "class_mean_ttft_s": dict(rep.class_mean_ttft_s),
+        "class_p99_ttft_s": dict(rep.class_p99_ttft_s),
+        "goodput_tokens_per_s": rep.goodput_tokens_per_s,
+        "slo_attainment": rep.slo_attainment,
+        "preempted": rep.preempted,
+        "dropped": rep.dropped,
+        "failed": rep.failed,
+        "unfinished": rep.unfinished,
+    }
+
+
+def two_class_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
+                   rate: float = 800.0, n_requests: int = 24,
+                   num_slots: int = 4, batch_quota: int = 2):
+    """The multi-tenant BENCH row: a bursty MMPP two-class trace served
+    under per-class slot quotas with preemption on, so the per-class
+    columns diverge (interactive holds its tail while batch absorbs the
+    overload) and the goodput/SLO-attainment columns mean something."""
+    import jax
+
+    from benchmarks import traces as TR
+    from repro import engine as E
+    from repro.configs import get_config
+    from repro.core import batching as bt
+    from repro.core.qlinear import FP, W8A16, W8A8
+    from repro.core.quant import quantize_tree
+    from repro.models import registry as R
+
+    mode = {"fp": FP, "w8a16": W8A16, "w8a8": W8A8}[quant]
+    cfg = dataclasses.replace(get_config(arch).reduced(), kv_quant=True)
+    params = R.init(jax.random.PRNGKey(0), cfg)
+    if mode.enabled:
+        params = quantize_tree(params, min_size=2048)
+    policy = bt.AdmissionPolicy(lambda b: 0.0, max_batch=num_slots,
+                                max_wait_s=0.0,
+                                class_quotas={"batch": batch_quota})
+    eng = E.Engine(cfg, params, mode=mode, num_slots=num_slots,
+                   max_seq=24, prefill_chunk=4, block_size=4,
+                   policy=policy)
+    reqs = TR.two_class_trace(n_requests, rate_per_s=rate, vocab=cfg.vocab,
+                              seed=0, interactive_deadline_s=0.05,
+                              batch_deadline_s=2.0,
+                              prompt_len=(2, 8), max_new_tokens=(2, 8))
+    # first wall serve pays trace+compile; measure the real per-tick
+    # cost on the second and replay under the virtual clock (same
+    # discipline as engine_rows — deadlines are meaningless against a
+    # tick cost that includes compilation)
+    eng.serve(reqs[:num_slots], clock="wall")
+    warm = eng.serve(reqs[:num_slots], clock="wall")
+    tick_s = warm.wall_s / max(warm.ticks, 1)
+    rep = eng.serve(reqs, clock="virtual", tick_s=tick_s, preemption=True)
+    row = _engine_row(cfg, rate, n_requests, rep)
+    row["arch"] = cfg.name + "+2class"
+    return [row]
 
 
 def engine_smoke(n_requests: int = 12) -> dict:
@@ -363,6 +428,101 @@ def engine_smoke(n_requests: int = 12) -> dict:
             "paged_shared_block_hits": prep.shared_block_hits,
             "paged_prefill_tokens_skipped": prep.prefill_tokens_skipped,
             "paged_limited_peak_occupancy": max(lrep.occupancy)}
+
+
+def chaos_smoke(n_requests: int = 200) -> dict:
+    """The overload/fault gate (``benchmarks/run.py --smoke``): a
+    bursty MMPP two-class trace with seeded faults and forced
+    preemptions through a deliberately under-provisioned paged engine.
+    Must complete with zero uncaught exceptions, and the invariants
+    must hold:
+
+    - every request gets exactly one typed result (nothing lost);
+    - the block pool drains clean (``leaked_blocks == 0``);
+    - preemptions and faults actually fired (the run exercised the
+      machinery, not an idle pass);
+    - every non-failed completed request's output is bit-for-bit its
+      sequential reference (exact resume under chaos);
+    - the control arm — same trace, no faults, no preemption, ample
+      blocks — stays bit-for-bit the reference too (the machinery
+      costs nothing when off).
+    """
+    import jax
+
+    from benchmarks import traces as TR
+    from repro import engine as E
+    from repro.configs import get_config
+    from repro.core import batching as bt
+    from repro.models import registry as R
+
+    cfg = dataclasses.replace(
+        get_config("starcoder2-3b").reduced(), kv_quant=True)
+    params = R.init(jax.random.PRNGKey(0), cfg)
+    # dwell times scaled to the trace's ~0.1 s horizon so the MMPP
+    # actually switches states (the 0.5 s defaults model second-scale
+    # burst cycles and would look constant-rate here)
+    reqs = TR.two_class_trace(n_requests, rate_per_s=2000.0,
+                              vocab=cfg.vocab, seed=7,
+                              interactive_deadline_s=1e9,
+                              batch_deadline_s=1e9,
+                              prompt_len=(2, 8), max_new_tokens=(2, 6),
+                              arrival=TR.mmpp_process(
+                                  dwell_s=(0.05, 0.0125)))
+    times = [r.arrival_s for r in reqs]
+    if TR.index_of_dispersion(times, window_s=0.01) <= 1.2:
+        raise AssertionError("chaos trace is not bursty (IoD <= 1.2); "
+                             "MMPP parameters broken?")
+    want = E.reference_outputs(cfg, params, reqs, max_seq=16)
+
+    # chaos arm: tight block pool (forces preemption under pressure),
+    # seeded fault plan (dispatch + nan + torn-table), class quotas
+    policy = bt.AdmissionPolicy(lambda b: 0.0, max_batch=4,
+                                max_wait_s=0.0, class_quotas={"batch": 2})
+    eng = E.Engine(cfg, params, num_slots=4, max_seq=16, prefill_chunk=4,
+                   block_size=4, num_blocks=13, policy=policy)
+    plan = E.FaultPlan.random(seed=42, n_faults=12, max_tick=300,
+                              num_slots=4)
+    rep = eng.serve(reqs, clock="virtual", tick_s=1e-3, preemption=True,
+                    fault_plan=plan)
+    if len(rep.results) != n_requests:
+        raise AssertionError(
+            f"chaos arm lost requests: {len(rep.results)}/{n_requests}")
+    if rep.leaked_blocks != 0:
+        raise AssertionError(f"chaos arm leaked {rep.leaked_blocks} "
+                             "KV blocks")
+    if rep.preempted <= 0:
+        raise AssertionError("chaos arm never preempted: the block pool "
+                             "is not tight enough to exercise eviction")
+    if not plan.fired:
+        raise AssertionError("no scheduled fault fired: the plan's ticks "
+                             "miss the run entirely")
+    bad = [r.rid for r in rep.results
+           if r.status == "ok" and r.tokens != want[r.rid]]
+    if bad:
+        raise AssertionError(
+            f"chaos arm outputs diverge from reference for rids {bad[:8]}"
+            " — exact resume is broken")
+
+    # control arm: same trace, machinery off, ample resources —
+    # bit-for-bit parity, nothing preempted, nothing failed
+    ctl = E.Engine(cfg, params, num_slots=4, max_seq=16, prefill_chunk=4,
+                   block_size=4)
+    crep = ctl.serve(reqs, clock="virtual", tick_s=1e-3)
+    if crep.outputs() != want:
+        raise AssertionError("control arm != sequential reference")
+    if crep.preempted or crep.failed or crep.dropped:
+        raise AssertionError("control arm triggered robustness machinery "
+                             "with faults off")
+    return {"requests": len(rep.results),
+            "preempted": rep.preempted,
+            "failed": rep.failed,
+            "faults_fired": len(plan.fired),
+            "dispatch_retries": rep.dispatch_retries,
+            "nonfinite_samples": rep.nonfinite_samples,
+            "torn_rows_repaired": rep.torn_rows_repaired,
+            "leaked_blocks": rep.leaked_blocks,
+            "goodput_tokens_per_s": rep.goodput_tokens_per_s,
+            "slo_attainment": rep.slo_attainment}
 
 
 def rows():

@@ -1,0 +1,154 @@
+"""Workload synthesis beyond well-behaved pseudo-Poisson traces.
+
+Production serving traffic is bursty (arrivals cluster far beyond what a
+Poisson process produces), heavy-tailed (a few huge prompts/outputs
+dominate the mass), and multi-class (interactive requests with tight
+deadlines share the fleet with batch traffic that only cares about
+throughput).  This module builds such traces deterministically — same
+seed, same trace, byte for byte — as plain inputs to the engine:
+
+- :func:`mmpp_process` — a 2-state Markov-modulated Poisson process
+  (the standard burstiness model: a "calm" and a "burst" rate with
+  exponential dwell times).  Returned as an ``arrival_process`` callable
+  for :func:`repro.engine.synthetic_requests` or :func:`two_class_trace`.
+- :func:`heavy_tailed_lengths` — bounded-Pareto integer lengths.
+- :func:`two_class_trace` — the whole package: MMPP arrivals,
+  heavy-tailed prompt/output lengths, and per-class SLO deadlines on an
+  interactive/batch split, returning ``EngineRequest`` records.
+- :func:`index_of_dispersion` — the burstiness statistic the tests and
+  the chaos gate assert on (Poisson counts have IoD ~= 1; MMPP > 1).
+"""
+from __future__ import annotations
+
+import random
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.engine import EngineRequest
+
+ArrivalProcess = Callable[[int, float, int], List[float]]
+
+
+def poisson_process() -> ArrivalProcess:
+    """The engine's default pseudo-Poisson arrivals, in ``arrival_process``
+    form (``expovariate`` draws from ``random.Random(seed)`` — the same
+    generator discipline ``core.batching.poisson_arrivals`` uses)."""
+    def proc(n: int, rate_per_s: float, seed: int) -> List[float]:
+        rng = random.Random(seed)
+        t, out = 0.0, []
+        for _ in range(n):
+            t += rng.expovariate(rate_per_s)
+            out.append(t)
+        return out
+    return proc
+
+
+def mmpp_process(modulation: Tuple[float, float] = (0.25, 4.0),
+                 dwell_s: Tuple[float, float] = (0.5, 0.125)
+                 ) -> ArrivalProcess:
+    """2-state MMPP: state ``k`` emits Poisson arrivals at
+    ``rate_per_s * modulation[k]`` and dwells an exponential time of mean
+    ``dwell_s[k]`` before switching.  Because exponential inter-arrivals
+    are memoryless, discarding the draw that crosses a state boundary
+    and redrawing at the boundary's rate is the *exact* process, not an
+    approximation.  The defaults give calm traffic punctuated by 16x
+    bursts — arrival counts are overdispersed
+    (:func:`index_of_dispersion` > 1) while the long-run mean rate stays
+    near ``rate_per_s``."""
+    if len(modulation) != 2 or len(dwell_s) != 2:
+        raise ValueError("mmpp_process takes exactly two states")
+    if min(modulation) <= 0 or min(dwell_s) <= 0:
+        raise ValueError("modulation factors and dwell times must be > 0")
+
+    def proc(n: int, rate_per_s: float, seed: int) -> List[float]:
+        rng = random.Random(seed)
+        t, state = 0.0, 0
+        state_end = rng.expovariate(1.0 / dwell_s[0])
+        out: List[float] = []
+        while len(out) < n:
+            dt = rng.expovariate(rate_per_s * modulation[state])
+            if t + dt > state_end:
+                t = state_end
+                state = 1 - state
+                state_end = t + rng.expovariate(1.0 / dwell_s[state])
+                continue
+            t += dt
+            out.append(t)
+        return out
+    return proc
+
+
+def heavy_tailed_lengths(n: int, *, lo: int, hi: int,
+                         alpha: float = 1.6, seed: int = 0) -> List[int]:
+    """Bounded-Pareto integer lengths in ``[lo, hi]`` via the inverse
+    CDF: most draws sit near ``lo``, a heavy tail reaches ``hi`` — the
+    shape real prompt/output length distributions have.  Smaller
+    ``alpha`` = heavier tail."""
+    if not 1 <= lo <= hi:
+        raise ValueError(f"need 1 <= lo <= hi, got lo={lo}, hi={hi}")
+    if alpha <= 0:
+        raise ValueError(f"alpha must be > 0, got {alpha}")
+    rng = random.Random(seed * 7919 + 17)
+    la, ha = lo ** -alpha, hi ** -alpha
+    out = []
+    for _ in range(n):
+        u = rng.random()
+        x = (la - u * (la - ha)) ** (-1.0 / alpha)
+        out.append(min(hi, max(lo, int(round(x)))))
+    return out
+
+
+def index_of_dispersion(times: Sequence[float], *,
+                        window_s: float = 0.25) -> float:
+    """Variance-to-mean ratio of arrival counts in fixed windows: ~1 for
+    Poisson, > 1 for bursty (overdispersed) traffic.  The statistic the
+    trace tests and the chaos gate pin burstiness with."""
+    if not times:
+        return 0.0
+    horizon = times[-1] + 1e-9
+    nwin = max(1, int(horizon / window_s))
+    counts = [0] * nwin
+    for t in times:
+        counts[min(nwin - 1, int(t / window_s))] += 1
+    mean = sum(counts) / nwin
+    if mean == 0:
+        return 0.0
+    var = sum((c - mean) ** 2 for c in counts) / nwin
+    return var / mean
+
+
+def two_class_trace(n: int, *, rate_per_s: float, vocab: int,
+                    seed: int = 0,
+                    interactive_frac: float = 0.7,
+                    interactive_deadline_s: float = 0.25,
+                    batch_deadline_s: float = 8.0,
+                    prompt_len: Tuple[int, int] = (2, 12),
+                    max_new_tokens: Tuple[int, int] = (2, 10),
+                    alpha: float = 1.6,
+                    arrival: Optional[ArrivalProcess] = None
+                    ) -> List[EngineRequest]:
+    """A bursty two-class trace: MMPP arrivals (by default), bounded-
+    Pareto prompt/output lengths, and per-class SLO deadlines.  Request
+    ``rid`` is interactive iff ``(rid * 2654435761) % 1000 <
+    interactive_frac * 1000`` — a deterministic hash split, so the class
+    mix is stable under any ``n``.  Prompts are rid-derived exactly like
+    ``synthetic_requests`` (two runs see identical token streams)."""
+    if not 0.0 <= interactive_frac <= 1.0:
+        raise ValueError(f"interactive_frac must be in [0, 1], "
+                         f"got {interactive_frac}")
+    times = (arrival or mmpp_process())(n, rate_per_s, seed)
+    plens = heavy_tailed_lengths(n, lo=prompt_len[0], hi=prompt_len[1],
+                                 alpha=alpha, seed=seed)
+    glens = heavy_tailed_lengths(n, lo=max_new_tokens[0],
+                                 hi=max_new_tokens[1], alpha=alpha,
+                                 seed=seed + 1)
+    reqs = []
+    for rid, t in enumerate(times):
+        interactive = (rid * 2654435761) % 1000 < interactive_frac * 1000
+        cls = "interactive" if interactive else "batch"
+        ddl = interactive_deadline_s if interactive else batch_deadline_s
+        prompt = tuple(1 + (rid * 7 + 3 * j) % (vocab - 1)
+                       for j in range(plens[rid]))
+        reqs.append(EngineRequest(
+            rid=rid, prompt=prompt, max_new_tokens=glens[rid],
+            arrival_s=t, deadline_s=t + ddl, priority=cls))
+    return reqs

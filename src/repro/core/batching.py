@@ -31,7 +31,8 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import heapq
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,13 +114,32 @@ class Request:
     rid: int = 0
 
 
+# SLO classes, best first.  ``priority_rank`` is total order position:
+# anything unknown sorts AFTER the known classes (conservative — an
+# unrecognized class never outranks interactive traffic).
+PRIORITY_CLASSES = ("interactive", "batch")
+
+
+def priority_rank(cls: str) -> int:
+    """Smaller is better; unknown classes rank last."""
+    try:
+        return PRIORITY_CLASSES.index(cls)
+    except ValueError:
+        return len(PRIORITY_CLASSES)
+
+
 @dataclasses.dataclass(frozen=True)
 class Admission:
     """One scheduler decision: launch ``batch`` requests now, or wait for
-    more arrivals until ``wait_until``."""
+    more arrivals until ``wait_until``.  When the class-aware path ran
+    (quota enforcement may skip over a quota-blocked request to admit a
+    later one), ``picks`` carries the explicit pending-queue indices of
+    the cohort; ``picks is None`` means the legacy prefix cohort
+    ``pending[:batch]``."""
     launch: bool
     batch: int = 0
     wait_until: float = 0.0
+    picks: Optional[Tuple[int, ...]] = None
 
 
 class AdmissionPolicy:
@@ -132,19 +152,32 @@ class AdmissionPolicy:
     pending deadline; launch immediately if waiting for one more request
     would break that bound, otherwise wait for the next arrival (at most
     ``max_wait_s`` away).
+
+    ``class_quotas`` adds SLO-class admission (overload robustness):
+    ``{"batch": k}`` caps the batch class at ``k`` concurrently active
+    slots, so a flood of batch traffic can never occupy the slots an
+    interactive arrival needs.  The pending queue is ordered class-first
+    (see ``SlotScheduler.push``) and the cohort shrinks from its tail,
+    so under pressure the lowest class is dropped first — shrink *by
+    class before deadline*.  A class without a quota entry is uncapped.
     """
 
     def __init__(self, service_time: Callable[[int], float],
-                 max_batch: int = 256, max_wait_s: float = 2e-3):
+                 max_batch: int = 256, max_wait_s: float = 2e-3,
+                 class_quotas: Optional[Mapping[str, int]] = None):
         self.service_time = service_time
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
+        self.class_quotas = dict(class_quotas or {})
 
     def decide(self, now: float, deadlines: Sequence[float],
                next_arrival: Optional[float] = None,
                capacity: Optional[int] = None,
                costs: Optional[Sequence[int]] = None,
-               budget: Optional[int] = None) -> Admission:
+               budget: Optional[int] = None,
+               classes: Optional[Sequence[str]] = None,
+               active_by_class: Optional[Mapping[str, int]] = None
+               ) -> Admission:
         """``deadlines``: absolute deadlines of pending requests, sorted
         ascending (an empty queue is a no-launch wait).  ``capacity``
         caps the batch below ``max_batch`` (the live engine passes its
@@ -156,12 +189,24 @@ class AdmissionPolicy:
         has free — the batch shrinks until its summed cost fits, and an
         unaffordable head-of-line request waits (blocks drain at
         retirement, so waiting makes progress; "free slot exists" is no
-        longer sufficient)."""
+        longer sufficient).
+
+        ``classes``/``active_by_class`` switch on per-class slot quotas:
+        ``classes[i]`` is pending request i's SLO class and
+        ``active_by_class`` the slots each class already holds.  A
+        request whose class quota is full is *skipped over* (not a
+        barrier: later pending requests of an unblocked class still
+        admit), so the cohort is returned as explicit ``picks`` indices
+        rather than a prefix length."""
         if not deadlines:
             return Admission(False, wait_until=(
                 next_arrival if next_arrival is not None else now))
         cap = self.max_batch if capacity is None \
             else min(capacity, self.max_batch)
+        if classes is not None:
+            return self._decide_classes(now, deadlines, next_arrival, cap,
+                                        costs, budget, classes,
+                                        active_by_class)
         earliest = deadlines[0]
         b = min(len(deadlines), cap)
         # shrink until the batch finishes by the earliest deadline
@@ -183,6 +228,45 @@ class AdmissionPolicy:
         if can_wait:
             return Admission(False, wait_until=next_arrival)
         return Admission(True, batch=b)
+
+    def _decide_classes(self, now, deadlines, next_arrival, cap,
+                        costs, budget, classes, active_by_class):
+        """Class-aware cohort selection.  With no quotas configured and a
+        uniform class this reduces exactly to the legacy prefix path
+        (no request is ever skipped, so picks == range(b))."""
+        used: Dict[str, int] = dict(active_by_class or {})
+        sel: List[int] = []
+        for i, c in enumerate(classes):
+            if len(sel) >= cap:
+                break
+            quota = self.class_quotas.get(c)
+            if quota is not None and used.get(c, 0) >= quota:
+                continue                       # quota-blocked: skip, not stop
+            sel.append(i)
+            used[c] = used.get(c, 0) + 1
+        wait = Admission(False, wait_until=(
+            next_arrival if next_arrival is not None else now))
+        if not sel:
+            return wait
+        # shrink from the TAIL — the queue is class-ordered, so pressure
+        # sheds the lowest class first, then the latest deadline
+        earliest = min(deadlines[i] for i in sel)
+        while len(sel) > 1 and now + self.service_time(len(sel)) > earliest:
+            sel.pop()
+            earliest = min(deadlines[i] for i in sel)
+        if costs is not None and budget is not None:
+            while sel and sum(costs[i] for i in sel) > budget:
+                sel.pop()
+            if not sel:
+                return wait
+        can_wait = (
+            len(sel) < cap and next_arrival is not None
+            and next_arrival - now <= self.max_wait_s
+            and next_arrival + self.service_time(
+                min(len(sel) + 1, cap)) <= earliest)
+        if can_wait:
+            return Admission(False, wait_until=next_arrival)
+        return Admission(True, batch=len(sel), picks=tuple(sel))
 
 
 # ---------------------------------------------------------------------------

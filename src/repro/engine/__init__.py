@@ -22,16 +22,24 @@ layout: fixed-size physical blocks behind a per-slot block table
 (``slots.BlockPool`` holds the free list / refcounts / prefix-hash
 registry), with identical-prompt prefixes shared copy-on-extend and
 admission priced in worst-case blocks instead of free slots alone.
+
+Overload robustness (``faults`` + ``serve(preemption=...,
+fault_plan=...)``): SLO-class admission with per-class slot quotas,
+slot preemption with bit-for-bit exact resume, and a seeded
+deterministic fault-injection harness with bounded per-slot recovery —
+see "Overload & failure semantics" in ``docs/serving.md``.
 """
 from repro.engine.engine import (Engine, EngineReport, EngineRequest,
                                  RequestResult, reference_outputs,
                                  synthetic_requests)
+from repro.engine.faults import FAULT_KINDS, Fault, FaultPlan
 from repro.engine.scheduler import SlotScheduler
 from repro.engine.slots import (BlockPool, RequestTooLong, SlotPool,
                                 SlotState)
 
 __all__ = [
     "BlockPool", "Engine", "EngineReport", "EngineRequest",
+    "FAULT_KINDS", "Fault", "FaultPlan",
     "RequestResult", "RequestTooLong", "SlotPool", "SlotScheduler",
     "SlotState", "reference_outputs", "synthetic_requests",
 ]

@@ -57,8 +57,10 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import batching as bt
 from repro.core.qlinear import FP, QuantMode
+from repro.engine.faults import FaultPlan
 from repro.engine.scheduler import SlotScheduler
 from repro.engine.slots import BlockPool, RequestTooLong, SlotPool
+from repro.runtime.watchdog import StepWatchdog
 from repro.models import registry as R
 from repro.runtime import steps as ST
 
@@ -76,6 +78,11 @@ class EngineRequest:
     # static source length; the pad is masked behind the row's xlen.
     source: Optional[np.ndarray] = dataclasses.field(
         default=None, compare=False, repr=False)
+    # SLO class (see core.batching.PRIORITY_CLASSES): admission orders
+    # and sheds cohorts class-first, per-class slot quotas cap how many
+    # slots a class may hold, and preemption only ever evicts a slot of
+    # strictly lower class than the request it makes room for
+    priority: str = "interactive"
 
 
 @dataclasses.dataclass
@@ -88,6 +95,13 @@ class RequestResult:
     finish_s: float
     slot: int
     dropped: bool = False             # retired before completing (deadline)
+    # typed outcome: "ok" (completed), "dropped" (deadline miss, mirrors
+    # the bool), "failed" (retired by fault recovery after max_retries),
+    # "unfinished" (still in flight when the tick cap hit)
+    status: str = "ok"
+    priority: str = "interactive"
+    preemptions: int = 0              # times evicted + exactly resumed
+    deadline_s: float = float("inf")
 
     @property
     def latency_s(self) -> float:
@@ -136,9 +150,44 @@ class EngineReport:
     shared_hit_rate: float = 0.0      # hits / worst-case blocks demanded
     prefill_tokens_skipped: int = 0   # prompt tokens served from shared blocks
     effective_concurrency: float = 0.0  # mean active requests per tick
+    # overload robustness (serve(preemption=..., fault_plan=...)):
+    preempted: int = 0                # eviction events (exact resume each)
+    failed: int = 0                   # requests retired by fault recovery
+    unfinished: int = 0               # requests retired by the tick cap
+    dispatch_retries: int = 0         # failed fused-step dispatch attempts
+    nonfinite_samples: int = 0        # sentinel tokens caught by the guard
+    torn_rows_repaired: int = 0       # block-table rows audited + rebuilt
+    stuck_ticks: int = 0              # wall-clock stragglers (watchdog)
+    leaked_blocks: int = 0            # pool deficit at drain (must be 0)
+    # per-SLO-class tails + the honest metric at scale: goodput counts
+    # only completed requests that met their deadline
+    class_p99_latency_s: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    class_mean_ttft_s: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    class_p99_ttft_s: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    goodput_tokens_per_s: float = 0.0
+    slo_attainment: float = 0.0       # ok-and-on-time / all requests
 
     def outputs(self) -> Dict[int, List[int]]:
         return {r.rid: r.tokens for r in self.results}
+
+
+@dataclasses.dataclass
+class _Stash:
+    """A preempted request's host-side progress, held between eviction
+    and re-admission.  Device state is deliberately NOT kept: resume
+    reconstructs every cache byte by teacher-forcing ``prompt +
+    generated`` through the chunked-prefill path (decode is
+    deterministic and the sampling key schedule is position-based, so
+    the rebuilt run is bit-for-bit the never-preempted run) —
+    "preempted state is reconstructed, never trusted"."""
+    generated: List[int]
+    first_token_s: float
+    admit_s: float
+    preemptions: int
+    retries: int
 
 
 class Engine:
@@ -312,7 +361,10 @@ class Engine:
               clock: str = "virtual",
               tick_s: Union[float, Callable[[int], float]] = 1e-3,
               max_ticks: Optional[int] = None,
-              drop_missed_deadlines: bool = False) -> EngineReport:
+              drop_missed_deadlines: bool = False,
+              preemption: bool = False,
+              fault_plan: Optional[FaultPlan] = None,
+              max_retries: int = 3) -> EngineReport:
         """Serve a whole request trace; return per-request outputs and
         achieved latency/throughput/occupancy metrics.
 
@@ -320,13 +372,31 @@ class Engine:
         ``tick_s(active_count)`` when callable) — fully deterministic,
         used by tests and the offline benchmark.  ``clock="wall"``: time
         is the measured host clock — the live mode, where arrivals
-        interleave with real step latency.
+        interleave with real step latency and a rolling-median watchdog
+        flags stuck ticks (``EngineReport.stuck_ticks``).
 
         ``drop_missed_deadlines=True`` retires a slot the tick its
         deadline passes (possibly mid-prefill, before any token): its
         result is recorded with ``dropped=True``, whatever it generated,
         and — crucially — the ``first_token_s = -1.0`` sentinel, which
         the ttft aggregates below exclude.
+
+        ``preemption=True`` lets admission-time pressure (no free slot,
+        or a paged block claim the pool cannot cover) evict the active
+        slot of strictly lower SLO class than the pending head — latest
+        deadline first.  The victim's blocks are released, its host
+        progress stashed, and it re-enters the pending queue; on
+        re-admission its ``prompt + generated-so-far`` is teacher-forced
+        through the chunked-prefill path, so the resumed output is
+        bit-for-bit the never-preempted output (docs/serving.md).
+
+        ``fault_plan`` injects a seeded :class:`FaultPlan`'s failures at
+        their scheduled ticks; the recovery machinery (always on)
+        retries failed dispatches, rebuilds slots that sample the
+        non-finite sentinel or lose a torn block-table row, and retires
+        a slot still faulting after ``max_retries`` recovery attempts
+        with the typed ``failed`` status — one poisoned slot never takes
+        down the cohort.
         """
         if clock not in ("virtual", "wall"):
             raise ValueError(f"clock must be 'virtual' or 'wall': {clock!r}")
@@ -350,6 +420,7 @@ class Engine:
             if self._prime_step is not None:
                 _validate_source(self.cfg, r)
         reqs = sorted(requests, key=lambda r: r.arrival_s)
+        by_rid = {r.rid: r for r in reqs}
         S = self.num_slots
         pool = SlotPool(S, max_seq=self.max_seq)
         sched = SlotScheduler(self.policy)
@@ -362,6 +433,12 @@ class Engine:
         dropped = 0
         ticks = 0
         gen_tokens = 0
+        # overload robustness state: stashed progress of preempted
+        # requests (rid -> _Stash) and the fault/recovery counters
+        stash: Dict[int, _Stash] = {}
+        preempted = failed = unfinished = 0
+        dispatch_retries = nonfinite = torn_repaired = 0
+        wd = StepWatchdog() if clock == "wall" else None
         # paged-mode state: the host block pool + the host mirror of the
         # device block-table leaf (pushed before any dispatch reads it)
         paged = self.block_size is not None
@@ -394,6 +471,53 @@ class Engine:
             tables_np[st.sid, :] = 0          # retired row scatters to trash
             tables_dirty = True
 
+        def _eff_req(req: EngineRequest) -> EngineRequest:
+            """The request as (re-)admission sees it: a preempted request
+            resumes with its stashed tokens appended to the prompt
+            (teacher-forced through prefill — the exact-resume mechanism)
+            and its token budget reduced by the same count, so its total
+            cache claim is invariant under preemption."""
+            s = stash.get(req.rid)
+            if s is None or not s.generated:
+                return req
+            return dataclasses.replace(
+                req, prompt=req.prompt + tuple(s.generated),
+                max_new_tokens=req.max_new_tokens - len(s.generated))
+
+        def _preempt(st) -> None:
+            """Evict a live slot with exact-resume semantics: release its
+            blocks, stash host progress, requeue the original request.
+            No device state survives — resume rebuilds it all."""
+            nonlocal preempted
+            preempted += 1
+            rid = st.rid                  # pool.free() scrubs it to -1
+            stash[rid] = _Stash(
+                generated=list(st.generated or []),
+                first_token_s=st.first_token_s, admit_s=st.admit_s,
+                preemptions=st.preemptions + 1, retries=st.retries)
+            if paged and st.block_table is not None:
+                _release_blocks(st)
+            pool.free(st.sid)
+            index[st.sid] = 0
+            tokens[st.sid, 0] = 0
+            sched.push(by_rid[rid])
+
+        def _fail(st) -> None:
+            """Retire a slot fault recovery gave up on (typed status)."""
+            nonlocal failed
+            failed += 1
+            results.append(RequestResult(
+                rid=st.rid, tokens=list(st.generated or []),
+                arrival_s=st.arrival_s, admit_s=st.admit_s,
+                first_token_s=st.first_token_s, finish_s=now,
+                slot=st.sid, status="failed", priority=st.priority,
+                preemptions=st.preemptions, deadline_s=st.deadline_s))
+            if paged and st.block_table is not None:
+                _release_blocks(st)
+            pool.free(st.sid)
+            index[st.sid] = 0
+            tokens[st.sid, 0] = 0
+
         i, now = 0, 0.0
         t0 = time.perf_counter()
         limit = max_ticks if max_ticks is not None else \
@@ -411,37 +535,90 @@ class Engine:
                 # 2) admit into free slots — mid-flight, no drain barrier
                 generating = any(s.active and not s.in_prefill
                                  for s in pool.slots)
+                if preemption and sched.pending:
+                    # resource pressure + a strictly-higher-class head:
+                    # evict the lowest-class generating slot (latest
+                    # deadline first) until the head fits or no victim of
+                    # lower class remains — equal class never preempts,
+                    # so batch can't thrash batch
+                    head = sched.pending[0]
+                    hrank = bt.priority_rank(
+                        getattr(head, "priority", bt.PRIORITY_CLASSES[0]))
+                    for _ in range(S):
+                        pressed = pool.free_count == 0 or (
+                            paged and self._block_cost(_eff_req(head), bpool)
+                            > bpool.free_blocks)
+                        if not pressed:
+                            break
+                        victims = [s for s in pool.active_slots()
+                                   if bt.priority_rank(s.priority) > hrank]
+                        if not victims:
+                            break
+                        _preempt(max(victims, key=lambda s: (
+                            bt.priority_rank(s.priority), s.deadline_s,
+                            s.sid)))
+                quotas_on = bool(self.policy.class_quotas)
+                abc = None
+                if quotas_on:
+                    abc = {}
+                    for s in pool.active_slots():
+                        abc[s.priority] = abc.get(s.priority, 0) + 1
                 cohort = sched.admit(
                     now, pool.free_count, next_arrival,
-                    cost_fn=((lambda r: self._block_cost(r, bpool))
+                    cost_fn=((lambda r: self._block_cost(_eff_req(r), bpool))
                              if paged else None),
-                    budget=bpool.free_blocks if paged else None)
+                    budget=bpool.free_blocks if paged else None,
+                    active_by_class=abc)
                 admitted = 0
                 for req in cohort:
+                    s_res = stash.get(req.rid)
                     if drop_missed_deadlines and now > req.deadline_s:
                         # expired while queued: retire WITHOUT taking a
                         # slot — no prime or prefill dispatch is wasted
-                        # on a request that is already dead
+                        # on a request that is already dead (a preempted
+                        # request keeps what it had generated)
                         results.append(RequestResult(
-                            rid=req.rid, tokens=[],
-                            arrival_s=req.arrival_s, admit_s=now,
-                            first_token_s=-1.0, finish_s=now, slot=-1,
-                            dropped=True))
+                            rid=req.rid,
+                            tokens=list(s_res.generated) if s_res else [],
+                            arrival_s=req.arrival_s,
+                            admit_s=s_res.admit_s if s_res else now,
+                            first_token_s=(s_res.first_token_s if s_res
+                                           else -1.0),
+                            finish_s=now, slot=-1, dropped=True,
+                            status="dropped", priority=req.priority,
+                            preemptions=s_res.preemptions if s_res else 0,
+                            deadline_s=req.deadline_s))
+                        stash.pop(req.rid, None)
                         dropped += 1
                         continue
                     admitted += 1
-                    st = pool.alloc(req.rid, req.prompt, req.max_new_tokens,
+                    eff = _eff_req(req)
+                    st = pool.alloc(req.rid, eff.prompt, eff.max_new_tokens,
                                     now=now, arrival_s=req.arrival_s,
-                                    deadline_s=req.deadline_s)
+                                    deadline_s=req.deadline_s,
+                                    priority=req.priority)
+                    if s_res is not None:
+                        # exact resume: the stashed tokens ride the prompt
+                        # (teacher-forced), the generated list starts from
+                        # them, and ttft/admit bookkeeping survives the
+                        # eviction — alloc validated the INVARIANT claim
+                        # eff.prompt + eff.max_new == original total
+                        st.generated = list(s_res.generated)
+                        st.max_new = req.max_new_tokens
+                        st.first_token_s = s_res.first_token_s
+                        st.admit_s = s_res.admit_s
+                        st.preemptions = s_res.preemptions
+                        st.retries = s_res.retries
+                        del stash[req.rid]
                     index[st.sid] = 0
                     if paged:
                         # build the slot's block table: ref every shared
                         # prefix block (their prefill chunks are skipped
                         # entirely), alloc the rest privately — the
                         # admission decision priced exactly this claim
-                        keys = self._prefix_keys(req)
-                        hits = self._usable_hits(req, bpool, keys)
-                        need = -(-(len(req.prompt) + req.max_new_tokens)
+                        keys = self._prefix_keys(eff)
+                        hits = self._usable_hits(eff, bpool, keys)
+                        need = -(-(len(eff.prompt) + eff.max_new_tokens)
                                  // self.block_size)
                         table = []
                         for j in range(hits):
@@ -465,12 +642,13 @@ class Engine:
                         # prime dispatch: write this slot's cross-K/V row
                         # (and its xlen frontier) once, concurrently with
                         # other slots' decoding — like a prefill chunk,
-                        # its cost lands on this tick's clock
+                        # its cost lands on this tick's clock (resume
+                        # re-primes: reconstructed, never trusted)
                         src, n_valid = _padded_source(self.cfg, req)
                         cache = self._prime_step(
                             self.params, src, cache,
                             jnp.asarray(st.sid, jnp.int32), n_valid)
-                    left = len(req.prompt) - 1 - st.pos
+                    left = len(st.prompt) - 1 - st.pos
                     if self.prefill_chunk and left > 0:
                         # remaining prompt (all but the last token, minus
                         # any shared-prefix positions already resident)
@@ -492,6 +670,17 @@ class Engine:
                 if pool.active_count == 0:
                     if next_arrival is None and not sched.pending:
                         break
+                    if next_arrival is None and not cohort:
+                        # this round consumed nothing from a non-empty
+                        # queue, the pool is idle, and nothing is left to
+                        # arrive: no future round can differ — surface
+                        # the policy bug instead of spinning (the
+                        # virtual-time twin of the run_virtual guard)
+                        raise RuntimeError(
+                            "admission declined a non-empty pending queue "
+                            f"({len(sched.pending)} requests) with an idle "
+                            "pool and no future arrival; check the policy "
+                            "/ class_quotas configuration")
                     target = next_arrival if next_arrival is not None else now
                     if clock == "wall":
                         gap = target - (time.perf_counter() - t0)
@@ -529,13 +718,59 @@ class Engine:
                 active = np.array(
                     [s.active and s.chunk_left == 0 for s in pool.slots],
                     bool)
-                if active.any():
-                    nxt, cache, new_index = self._fused(
-                        tokens, cache, index, active)
-                    nxt = np.asarray(nxt)
-                    index = np.array(new_index)    # writable host copy
+                ready = [int(s) for s in np.where(active)[0]]
+                torn_sids: List[int] = []
+                if fault_plan is not None and paged and ready:
+                    # fault: tear the victim's DEVICE table row (zero ->
+                    # all-trash) just before dispatch; the host mirror
+                    # stays clean, which is exactly how the post-step
+                    # audit knows what to rebuild
+                    torn_sids = fault_plan.torn_rows(ticks, ready)
+                    if torn_sids:
+                        torn = tables_np.copy()
+                        for sid in torn_sids:
+                            torn[sid, :] = 0
+                        cache = dict(cache,
+                                     block_tables=jnp.asarray(torn))
+                        tables_dirty = True   # clean mirror repushed next
+                nxt = None
+                if ready:
+                    attempt = 0
+                    while True:
+                        culprit = (fault_plan.dispatch_fault(
+                            ticks, attempt, ready)
+                            if fault_plan is not None else None)
+                        if culprit is None:
+                            nxt, cache, new_index = self._fused(
+                                tokens, cache, index, active)
+                            nxt = np.asarray(nxt)
+                            index = np.array(new_index)  # writable host copy
+                            break
+                        # dispatch failed: charge the culprit's retry
+                        # budget; past max_retries the request is retired
+                        # as `failed` and the retry goes on without it —
+                        # one poisoned slot never takes down the cohort
+                        dispatch_retries += 1
+                        attempt += 1
+                        st = pool.slots[culprit]
+                        st.retries += 1
+                        if st.retries > max_retries:
+                            _fail(st)
+                            active[culprit] = False
+                            ready.remove(culprit)
+                            if not ready:
+                                break
                 elif clock == "wall":
                     jax.block_until_ready(cache)   # charge chunk time here
+                if fault_plan is not None and nxt is not None:
+                    # fault: poison chosen slots' logits — modelled at the
+                    # guard's observable surface, the -1 sentinel the
+                    # in-graph finite check emits for NaN/Inf rows
+                    poisoned = fault_plan.nonfinite_slots(ticks, ready)
+                    if poisoned:
+                        nxt = np.array(nxt)          # writable copy
+                        for sid in poisoned:
+                            nxt[sid] = -1
                 ticks += 1
                 occupancy.append(pool.active_count)
                 if paged:
@@ -544,14 +779,36 @@ class Engine:
                     util_sum += used / max(1, self.num_blocks - 1)
                 if clock == "wall":
                     # np.asarray(nxt) above already blocked on the step
+                    prev = now
                     now = time.perf_counter() - t0
+                    # stuck-tick watchdog: with static shapes, per-tick
+                    # wall time is tight — a straggler means a sick
+                    # host, not workload variance
+                    msg = wd.record(now - prev)
+                    if msg:
+                        warnings.warn(f"engine tick {ticks}: {msg}",
+                                      RuntimeWarning)
                 else:
                     dt = tick_s(pool.active_count) if callable(tick_s) \
                         else tick_s
                     now += dt
                 # 6) host bookkeeping: teacher-force prefill, collect
                 #    samples, retire finished slots for immediate reuse
+                for sid in torn_sids:
+                    # the torn row sent this tick's K/V write to trash
+                    # and sampled through garbage gathers: the slot's
+                    # device state can no longer be trusted, so the
+                    # audit repairs the table (clean mirror repush) and
+                    # rebuilds the tenant from scratch via preemption —
+                    # its output stays bit-for-bit (exact resume)
+                    st = pool.slots[sid]
+                    if not st.active:
+                        continue          # already retired by _fail
+                    torn_repaired += 1
+                    _preempt(st)
                 for st in pool.active_slots():
+                    if st.sid in torn_sids:
+                        continue
                     if drop_missed_deadlines and now > st.deadline_s:
                         # deadline miss — possibly mid-prefill, before
                         # any token: record with the first_token_s
@@ -560,7 +817,10 @@ class Engine:
                             rid=st.rid, tokens=list(st.generated),
                             arrival_s=st.arrival_s, admit_s=st.admit_s,
                             first_token_s=st.first_token_s, finish_s=now,
-                            slot=st.sid, dropped=True))
+                            slot=st.sid, dropped=True, status="dropped",
+                            priority=st.priority,
+                            preemptions=st.preemptions,
+                            deadline_s=st.deadline_s))
                         dropped += 1
                         if paged:
                             _release_blocks(st)
@@ -575,6 +835,21 @@ class Engine:
                         tokens[st.sid, 0] = st.prompt[st.pos]
                         continue
                     tok = int(nxt[st.sid])
+                    if tok < 0:
+                        # the in-graph finite guard's sentinel: this
+                        # slot's logits went NaN/Inf.  The sample is
+                        # garbage and the cache row suspect — rebuild
+                        # deterministically via preemption (a transient
+                        # fault recomputes clean, bit-for-bit); a slot
+                        # that keeps faulting exhausts its retry budget
+                        # and is retired as `failed`
+                        nonfinite += 1
+                        st.retries += 1
+                        if st.retries > max_retries:
+                            _fail(st)
+                        else:
+                            _preempt(st)
+                        continue
                     st.generated.append(tok)
                     gen_tokens += 1
                     if st.first_token_s < 0:
@@ -584,19 +859,59 @@ class Engine:
                             rid=st.rid, tokens=list(st.generated),
                             arrival_s=st.arrival_s, admit_s=st.admit_s,
                             first_token_s=st.first_token_s, finish_s=now,
-                            slot=st.sid))
+                            slot=st.sid, priority=st.priority,
+                            preemptions=st.preemptions,
+                            deadline_s=st.deadline_s))
                         if paged:
                             _release_blocks(st)
                         pool.free(st.sid)
                     else:
                         tokens[st.sid, 0] = tok
                 if ticks > limit:
-                    raise RuntimeError(
-                        f"engine exceeded {limit} ticks; requests stuck?")
+                    # the cap exists to bound a stuck run; hitting it is
+                    # an overload outcome, not a crash — retire everything
+                    # still in flight (and everything that never got in)
+                    # with the typed `unfinished` status and report it
+                    warnings.warn(
+                        f"engine hit the {limit}-tick cap with "
+                        f"{pool.active_count} active, "
+                        f"{len(sched.pending)} pending and "
+                        f"{len(reqs) - i} unarrived requests; retiring "
+                        "them as 'unfinished'", RuntimeWarning)
+                    for st in pool.active_slots():
+                        unfinished += 1
+                        results.append(RequestResult(
+                            rid=st.rid, tokens=list(st.generated or []),
+                            arrival_s=st.arrival_s, admit_s=st.admit_s,
+                            first_token_s=st.first_token_s, finish_s=now,
+                            slot=st.sid, status="unfinished",
+                            priority=st.priority,
+                            preemptions=st.preemptions,
+                            deadline_s=st.deadline_s))
+                        if paged:
+                            _release_blocks(st)
+                        pool.free(st.sid)
+                    for req in list(sched.pending) + reqs[i:]:
+                        s_res = stash.pop(req.rid, None)
+                        unfinished += 1
+                        results.append(RequestResult(
+                            rid=req.rid,
+                            tokens=list(s_res.generated) if s_res else [],
+                            arrival_s=req.arrival_s,
+                            admit_s=s_res.admit_s if s_res else -1.0,
+                            first_token_s=(s_res.first_token_s if s_res
+                                           else -1.0),
+                            finish_s=now, slot=-1, status="unfinished",
+                            priority=req.priority,
+                            preemptions=s_res.preemptions if s_res else 0,
+                            deadline_s=req.deadline_s))
+                    sched.pending.clear()
+                    i = len(reqs)
+                    break
 
         wall = time.perf_counter() - t0
         results.sort(key=lambda r: r.rid)
-        lat = [r.latency_s for r in results if not r.dropped]
+        lat = [r.latency_s for r in results if r.status == "ok"]
         # a request retired before emitting a token still carries the
         # first_token_s = -1.0 sentinel: it must never leak a negative
         # ttft into the aggregates
@@ -604,6 +919,18 @@ class Engine:
         dur = max(now, 1e-12)
         kv_bytes = int(sum(x.size * x.dtype.itemsize
                            for x in jax.tree_util.tree_leaves(cache)))
+        # per-SLO-class tails + goodput: only a completed request that
+        # met its deadline counts toward the honest metric at scale
+        by_class: Dict[str, List[RequestResult]] = {}
+        for r in results:
+            by_class.setdefault(r.priority, []).append(r)
+        cls_lat = {c: bt.p99([r.latency_s for r in rs if r.status == "ok"])
+                   for c, rs in sorted(by_class.items())}
+        cls_ttft = {c: [r.ttft_s for r in rs if r.emitted]
+                    for c, rs in sorted(by_class.items())}
+        good = [r for r in results
+                if r.status == "ok" and r.finish_s <= r.deadline_s]
+        good_tokens = sum(len(r.tokens) for r in good)
         return EngineReport(
             results=results, ticks=ticks, generated_tokens=gen_tokens,
             duration_s=now, wall_s=wall,
@@ -628,7 +955,22 @@ class Engine:
                              if blocks_demanded else 0.0),
             prefill_tokens_skipped=skipped_tokens,
             effective_concurrency=(sum(occupancy) / len(occupancy)
-                                   if occupancy else 0.0))
+                                   if occupancy else 0.0),
+            preempted=preempted,
+            failed=failed,
+            unfinished=unfinished,
+            dispatch_retries=dispatch_retries,
+            nonfinite_samples=nonfinite,
+            torn_rows_repaired=torn_repaired,
+            stuck_ticks=wd.slow_steps if wd is not None else 0,
+            leaked_blocks=((self.num_blocks - 1) - bpool.free_blocks
+                           if paged else 0),
+            class_p99_latency_s=cls_lat,
+            class_mean_ttft_s={c: (float(np.mean(ts)) if ts else 0.0)
+                               for c, ts in cls_ttft.items()},
+            class_p99_ttft_s={c: bt.p99(ts) for c, ts in cls_ttft.items()},
+            goodput_tokens_per_s=good_tokens / dur,
+            slo_attainment=(len(good) / len(results) if results else 0.0))
 
 
 # ---------------------------------------------------------------------------
@@ -732,8 +1074,12 @@ def synthetic_requests(n: int, *, rate_per_s: float, vocab: int,
                        deadline_s: float = float("inf"),
                        seed: int = 0,
                        shared_prefix_len: int = 0,
-                       source_shape: Optional[Tuple[int, int]] = None
-                       ) -> List[EngineRequest]:
+                       source_shape: Optional[Tuple[int, int]] = None,
+                       priority: Union[str, Callable[[int], str]]
+                       = "interactive",
+                       arrival_process: Optional[
+                           Callable[[int, float, int], Sequence[float]]]
+                       = None) -> List[EngineRequest]:
     """Deterministic pseudo-Poisson request trace with synthetic prompts
     (derived from the rid, so any two runs see identical streams).
 
@@ -747,12 +1093,29 @@ def synthetic_requests(n: int, *, rate_per_s: float, vocab: int,
     per-request source embeddings for the prime families (encdec/vlm):
     rid-seeded gaussian frames/patches whose length varies across
     requests (full, -1, -2 cyclically), so a shared slot pool holds rows
-    of different xlen frontiers at once."""
+    of different xlen frontiers at once.
+
+    ``priority`` tags every request with an SLO class (a string) or a
+    per-request one (a ``rid -> class`` callable).  ``arrival_process``
+    replaces the pseudo-Poisson arrivals with a custom process — a
+    callable ``(n, rate_per_s, seed) -> arrival times`` (sorted,
+    seconds), e.g. the MMPP/bursty builders in ``benchmarks/traces.py``.
+    The defaults reproduce today's traces byte-identically."""
     if not 0 <= shared_prefix_len <= prompt_len:
         raise ValueError(
             f"shared_prefix_len must be in [0, prompt_len={prompt_len}], "
             f"got {shared_prefix_len}")
-    arr = bt.poisson_arrivals(rate_per_s, n, 0.0, seed)
+    if arrival_process is None:
+        arr = bt.poisson_arrivals(rate_per_s, n, 0.0, seed)
+    else:
+        times = list(arrival_process(n, rate_per_s, seed))
+        if len(times) != n or any(b < a for a, b in zip(times, times[1:])):
+            raise ValueError(
+                f"arrival_process must return {n} sorted arrival times, "
+                f"got {len(times)}")
+        arr = [bt.Request(arrival_s=t, deadline_s=t, rid=rid)
+               for rid, t in enumerate(times)]
+    cls_of = priority if callable(priority) else (lambda rid: priority)
     reqs = []
     for a in arr:
         prompt = tuple(
@@ -771,5 +1134,5 @@ def synthetic_requests(n: int, *, rate_per_s: float, vocab: int,
             arrival_s=a.arrival_s,
             deadline_s=(a.arrival_s + deadline_s
                         if deadline_s != float("inf") else float("inf")),
-            source=source))
+            source=source, priority=cls_of(a.rid)))
     return reqs

@@ -27,30 +27,53 @@ class SlotScheduler:
 
     def __init__(self, policy: bt.AdmissionPolicy):
         self.policy = policy
-        self.pending: List = []          # sorted by deadline
+        self.pending: List = []          # sorted by (class rank, deadline)
 
     def push(self, req) -> None:
-        bisect.insort(self.pending, req, key=lambda r: r.deadline_s)
+        """Class-first, deadline-second ordering.  Requests without a
+        ``priority`` attribute (the simulator's ``core.batching.Request``)
+        rank as interactive (rank 0), so a single-class queue keeps
+        today's pure-deadline order — the simulator equivalence property
+        is untouched."""
+        bisect.insort(self.pending, req, key=lambda r: (
+            bt.priority_rank(getattr(r, "priority", bt.PRIORITY_CLASSES[0])),
+            r.deadline_s))
 
     def admit(self, now: float, capacity: int,
               next_arrival: Optional[float] = None, *,
-              cost_fn=None, budget: Optional[int] = None) -> List:
+              cost_fn=None, budget: Optional[int] = None,
+              active_by_class=None) -> List:
         """Requests to admit right now into ``capacity`` free slots
         (possibly none: the policy may prefer to wait for more work).
 
         ``cost_fn(req) -> int`` + ``budget`` enable memory-aware
         admission (the paged KV engine): each pending request's
         worst-case block claim is priced and the policy shrinks the
-        cohort until the summed claim fits what the pool has free."""
+        cohort until the summed claim fits what the pool has free.
+
+        ``active_by_class`` (class -> slots currently held) activates
+        per-class quota admission when the policy has ``class_quotas``;
+        quota-blocked requests are skipped, not barriers, so the policy
+        returns explicit ``picks`` indices instead of a prefix length."""
         if capacity <= 0 or not self.pending:
             return []
         costs = ([cost_fn(r) for r in self.pending]
                  if cost_fn is not None else None)
+        use_classes = bool(self.policy.class_quotas)
+        classes = ([getattr(r, "priority", bt.PRIORITY_CLASSES[0])
+                    for r in self.pending] if use_classes else None)
         act = self.policy.decide(
             now, [r.deadline_s for r in self.pending], next_arrival,
-            capacity=capacity, costs=costs, budget=budget)
+            capacity=capacity, costs=costs, budget=budget,
+            classes=classes,
+            active_by_class=active_by_class if use_classes else None)
         if not act.launch:
             return []
+        if act.picks is not None:
+            cohort = [self.pending[i] for i in act.picks]
+            for i in sorted(act.picks, reverse=True):
+                del self.pending[i]
+            return cohort
         cohort = self.pending[:act.batch]
         del self.pending[:act.batch]
         return cohort
@@ -76,6 +99,17 @@ class SlotScheduler:
             next_arrival = reqs[i].arrival_s if i < len(reqs) else None
             cohort = self.admit(now, self.policy.max_batch, next_arrival)
             if not cohort:                       # policy chose to wait
+                if next_arrival is None or next_arrival <= now:
+                    # Nothing left to wait FOR: a policy that declines a
+                    # non-empty queue after the last arrival would spin
+                    # forever (and `now = None` used to TypeError here).
+                    # Surface it as a contract violation instead.
+                    raise RuntimeError(
+                        "AdmissionPolicy declined a non-empty pending queue "
+                        f"with no future arrival to wait for (now={now!r}, "
+                        f"next_arrival={next_arrival!r}, "
+                        f"pending={len(self.pending)}); "
+                        "run_virtual cannot make progress")
                 now = next_arrival
                 continue
             finish = now + service(len(cohort))

@@ -47,6 +47,12 @@ class SlotState:
     block_table: Optional[List[int]] = None
     prompt_keys: Tuple = ()
     registered: int = 0
+    # overload robustness: the request's SLO class, how many times this
+    # tenancy's dispatch has been retried after an injected/real fault,
+    # and how many times the request has been preempted so far
+    priority: str = "interactive"
+    retries: int = 0
+    preemptions: int = 0
 
     @property
     def active(self) -> bool:
@@ -95,7 +101,8 @@ class SlotPool:
 
     def alloc(self, rid: int, prompt: Tuple[int, ...], max_new: int, *,
               now: float, arrival_s: float,
-              deadline_s: float = float("inf")) -> SlotState:
+              deadline_s: float = float("inf"),
+              priority: str = "interactive") -> SlotState:
         if not self._free:
             raise RuntimeError("no free slot (admission must respect "
                                "free_count)")
@@ -111,6 +118,7 @@ class SlotPool:
         st.arrival_s, st.admit_s, st.deadline_s = arrival_s, now, deadline_s
         st.first_token_s = -1.0
         st.block_table, st.prompt_keys, st.registered = None, (), 0
+        st.priority, st.retries, st.preemptions = priority, 0, 0
         return st
 
     def free(self, sid: int) -> None:

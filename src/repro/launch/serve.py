@@ -26,7 +26,16 @@ includes the prime cost).  ``--prefill-chunk`` turns on chunked prefill
 ``ceil(prompt_len/chunk)``), ``--temperature`` turns on per-row
 ``fold_in(rng, position)`` sampling.  ``--sim`` runs the virtual-time
 BatchQueue simulator backend instead (same admission policy, no model
-execution) — the Table 4 sanity check.  The fused multi-token decode
+execution) — the Table 4 sanity check.
+
+Overload robustness (docs/serving.md, "Overload & failure semantics"):
+``--interactive-frac``/``--batch-quota`` split the trace into SLO
+classes under per-class slot quotas, ``--arrival mmpp`` makes arrivals
+bursty, ``--preemption`` lets admission evict lower-class slots and
+resume them bit-for-bit exactly, and ``--fault-seed`` injects a
+deterministic fault plan (dispatch failures, non-finite logits, torn
+block-table rows) to exercise the recovery machinery; the report then
+adds per-class p99/ttft, goodput-under-SLO, and fault counters.  The fused multi-token decode
 loop is still timed separately (``--decode-tokens``): it remains the
 right tool for fixed-length batch completion, while the engine serves
 the ragged live stream.
@@ -155,6 +164,30 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="engine: per-row sampling temperature "
                          "(0 = greedy)")
+    ap.add_argument("--interactive-frac", type=float, default=1.0,
+                    help="engine: fraction of requests in the "
+                         "interactive SLO class (rid-hash split; the "
+                         "rest are batch class; 1.0 = single-class, "
+                         "today's trace byte-identically)")
+    ap.add_argument("--batch-quota", type=int, default=0,
+                    help="engine: max slots the batch class may hold "
+                         "concurrently (0 = no per-class quota)")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "mmpp"],
+                    help="engine: arrival process (mmpp = bursty "
+                         "2-state Markov-modulated Poisson from "
+                         "benchmarks/traces.py; needs the repo root on "
+                         "PYTHONPATH)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="engine: evict strictly-lower-class slots "
+                         "under admission pressure and resume them "
+                         "with bit-for-bit exact outputs")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="engine: seed a deterministic FaultPlan "
+                         "(dispatch failures, non-finite logits, torn "
+                         "block-table rows) to exercise recovery")
+    ap.add_argument("--n-faults", type=int, default=8,
+                    help="engine: faults in the seeded plan")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -219,7 +252,9 @@ def main(argv=None):
     # ---- the live continuous-batching engine -------------------------
     from repro import engine as E
     num_slots = ST.bucket_batch(max(batch, 1))
-    policy = bt.AdmissionPolicy(model.service_time, max_batch=num_slots)
+    quotas = {"batch": args.batch_quota} if args.batch_quota else None
+    policy = bt.AdmissionPolicy(model.service_time, max_batch=num_slots,
+                                class_quotas=quotas)
     try:
         eng = E.Engine(cfg, params, mode=mode, num_slots=num_slots,
                        max_seq=args.prompt_len + args.gen_tokens,
@@ -234,15 +269,39 @@ def main(argv=None):
         print(f"[engine] config rejected: {e}")
         return 1
     max_seq = eng.max_seq
+    arrival_process = None
+    if args.arrival == "mmpp":
+        try:
+            from benchmarks import traces as TR
+        except ImportError:
+            print("[engine] --arrival mmpp needs benchmarks/traces.py "
+                  "on PYTHONPATH (run from the repo root with "
+                  "PYTHONPATH=src:.)")
+            return 1
+        arrival_process = TR.mmpp_process()
+    frac = args.interactive_frac
+    if not 0.0 <= frac <= 1.0:
+        print(f"[engine] --interactive-frac must be in [0, 1]: {frac}")
+        return 1
+    # rid-hash class split, stable under any n (same rule as
+    # benchmarks/traces.py::two_class_trace)
+    priority = ("interactive" if frac >= 1.0 else
+                (lambda rid: "interactive"
+                 if (rid * 2654435761) % 1000 < frac * 1000 else "batch"))
     reqs = E.synthetic_requests(
         args.n_requests, rate_per_s=args.rate, vocab=cfg.vocab,
         prompt_len=args.prompt_len, max_new_tokens=args.gen_tokens,
         deadline_s=deadline, seed=args.seed,
         shared_prefix_len=args.shared_prefix_len,
-        source_shape=R.source_shape(cfg))
+        source_shape=R.source_shape(cfg),
+        priority=priority, arrival_process=arrival_process)
+    plan = (E.FaultPlan.random(args.fault_seed, n_faults=args.n_faults,
+                               num_slots=num_slots)
+            if args.fault_seed is not None else None)
     eng.warmup()         # compile before the clock starts: the measured
     try:                                      # p99 is serving, not tracing
-        rep = eng.serve(reqs, clock="wall")
+        rep = eng.serve(reqs, clock="wall", preemption=args.preemption,
+                        fault_plan=plan)
     except E.RequestTooLong as e:
         print(f"[engine] request rejected at admission: {e}")
         return 1
@@ -271,6 +330,28 @@ def main(argv=None):
               f"({rep.shared_hit_rate:.1%} of demand, "
               f"{rep.prefill_tokens_skipped} prefill tokens skipped); "
               f"effective concurrency {rep.effective_concurrency:.1f}")
+    if len(rep.class_p99_latency_s) > 1:
+        print(f"[engine] goodput {rep.goodput_tokens_per_s:,.0f} tok/s "
+              f"({rep.slo_attainment:.1%} of requests made their "
+              f"deadline)")
+        for cls in bt.PRIORITY_CLASSES:
+            if cls not in rep.class_p99_latency_s:
+                continue
+            print(f"[engine]   {cls:11s} "
+                  f"p99 {rep.class_p99_latency_s[cls]*1e3:8.2f} ms, "
+                  f"ttft {rep.class_mean_ttft_s[cls]*1e3:.2f} ms mean / "
+                  f"{rep.class_p99_ttft_s[cls]*1e3:.2f} ms p99")
+    if rep.preempted or rep.dropped or rep.failed or rep.unfinished:
+        print(f"[engine] retirement: {rep.preempted} preemptions "
+              f"(exact resume), {rep.dropped} dropped, {rep.failed} "
+              f"failed, {rep.unfinished} unfinished")
+    if plan is not None:
+        print(f"[engine] faults: {len(plan.fired)} fired "
+              f"({rep.dispatch_retries} dispatch retries, "
+              f"{rep.nonfinite_samples} non-finite samples caught, "
+              f"{rep.torn_rows_repaired} torn rows repaired, "
+              f"{rep.leaked_blocks} leaked blocks, "
+              f"{rep.stuck_ticks} stuck ticks)")
     return 0
 
 

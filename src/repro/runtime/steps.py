@@ -287,20 +287,33 @@ def make_slot_decode_step(cfg: ArchConfig, *, mode: QuantMode = FP,
         new_cache = R.mask_inactive_slots(cfg, cache, new_cache, active)
         return logits, new_cache
 
+    def _guard(nxt, logits, active):
+        # In-graph finite guard: a row whose last-position logits contain
+        # NaN/Inf (corrupted cache, overflowed activation) emits the
+        # sentinel -1 instead of a garbage sample, so the host can retire
+        # or rebuild the poisoned slot without an extra device round-trip.
+        # Valid tokens are >= 0 and inactive rows still emit 0, so the
+        # sentinel is unambiguous; with all-finite logits this is the
+        # identity and the step stays bit-for-bit what it was.
+        finite = jnp.all(jnp.isfinite(logits[:, -1].astype(jnp.float32)),
+                         axis=-1)
+        nxt = jnp.where(finite, nxt, jnp.full_like(nxt, -1))
+        return jnp.where(active, nxt, jnp.zeros_like(nxt))
+
     if temperature > 0.0:
         def step(params, tokens, cache, slot_index, active, rng):
             logits, cache = _advance(params, tokens, cache, slot_index,
                                      active)
             keys = jax.vmap(lambda p: jax.random.fold_in(rng, p))(slot_index)
             nxt = temperature_sample_rows(logits, keys, temperature)
-            nxt = jnp.where(active, nxt, jnp.zeros_like(nxt))
+            nxt = _guard(nxt, logits, active)
             return nxt, cache, slot_index + active.astype(slot_index.dtype)
     else:
         def step(params, tokens, cache, slot_index, active):
             logits, cache = _advance(params, tokens, cache, slot_index,
                                      active)
             nxt = greedy_sample(logits)
-            nxt = jnp.where(active, nxt, jnp.zeros_like(nxt))
+            nxt = _guard(nxt, logits, active)
             return nxt, cache, slot_index + active.astype(slot_index.dtype)
 
     return step

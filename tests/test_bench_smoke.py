@@ -25,7 +25,12 @@ ROW_KEYS = {
                "block_size", "num_blocks", "kv_hbm_bytes",
                "peak_blocks_used", "mean_block_util", "shared_block_hits",
                "shared_hit_rate", "prefill_tokens_skipped",
-               "effective_concurrency"},
+               "effective_concurrency",
+               # overload robustness: per-SLO-class tails + goodput
+               "class_p99_latency_s", "class_mean_ttft_s",
+               "class_p99_ttft_s", "goodput_tokens_per_s",
+               "slo_attainment", "preempted", "dropped", "failed",
+               "unfinished"},
 }
 
 

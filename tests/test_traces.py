@@ -1,0 +1,140 @@
+"""Workload synthesis (`benchmarks/traces.py`): determinism, burstiness,
+heavy tails, the two-class trace, and the `synthetic_requests`
+passthrough whose defaults must stay byte-identical to today's traces."""
+import pytest
+
+from benchmarks import traces as TR
+from repro import engine as E
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+class TestArrivals:
+    def test_mmpp_deterministic(self):
+        proc = TR.mmpp_process()
+        assert proc(50, 100.0, 3) == proc(50, 100.0, 3)
+        assert proc(50, 100.0, 3) != proc(50, 100.0, 4)
+
+    def test_mmpp_sorted_and_sized(self):
+        times = TR.mmpp_process()(100, 200.0, 0)
+        assert len(times) == 100
+        assert all(b >= a for a, b in zip(times, times[1:]))
+
+    def test_mmpp_is_overdispersed_vs_poisson(self):
+        """The burstiness statistic: MMPP arrival counts have variance
+        well above their mean; Poisson counts sit near IoD = 1."""
+        rate = 200.0
+        mmpp = TR.mmpp_process(dwell_s=(0.5, 0.125))(400, rate, 0)
+        pois = TR.poisson_process()(400, rate, 0)
+        assert TR.index_of_dispersion(mmpp) > 2.0
+        assert TR.index_of_dispersion(pois) < 2.0
+
+    def test_mmpp_validates_parameters(self):
+        with pytest.raises(ValueError):
+            TR.mmpp_process(modulation=(1.0, 2.0, 3.0))
+        with pytest.raises(ValueError):
+            TR.mmpp_process(dwell_s=(0.0, 0.1))
+
+    def test_index_of_dispersion_edge_cases(self):
+        assert TR.index_of_dispersion([]) == 0.0
+        assert TR.index_of_dispersion([0.1]) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# heavy-tailed lengths
+# ---------------------------------------------------------------------------
+
+class TestLengths:
+    def test_bounded_and_deterministic(self):
+        a = TR.heavy_tailed_lengths(500, lo=2, hi=64, seed=1)
+        assert a == TR.heavy_tailed_lengths(500, lo=2, hi=64, seed=1)
+        assert all(2 <= x <= 64 for x in a)
+
+    def test_tail_shape(self):
+        """Most mass near lo, but the tail actually reaches out — the
+        bounded-Pareto shape, not uniform."""
+        a = TR.heavy_tailed_lengths(2000, lo=2, hi=64, alpha=1.6, seed=0)
+        assert sum(1 for x in a if x <= 8) > len(a) * 0.6
+        assert max(a) > 32
+
+    def test_validates(self):
+        with pytest.raises(ValueError):
+            TR.heavy_tailed_lengths(5, lo=0, hi=4)
+        with pytest.raises(ValueError):
+            TR.heavy_tailed_lengths(5, lo=2, hi=4, alpha=0.0)
+
+
+# ---------------------------------------------------------------------------
+# the two-class trace
+# ---------------------------------------------------------------------------
+
+class TestTwoClassTrace:
+    def test_deterministic_and_typed(self):
+        a = TR.two_class_trace(60, rate_per_s=500.0, vocab=97, seed=2)
+        b = TR.two_class_trace(60, rate_per_s=500.0, vocab=97, seed=2)
+        assert a == b
+        assert all(r.priority in ("interactive", "batch") for r in a)
+        assert all(1 <= t < 97 for r in a for t in r.prompt)
+
+    def test_class_mix_and_deadlines(self):
+        reqs = TR.two_class_trace(200, rate_per_s=500.0, vocab=97,
+                                  interactive_frac=0.7,
+                                  interactive_deadline_s=0.25,
+                                  batch_deadline_s=8.0)
+        n_int = sum(r.priority == "interactive" for r in reqs)
+        assert 0.55 < n_int / len(reqs) < 0.85
+        for r in reqs:
+            gap = r.deadline_s - r.arrival_s
+            want = 0.25 if r.priority == "interactive" else 8.0
+            assert gap == pytest.approx(want)
+
+    def test_validates_frac(self):
+        with pytest.raises(ValueError):
+            TR.two_class_trace(5, rate_per_s=1.0, vocab=7,
+                               interactive_frac=1.5)
+
+
+# ---------------------------------------------------------------------------
+# synthetic_requests passthrough
+# ---------------------------------------------------------------------------
+
+class TestSyntheticPassthrough:
+    def test_defaults_byte_identical(self):
+        """The new priority=/arrival_process= knobs must not move the
+        default trace by a single byte (every existing test and BENCH
+        row depends on it)."""
+        base = E.synthetic_requests(20, rate_per_s=1000.0, vocab=97)
+        tagged = E.synthetic_requests(20, rate_per_s=1000.0, vocab=97,
+                                      priority="interactive",
+                                      arrival_process=None)
+        assert base == tagged
+        assert all(r.priority == "interactive" for r in base)
+
+    def test_priority_callable(self):
+        reqs = E.synthetic_requests(
+            10, rate_per_s=1000.0, vocab=97,
+            priority=lambda rid: "batch" if rid % 2 else "interactive")
+        assert [r.priority for r in reqs] == \
+            ["interactive", "batch"] * 5
+
+    def test_custom_arrival_process(self):
+        """A custom process replaces the arrival times but nothing else
+        — prompts stay rid-derived and identical to the default trace."""
+        proc = TR.mmpp_process(dwell_s=(0.01, 0.005))
+        reqs = E.synthetic_requests(12, rate_per_s=1000.0, vocab=97,
+                                    arrival_process=proc)
+        base = E.synthetic_requests(12, rate_per_s=1000.0, vocab=97)
+        assert [r.arrival_s for r in reqs] == proc(12, 1000.0, 0)
+        assert [r.prompt for r in reqs] == [r.prompt for r in base]
+
+    def test_arrival_process_validated(self):
+        with pytest.raises(ValueError, match="sorted"):
+            E.synthetic_requests(
+                3, rate_per_s=1.0, vocab=7,
+                arrival_process=lambda n, r, s: [3.0, 2.0, 1.0])
+        with pytest.raises(ValueError, match="sorted"):
+            E.synthetic_requests(
+                3, rate_per_s=1.0, vocab=7,
+                arrival_process=lambda n, r, s: [1.0])
