@@ -131,6 +131,20 @@ def smoke(kernel_rows=None) -> int:
           f"at {chaos['slo_attainment']:.1%} SLO attainment; no-fault "
           f"control arm bit-for-bit OK")
 
+    # speculative gate: full-depth self-draft under chaos, a garbage
+    # draft, and the non-spec control must all stay bit-for-bit the
+    # sequential reference (acceptance is exact, rejected KV is dead)
+    spec = serving_bench.spec_smoke()
+    print(f"[spec] smoke: {spec['requests']} requests through "
+          f"draft-and-verify — full-depth self-draft committed "
+          f"{spec['chaos_accepted_per_dispatch']:.2f} tokens/dispatch "
+          f"under {spec['preempted']} preemptions and "
+          f"{spec['faults_fired']} injected faults "
+          f"({spec['leaked_blocks']} leaked blocks), garbage draft "
+          f"held exact outputs at "
+          f"{spec['garbage_accepted_per_dispatch']:.2f} tokens/dispatch, "
+          f"non-spec control at exactly 1.00; bit-for-bit parity OK")
+
     print("\nsmoke OK: flops/bytes nonzero, scan trip count exact")
     return 0
 

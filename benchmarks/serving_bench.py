@@ -19,7 +19,8 @@ Row schema (stable; asserted by tests/test_bench_smoke.py)::
    "mean_ttft_s", "p99_ttft_s", "block_size", "num_blocks",
    "kv_hbm_bytes", "peak_blocks_used", "mean_block_util",
    "shared_block_hits", "shared_hit_rate", "prefill_tokens_skipped",
-   "effective_concurrency"}
+   "effective_concurrency", "spec_k", "draft_layers",
+   "accepted_per_dispatch", "latency_per_token_s"}
 
 The ``engine`` rows are the continuous-batching section: one row per
 (family, offered rate) — p99 vs load is the Table 4 story told by the
@@ -107,6 +108,15 @@ def serving_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
     # the multi-tenant row: bursty MMPP two-class trace under per-class
     # quotas + preemption — per-class p99/ttft and goodput-under-SLO
     rows.extend(two_class_rows(arch, quant=quant))
+    # the speculative rows, paired with the default rate-800 row above
+    # (same arch, same trace) so the accepted_per_dispatch/ticks columns
+    # show what draft-and-verify buys: the full-depth self-draft is the
+    # mechanical upper bound (every proposal accepted, ticks cut by
+    # ~spec_k+1), the 1-layer self-draft is the realistic cheap proposer
+    # with partial acceptance — both bit-for-bit the non-spec outputs
+    rows.extend(engine_rows(arch, quant=quant, rates=(800.0,), spec_k=3))
+    rows.extend(engine_rows(arch, quant=quant, rates=(800.0,), spec_k=3,
+                            draft_layers=1))
     return rows
 
 
@@ -122,12 +132,16 @@ def engine_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
                 num_slots: int = 8, prompt_len: int = 3,
                 gen_tokens: int = 6, prefill_chunk: int = 4,
                 block_size=None, num_blocks=None,
-                shared_prefix_len: int = 0):
+                shared_prefix_len: int = 0,
+                spec_k: int = 0, draft_layers=None):
     """Continuous-batching engine rows: p99 + occupancy + admission-to-
     first-token vs offered rate, for any token-only decode family.
     ``block_size`` switches the engine to the paged KV cache (and
     ``shared_prefix_len`` gives the trace a common system prompt whose
-    blocks the paged engine shares across requests)."""
+    blocks the paged engine shares across requests).  ``spec_k`` turns on
+    per-slot draft-and-verify speculative decoding with a truncated
+    self-draft of ``draft_layers`` layers (default: full depth, the
+    accept-everything upper bound)."""
     import jax
 
     from repro import engine as E
@@ -141,10 +155,12 @@ def engine_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
     params = R.init(jax.random.PRNGKey(0), cfg)
     if mode.enabled:
         params = quantize_tree(params, min_size=2048)
+    dl = (draft_layers or cfg.n_layers) if spec_k else None
     eng = E.Engine(cfg, params, mode=mode, num_slots=num_slots,
                    max_seq=prompt_len + gen_tokens,   # Engine rounds up
                    prefill_chunk=prefill_chunk or None,
-                   block_size=block_size, num_blocks=num_blocks)
+                   block_size=block_size, num_blocks=num_blocks,
+                   spec_k=spec_k, draft_layers=dl)
     # encdec/vlm: per-request sources for the prime dispatch (their ttft
     # columns therefore include the prime cost)
     source_shape = R.source_shape(cfg)
@@ -169,11 +185,12 @@ def engine_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
             shared_prefix_len=shared_prefix_len,
             source_shape=source_shape)
         rep = eng.serve(reqs, clock="virtual", tick_s=tick_s)
-        rows.append(_engine_row(cfg, rate, n_requests, rep))
+        rows.append(_engine_row(cfg, rate, n_requests, rep,
+                                draft_layers=dl or 0))
     return rows
 
 
-def _engine_row(cfg, rate, n_requests, rep):
+def _engine_row(cfg, rate, n_requests, rep, draft_layers: int = 0):
     """One BENCH engine row from an EngineReport (schema pinned by
     tests/test_bench_smoke.py)."""
     return {
@@ -209,6 +226,13 @@ def _engine_row(cfg, rate, n_requests, rep):
         "dropped": rep.dropped,
         "failed": rep.failed,
         "unfinished": rep.unfinished,
+        # speculative decoding: tokens committed per verify dispatch
+        # (exactly 1.0 when spec_k == 0 — the accounting's fixed point)
+        # and the honest per-token latency that makes the win legible
+        "spec_k": rep.spec_k,
+        "draft_layers": draft_layers,
+        "accepted_per_dispatch": rep.accepted_per_dispatch,
+        "latency_per_token_s": rep.latency_per_token_s,
     }
 
 
@@ -523,6 +547,109 @@ def chaos_smoke(n_requests: int = 200) -> dict:
             "leaked_blocks": rep.leaked_blocks,
             "goodput_tokens_per_s": rep.goodput_tokens_per_s,
             "slo_attainment": rep.slo_attainment}
+
+
+def spec_smoke(n_requests: int = 60) -> dict:
+    """The speculative-decoding gate (``benchmarks/run.py --smoke``):
+    per-slot draft-and-verify must be invisible in the tokens.  Three
+    arms, all against the same sequential per-token reference:
+
+    - the full-depth self-draft chaos arm: draft == target, so every
+      proposal agrees with the verifier, while a tight paged block pool,
+      forced preemptions, and a seeded fault plan tear speculation
+      mid-flight — in-flight proposals are uncommitted work, so every
+      non-failed output must still be bit-for-bit the reference and the
+      block pool must drain clean;
+    - the garbage-draft arm: a draft initialised from a different seed
+      proposes near-random tokens — acceptance collapses toward 1.0 but
+      outputs stay exactly the reference (rejected KV writes are dead);
+    - the non-spec control arm: ``spec_k=0`` on the same trace —
+      ``accepted_per_dispatch`` exactly 1.0 and strictly more decode
+      ticks than the clean full-depth run recorded in the BENCH rows.
+    """
+    import jax
+
+    from repro import engine as E
+    from repro.configs import get_config
+    from repro.models import registry as R
+
+    cfg = dataclasses.replace(
+        get_config("starcoder2-3b").reduced(), kv_quant=True)
+    params = R.init(jax.random.PRNGKey(0), cfg)
+    reqs = E.synthetic_requests(
+        n_requests, rate_per_s=2000.0, vocab=cfg.vocab, prompt_len=3,
+        max_new_tokens=5,
+        priority=lambda rid: "batch" if rid % 3 == 0 else "interactive")
+    want = E.reference_outputs(cfg, params, reqs, max_seq=16)
+
+    # chaos arm: full-depth self-draft under a tight block pool with
+    # preemption and seeded faults — speculation torn mid-round must
+    # leave nothing committed
+    eng = E.Engine(cfg, params, num_slots=4, max_seq=16, prefill_chunk=2,
+                   block_size=4, num_blocks=9, spec_k=3,
+                   draft_layers=cfg.n_layers)
+    plan = E.FaultPlan.random(seed=11, n_faults=8, max_tick=250,
+                              num_slots=4)
+    rep = eng.serve(reqs, clock="virtual", tick_s=1e-3, preemption=True,
+                    fault_plan=plan)
+    if len(rep.results) != n_requests:
+        raise AssertionError(
+            f"spec chaos arm lost requests: {len(rep.results)}/{n_requests}")
+    bad = [r.rid for r in rep.results
+           if r.status == "ok" and r.tokens != want[r.rid]]
+    if bad:
+        raise AssertionError(
+            f"spec chaos arm outputs diverge from reference for rids "
+            f"{bad[:8]} — speculative state leaked across a preemption "
+            "or fault")
+    if rep.leaked_blocks != 0:
+        raise AssertionError(f"spec chaos arm leaked {rep.leaked_blocks} "
+                             "KV blocks")
+    if rep.preempted <= 0:
+        raise AssertionError("spec chaos arm never preempted: speculation "
+                             "was not torn mid-flight")
+    if not plan.fired:
+        raise AssertionError("no scheduled fault fired during the spec "
+                             "chaos arm")
+    if rep.accepted_per_dispatch <= 1.0:
+        raise AssertionError(
+            f"full-depth self-draft committed only "
+            f"{rep.accepted_per_dispatch:.2f} tokens/dispatch — "
+            "acceptance is broken")
+
+    # garbage-draft arm: the draft proposes noise; rejection must be
+    # total recovery (dead KV writes, exact outputs)
+    gparams = R.init(jax.random.PRNGKey(666), cfg)
+    geng = E.Engine(cfg, params, num_slots=4, max_seq=16, prefill_chunk=4,
+                    block_size=4, spec_k=3, draft=(cfg, gparams))
+    grep = geng.serve(reqs, clock="virtual", tick_s=1e-3)
+    if grep.outputs() != want:
+        raise AssertionError("garbage-draft outputs != sequential "
+                             "reference — rejected KV writes are live")
+    if grep.accepted_per_dispatch < 1.0:
+        raise AssertionError("accepted_per_dispatch < 1.0: dispatch "
+                             "accounting is broken")
+
+    # control arm: spec_k=0, same trace — apd is exactly 1.0 and the
+    # outputs match (the machinery costs nothing when off)
+    ctl = E.Engine(cfg, params, num_slots=4, max_seq=16, prefill_chunk=4,
+                   block_size=4)
+    crep = ctl.serve(reqs, clock="virtual", tick_s=1e-3)
+    if crep.outputs() != want:
+        raise AssertionError("spec control arm != sequential reference")
+    if crep.accepted_per_dispatch != 1.0:
+        raise AssertionError(
+            f"non-speculative accepted_per_dispatch is "
+            f"{crep.accepted_per_dispatch}, must be exactly 1.0")
+    return {"requests": len(rep.results),
+            "preempted": rep.preempted,
+            "faults_fired": len(plan.fired),
+            "failed": rep.failed,
+            "leaked_blocks": rep.leaked_blocks,
+            "chaos_accepted_per_dispatch": rep.accepted_per_dispatch,
+            "garbage_accepted_per_dispatch": grep.accepted_per_dispatch,
+            "control_ticks": crep.ticks,
+            "latency_per_token_ms": rep.latency_per_token_s * 1e3}
 
 
 def rows():

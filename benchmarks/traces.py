@@ -11,6 +11,9 @@ seed, same trace, byte for byte — as plain inputs to the engine:
   (the standard burstiness model: a "calm" and a "burst" rate with
   exponential dwell times).  Returned as an ``arrival_process`` callable
   for :func:`repro.engine.synthetic_requests` or :func:`two_class_trace`.
+- :func:`diurnal_process` — a sinusoid-modulated Poisson process (the
+  day/night load curve, shrunk to bench time scales) built on the same
+  exact boundary-redraw discretization.
 - :func:`heavy_tailed_lengths` — bounded-Pareto integer lengths.
 - :func:`two_class_trace` — the whole package: MMPP arrivals,
   heavy-tailed prompt/output lengths, and per-class SLO deadlines on an
@@ -70,6 +73,55 @@ def mmpp_process(modulation: Tuple[float, float] = (0.25, 4.0),
                 t = state_end
                 state = 1 - state
                 state_end = t + rng.expovariate(1.0 / dwell_s[state])
+                continue
+            t += dt
+            out.append(t)
+        return out
+    return proc
+
+
+def diurnal_process(depth: float = 0.8, period_s: float = 1.0,
+                    steps_per_period: int = 32,
+                    phase: float = 0.0) -> ArrivalProcess:
+    """Sinusoid-modulated Poisson arrivals: the diurnal (day/night) load
+    curve every datacenter trace shows, shrunk to bench time scales.
+
+    The instantaneous rate is a staircase discretization of
+    ``rate_per_s * (1 + depth * sin(2*pi*(t / period_s + phase)))``,
+    piecewise-constant over ``steps_per_period`` equal slices of each
+    period (evaluated at each slice's midpoint).  Within a slice arrivals
+    are exactly Poisson at the slice's rate; a draw that crosses a slice
+    boundary is discarded and redrawn at the next slice's rate — the
+    same memoryless boundary-redraw :func:`mmpp_process` uses, so the
+    discretized process is exact, not approximate.  ``depth`` in [0, 1)
+    keeps every slice's rate positive; the long-run mean rate stays near
+    ``rate_per_s`` while counts are overdispersed on horizons past a
+    fraction of a period (:func:`index_of_dispersion` > 1) — slower,
+    smoother burstiness than MMPP's state flips."""
+    import math
+    if not 0.0 <= depth < 1.0:
+        raise ValueError(f"depth must be in [0, 1), got {depth}")
+    if period_s <= 0:
+        raise ValueError(f"period_s must be > 0, got {period_s}")
+    if steps_per_period < 2:
+        raise ValueError(f"steps_per_period must be >= 2, "
+                         f"got {steps_per_period}")
+
+    def proc(n: int, rate_per_s: float, seed: int) -> List[float]:
+        rng = random.Random(seed)
+        slice_s = period_s / steps_per_period
+
+        def slice_rate(k: int) -> float:
+            frac = (k + 0.5) / steps_per_period + phase
+            return rate_per_s * (1.0 + depth * math.sin(2 * math.pi * frac))
+
+        t, k = 0.0, 0
+        out: List[float] = []
+        while len(out) < n:
+            dt = rng.expovariate(slice_rate(k))
+            if t + dt > (k + 1) * slice_s:
+                t = (k + 1) * slice_s
+                k += 1
                 continue
             t += dt
             out.append(t)

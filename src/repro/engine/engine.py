@@ -31,6 +31,15 @@ the paper's static-shape discipline):
 - ``temperature > 0`` samples per row with ``fold_in(rng, position)`` —
   the fused decode loop's key schedule made per-row, so sampling parity
   holds against the sequential reference beyond greedy.
+- ``spec_k > 0`` turns every tick into draft-and-verify speculative
+  decoding: a small draft model (a second checkpoint, or a truncated-
+  layer view of the target's own params) proposes up to ``k`` greedy
+  tokens per generating slot, and ONE wide verify dispatch
+  (``make_verify_step``) scores all proposals across the pool at a
+  single compiled shape, committing the accepted prefix plus the bonus
+  sample and rewinding each row's index past the rejected tail.  The
+  committed stream is bit-for-bit the non-speculative stream, greedy or
+  sampled (the verify scan reuses the per-position key schedule).
 - Admission consults the same ``core.batching.AdmissionPolicy`` as the
   virtual-time simulator; admitted requests take over free slots
   immediately — there is NO drain barrier: new requests prefill while
@@ -169,6 +178,14 @@ class EngineReport:
         default_factory=dict)
     goodput_tokens_per_s: float = 0.0
     slo_attainment: float = 0.0       # ok-and-on-time / all requests
+    # speculative decoding (Engine(spec_k=..., draft=...|draft_layers=...)):
+    spec_k: int = 0                   # proposal depth (0 = not speculating)
+    accepted_per_dispatch: float = 0.0  # committed tokens per emitting
+                                        # row-tick — exactly 1.0 without
+                                        # speculation, the mean accepted+
+                                        # bonus run length with it
+    latency_per_token_s: float = 0.0  # mean over ok requests of
+                                      # latency_s / emitted tokens
 
     def outputs(self) -> Dict[int, List[int]]:
         return {r.rid: r.tokens for r in self.results}
@@ -199,10 +216,53 @@ class Engine:
                  prefill_chunk: Optional[int] = None,
                  block_size: Optional[int] = None,
                  num_blocks: Optional[int] = None,
-                 temperature: float = 0.0, rng=None):
+                 temperature: float = 0.0, rng=None,
+                 spec_k: int = 0,
+                 draft: Optional[Tuple[ArchConfig, dict]] = None,
+                 draft_layers: Optional[int] = None):
         if temperature > 0.0 and rng is None:
             raise ValueError("temperature sampling needs an rng key: "
                              "Engine(..., temperature=t, rng=key)")
+        # speculative decoding: spec_k > 0 turns every generation tick
+        # into draft-propose (k greedy tokens from the draft model) +
+        # one wide verify dispatch on the target; the committed output
+        # is bit-for-bit the non-speculative output (docs/serving.md)
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        if spec_k == 0 and (draft is not None or draft_layers is not None):
+            raise ValueError("a draft model needs spec_k >= 1: "
+                             "Engine(..., spec_k=k, draft=... or "
+                             "draft_layers=...)")
+        if spec_k > 0:
+            if (draft is None) == (draft_layers is None):
+                raise ValueError(
+                    "speculative decoding needs exactly one of "
+                    "draft=(cfg, params) or draft_layers=n "
+                    "(truncated-layer self-draft)")
+            if not R.supports_speculation(cfg):
+                raise ValueError(
+                    f"family {cfg.family!r} (window={cfg.window}) does not "
+                    f"support speculative decoding: the target's decode "
+                    f"state must be rewindable positional KV")
+            if draft_layers is not None:
+                dcfg = R.draft_config(cfg, draft_layers)
+                dparams = R.draft_params(cfg, params, draft_layers)
+            else:
+                dcfg, dparams = draft
+                if not R.supports_speculation(dcfg):
+                    raise ValueError(
+                        f"draft family {dcfg.family!r} "
+                        f"(window={dcfg.window}) cannot draft: its decode "
+                        f"state must be rewindable positional KV")
+                if dcfg.vocab != cfg.vocab:
+                    raise ValueError(
+                        f"draft vocab {dcfg.vocab} != target vocab "
+                        f"{cfg.vocab}: proposals would not be token-"
+                        f"compatible")
+            self.dcfg, self.dparams = dcfg, dparams
+        else:
+            self.dcfg = self.dparams = None
+        self.spec_k = spec_k
         self.cfg, self.params, self.mode = cfg, params, mode
         self.temperature, self.rng = temperature, rng
         # the pool size IS the compiled batch shape: bucket it so the
@@ -253,6 +313,22 @@ class Engine:
         self._prime_step = (
             ST.jit_prime_step(ST.make_prime_step(cfg, mode=mode))
             if R.needs_prime(cfg) else None)
+        # speculative steps: the target's wide verify step replaces the
+        # fused 1-token step on every tick, the draft's propose step and
+        # its own chunked catch-up steps feed it (draft state is a plain
+        # contiguous cache — the draft never pages or shares blocks)
+        if spec_k > 0:
+            self._verify_step = ST.jit_verify_step(ST.make_verify_step(
+                cfg, mode=mode, k=spec_k, temperature=temperature))
+            self._propose_step = ST.jit_draft_propose_step(
+                ST.make_draft_propose_step(self.dcfg, mode=mode, k=spec_k))
+            self._draft_chunk_steps: Dict[int, Callable] = {}
+            # draft catch-up dispatch cap: per-tick gaps are <= 1 (a full
+            # accept), but admission/resume rebuilds feed whole prompts
+            self._draft_cap = self.prefill_chunk or 16
+        else:
+            self._verify_step = self._propose_step = None
+            self._draft_cap = 0
 
     def _init_cache(self):
         """The pooled device cache: contiguous slot rows, or (paged mode)
@@ -280,6 +356,25 @@ class Engine:
             return self.step(*args, self.rng)
         return self.step(*args)
 
+    def _draft_chunk_step(self, chunk: int) -> Callable:
+        """The draft model's compiled prefill step for one bucket size —
+        how the engine teacher-forces committed tokens the draft cache
+        has not consumed yet (admission, exact resume, full accepts)."""
+        fn = self._draft_chunk_steps.get(chunk)
+        if fn is None:
+            fn = ST.jit_prefill_chunk_step(ST.make_prefill_chunk_step(
+                self.dcfg, mode=self.mode, chunk=chunk))
+            self._draft_chunk_steps[chunk] = fn
+        return fn
+
+    def _verify(self, tok_mat, cache, index, n_tok, active):
+        args = (self.params, jnp.asarray(tok_mat), cache,
+                jnp.asarray(index), jnp.asarray(n_tok),
+                jnp.asarray(active))
+        if self.temperature > 0.0:
+            return self._verify_step(*args, self.rng)
+        return self._verify_step(*args)
+
     def warmup(self) -> None:
         """Trace + compile the slot step (and, when chunked prefill is
         on, the largest chunk bucket) on a throwaway cache so a
@@ -295,10 +390,31 @@ class Engine:
                                self.cfg.d_model), jnp.bfloat16),
                     cache, jnp.zeros((), jnp.int32),
                     jnp.zeros((), jnp.int32))
-            _, cache, _ = self._fused(
-                jnp.zeros((self.num_slots, 1), jnp.int32), cache,
-                jnp.zeros((self.num_slots,), jnp.int32),
-                jnp.zeros((self.num_slots,), bool))
+            S = self.num_slots
+            if self.spec_k > 0:
+                # speculative serve never dispatches the 1-token fused
+                # step: warm what it DOES run — verify, propose, and the
+                # draft's catch-up chunk buckets
+                _, cache, _ = self._verify(
+                    jnp.zeros((S, self.spec_k + 1), jnp.int32), cache,
+                    jnp.zeros((S,), jnp.int32), jnp.zeros((S,), jnp.int32),
+                    jnp.zeros((S,), bool))
+                dcache = R.init_cache(self.dcfg, S, self.max_seq)
+                _, dcache, _ = self._propose_step(
+                    self.dparams, jnp.zeros((S, 1), jnp.int32), dcache,
+                    jnp.zeros((S,), jnp.int32), jnp.zeros((S,), bool))
+                c = 1
+                while c <= self._draft_cap:
+                    dcache = self._draft_chunk_step(c)(
+                        self.dparams, jnp.zeros((c,), jnp.int32), dcache,
+                        jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+                        jnp.zeros((), jnp.int32))
+                    c *= 2
+            else:
+                _, cache, _ = self._fused(
+                    jnp.zeros((S, 1), jnp.int32), cache,
+                    jnp.zeros((S,), jnp.int32),
+                    jnp.zeros((S,), bool))
             if self.prefill_chunk:
                 # every reachable bucket: remainder chunks bucket to the
                 # smaller powers of two, and a cold compile mid-serve is
@@ -433,6 +549,19 @@ class Engine:
         dropped = 0
         ticks = 0
         gen_tokens = 0
+        # a row-tick that commits >= 1 token is one "emitting dispatch":
+        # accepted_per_dispatch = gen_tokens / emit_dispatches is exactly
+        # 1.0 without speculation and the mean accepted+bonus run length
+        # with it — the honest denominator for speculative throughput
+        emit_dispatches = 0
+        spec = self.spec_k > 0
+        # the draft model's own slot-pooled cache: contiguous rows (the
+        # draft never pages — proposals are scratch, only the target's
+        # committed KV is sharable), rebuilt per serve like the target's
+        draft_cache = R.init_cache(self.dcfg, S, self.max_seq) if spec \
+            else None
+        krow_np = np.zeros((S,), np.int32)
+        props = tok_mat = n_tok_np = None
         # overload robustness state: stashed progress of preempted
         # requests (rid -> _Stash) and the fault/recovery counters
         stash: Dict[int, _Stash] = {}
@@ -713,8 +842,53 @@ class Engine:
                         _register_blocks(st)
                     if st.chunk_left == 0:
                         tokens[st.sid, 0] = st.prompt[st.pos]
+                # 4.5) speculative draft: catch each generating slot's
+                #      draft cache up to its committed frontier (teacher-
+                #      forced — this is also what rebuilds the draft after
+                #      admission, preemption/resume, or slot reuse), then
+                #      propose k greedy tokens per slot in ONE fused
+                #      dispatch.  Draft dispatches see no fault injection:
+                #      a wrong proposal can only be rejected.
+                if spec:
+                    krow_np = np.zeros((S,), np.int32)
+                    for st in pool.active_slots():
+                        if st.chunk_left > 0 or st.pos < len(st.prompt) - 1:
+                            continue
+                        k_row = min(self.spec_k,
+                                    st.max_new - len(st.generated) - 1,
+                                    self.max_seq - 1 - st.pos)
+                        if k_row <= 0:
+                            continue
+                        krow_np[st.sid] = k_row
+                        P = len(st.prompt)
+                        while st.draft_pos < st.pos:
+                            n = min(st.pos - st.draft_pos, self._draft_cap)
+                            c = ST.bucket_batch(n)
+                            buf = np.zeros((c,), np.int32)
+                            for t in range(n):
+                                p = st.draft_pos + t
+                                buf[t] = (st.prompt[p] if p < P
+                                          else st.generated[p - P])
+                            draft_cache = self._draft_chunk_step(c)(
+                                self.dparams, jnp.asarray(buf), draft_cache,
+                                jnp.asarray(st.sid, jnp.int32),
+                                jnp.asarray(st.draft_pos, jnp.int32),
+                                jnp.asarray(n, jnp.int32))
+                            st.draft_pos += n
+                    d_active = krow_np > 0
+                    if d_active.any():
+                        d_index = np.array(
+                            [s.draft_pos for s in pool.slots], np.int32)
+                        props, draft_cache, _ = self._propose_step(
+                            self.dparams, jnp.asarray(tokens), draft_cache,
+                            jnp.asarray(d_index), jnp.asarray(d_active))
+                        props = np.asarray(props)
+                    else:
+                        props = np.zeros((S, self.spec_k), np.int32)
                 # 5) one fused slot-masked step: every ready slot (not
-                #    mid-chunk), one token
+                #    mid-chunk), one token — or, speculating, one wide
+                #    verify dispatch scoring 1..k+1 tokens per ready slot
+                #    (same single compiled shape whatever the mix)
                 active = np.array(
                     [s.active and s.chunk_left == 0 for s in pool.slots],
                     bool)
@@ -734,6 +908,17 @@ class Engine:
                                      block_tables=jnp.asarray(torn))
                         tables_dirty = True   # clean mirror repushed next
                 nxt = None
+                if ready and spec:
+                    # per-row verify payload: the committed next input in
+                    # column 0, the row's usable proposals after it
+                    tok_mat = np.zeros((S, self.spec_k + 1), np.int32)
+                    tok_mat[:, 0] = tokens[:, 0]
+                    for sid in ready:
+                        kr = int(krow_np[sid])
+                        if kr > 0:
+                            tok_mat[sid, 1:1 + kr] = props[sid, :kr]
+                    n_tok_np = np.where(active, 1 + krow_np, 0) \
+                        .astype(np.int32)
                 if ready:
                     attempt = 0
                     while True:
@@ -741,8 +926,13 @@ class Engine:
                             ticks, attempt, ready)
                             if fault_plan is not None else None)
                         if culprit is None:
-                            nxt, cache, new_index = self._fused(
-                                tokens, cache, index, active)
+                            if spec:
+                                nxt, cache, new_index = self._verify(
+                                    tok_mat, cache, index, n_tok_np,
+                                    active)
+                            else:
+                                nxt, cache, new_index = self._fused(
+                                    tokens, cache, index, active)
                             nxt = np.asarray(nxt)
                             index = np.array(new_index)  # writable host copy
                             break
@@ -828,21 +1018,61 @@ class Engine:
                         continue
                     if st.chunk_left > 0:          # mid-chunk: no sample
                         continue
-                    st.pos += 1
-                    if paged:
-                        _register_blocks(st)
-                    if st.pos < len(st.prompt):        # still prefilling
-                        tokens[st.sid, 0] = st.prompt[st.pos]
+                    if not spec:
+                        st.pos += 1
+                        if paged:
+                            _register_blocks(st)
+                        if st.pos < len(st.prompt):    # still prefilling
+                            tokens[st.sid, 0] = st.prompt[st.pos]
+                            continue
+                        tok = int(nxt[st.sid])
+                        if tok < 0:
+                            # the in-graph finite guard's sentinel: this
+                            # slot's logits went NaN/Inf.  The sample is
+                            # garbage and the cache row suspect — rebuild
+                            # deterministically via preemption (a transient
+                            # fault recomputes clean, bit-for-bit); a slot
+                            # that keeps faulting exhausts its retry budget
+                            # and is retired as `failed`
+                            nonfinite += 1
+                            st.retries += 1
+                            if st.retries > max_retries:
+                                _fail(st)
+                            else:
+                                _preempt(st)
+                            continue
+                        st.generated.append(tok)
+                        gen_tokens += 1
+                        emit_dispatches += 1
+                        if st.first_token_s < 0:
+                            st.first_token_s = now
+                        if st.done():
+                            results.append(RequestResult(
+                                rid=st.rid, tokens=list(st.generated),
+                                arrival_s=st.arrival_s, admit_s=st.admit_s,
+                                first_token_s=st.first_token_s,
+                                finish_s=now,
+                                slot=st.sid, priority=st.priority,
+                                preemptions=st.preemptions,
+                                deadline_s=st.deadline_s))
+                            if paged:
+                                _release_blocks(st)
+                            pool.free(st.sid)
+                        else:
+                            tokens[st.sid, 0] = tok
                         continue
-                    tok = int(nxt[st.sid])
-                    if tok < 0:
-                        # the in-graph finite guard's sentinel: this
-                        # slot's logits went NaN/Inf.  The sample is
-                        # garbage and the cache row suspect — rebuild
-                        # deterministically via preemption (a transient
-                        # fault recomputes clean, bit-for-bit); a slot
-                        # that keeps faulting exhausts its retry budget
-                        # and is retired as `failed`
+                    # speculative commit: walk the verified row, keeping
+                    # the accepted prefix + the bonus sample, then REWIND
+                    # the device index to the committed frontier — the
+                    # rejected tail's KV writes die by overwrite-before-
+                    # read (decode-contract rule 7)
+                    nt = int(n_tok_np[st.sid])
+                    row = nxt[st.sid]
+                    if np.any(row[:nt] < 0):
+                        # any sentinel in the fed range poisons the whole
+                        # round: in-flight proposals are uncommitted state,
+                        # so fault recovery rebuilds from the last COMMITTED
+                        # token exactly as in the non-speculative engine
                         nonfinite += 1
                         st.retries += 1
                         if st.retries > max_retries:
@@ -850,10 +1080,35 @@ class Engine:
                         else:
                             _preempt(st)
                         continue
-                    st.generated.append(tok)
-                    gen_tokens += 1
-                    if st.first_token_s < 0:
-                        st.first_token_s = now
+                    pos0 = st.pos
+                    committed = 0
+                    for j in range(nt):
+                        st.pos += 1
+                        if paged:
+                            _register_blocks(st)
+                        if st.pos < len(st.prompt):    # still prefilling
+                            tokens[st.sid, 0] = st.prompt[st.pos]
+                            break
+                        tok = int(row[j])
+                        st.generated.append(tok)
+                        gen_tokens += 1
+                        committed += 1
+                        if st.first_token_s < 0:
+                            st.first_token_s = now
+                        if st.done() or (j + 1 < nt
+                                         and tok != int(tok_mat[st.sid,
+                                                                j + 1])):
+                            break
+                    index[st.sid] = st.pos    # the rewind past rejections
+                    if committed:
+                        emit_dispatches += 1
+                        if krow_np[st.sid] > 0:
+                            # the draft consumed [f, d_1..d_{k-1}]; the
+                            # committed-valid prefix of that is 1 + the
+                            # accepted count (capped at k-1): gap 0 after
+                            # a partial accept, 1 after a full accept
+                            st.draft_pos = pos0 + 1 + min(
+                                committed - 1, self.spec_k - 1)
                     if st.done():
                         results.append(RequestResult(
                             rid=st.rid, tokens=list(st.generated),
@@ -865,8 +1120,8 @@ class Engine:
                         if paged:
                             _release_blocks(st)
                         pool.free(st.sid)
-                    else:
-                        tokens[st.sid, 0] = tok
+                    elif committed:
+                        tokens[st.sid, 0] = st.generated[-1]
                 if ticks > limit:
                     # the cap exists to bound a stuck run; hitting it is
                     # an overload outcome, not a crash — retire everything
@@ -931,6 +1186,8 @@ class Engine:
         good = [r for r in results
                 if r.status == "ok" and r.finish_s <= r.deadline_s]
         good_tokens = sum(len(r.tokens) for r in good)
+        lat_tok = [r.latency_s / len(r.tokens) for r in results
+                   if r.status == "ok" and r.tokens]
         return EngineReport(
             results=results, ticks=ticks, generated_tokens=gen_tokens,
             duration_s=now, wall_s=wall,
@@ -970,7 +1227,12 @@ class Engine:
                                for c, ts in cls_ttft.items()},
             class_p99_ttft_s={c: bt.p99(ts) for c, ts in cls_ttft.items()},
             goodput_tokens_per_s=good_tokens / dur,
-            slo_attainment=(len(good) / len(results) if results else 0.0))
+            slo_attainment=(len(good) / len(results) if results else 0.0),
+            spec_k=self.spec_k,
+            accepted_per_dispatch=(gen_tokens / emit_dispatches
+                                   if emit_dispatches else 0.0),
+            latency_per_token_s=(float(np.mean(lat_tok))
+                                 if lat_tok else 0.0))
 
 
 # ---------------------------------------------------------------------------

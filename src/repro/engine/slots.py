@@ -53,6 +53,12 @@ class SlotState:
     priority: str = "interactive"
     retries: int = 0
     preemptions: int = 0
+    # speculative decoding: how many tokens of the COMMITTED fed history
+    # the draft model's cache has consumed (the draft-position frontier).
+    # Always <= pos; the engine teacher-forces the gap through the draft
+    # before proposing, which is also what rebuilds the draft after a
+    # preemption/resume or slot reuse (alloc resets it to 0).
+    draft_pos: int = 0
 
     @property
     def active(self) -> bool:
@@ -119,6 +125,7 @@ class SlotPool:
         st.first_token_s = -1.0
         st.block_table, st.prompt_keys, st.registered = None, (), 0
         st.priority, st.retries, st.preemptions = priority, 0, 0
+        st.draft_pos = 0
         return st
 
     def free(self, sid: int) -> None:

@@ -24,7 +24,11 @@ into its slot row at admission (see docs/serving.md; time-to-first-token
 includes the prime cost).  ``--prefill-chunk`` turns on chunked prefill
 (admission-to-first-token drops from prompt_len ticks to
 ``ceil(prompt_len/chunk)``), ``--temperature`` turns on per-row
-``fold_in(rng, position)`` sampling.  ``--sim`` runs the virtual-time
+``fold_in(rng, position)`` sampling, and ``--spec-k`` turns on
+draft-and-verify speculative decoding (``--draft-layers n`` drafts with
+the target's own first n layers, no second checkpoint; ``--draft ARCH``
+uses a separate small model) — committed outputs stay bit-for-bit the
+non-speculative stream.  ``--sim`` runs the virtual-time
 BatchQueue simulator backend instead (same admission policy, no model
 execution) — the Table 4 sanity check.
 
@@ -173,11 +177,23 @@ def main(argv=None):
                     help="engine: max slots the batch class may hold "
                          "concurrently (0 = no per-class quota)")
     ap.add_argument("--arrival", default="poisson",
-                    choices=["poisson", "mmpp"],
+                    choices=["poisson", "mmpp", "diurnal"],
                     help="engine: arrival process (mmpp = bursty "
-                         "2-state Markov-modulated Poisson from "
+                         "2-state Markov-modulated Poisson, diurnal = "
+                         "sinusoid-modulated day/night curve, both from "
                          "benchmarks/traces.py; needs the repo root on "
                          "PYTHONPATH)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="engine: speculative decoding proposal depth "
+                         "(0 = off); needs --draft or --draft-layers")
+    ap.add_argument("--draft", default=None,
+                    help="engine: draft arch name (e.g. starcoder2-3b) "
+                         "for cross-model speculative decoding; "
+                         "inherits --reduced, init'd from --seed+2")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="engine: truncated-layer self-draft depth (uses "
+                         "the target's own first n layers, no second "
+                         "checkpoint; 0 = off)")
     ap.add_argument("--preemption", action="store_true",
                     help="engine: evict strictly-lower-class slots "
                          "under admission pressure and resume them "
@@ -255,6 +271,17 @@ def main(argv=None):
     quotas = {"batch": args.batch_quota} if args.batch_quota else None
     policy = bt.AdmissionPolicy(model.service_time, max_batch=num_slots,
                                 class_quotas=quotas)
+    draft = None
+    if args.draft:
+        # cross-model draft: its own (small) checkpoint, same vocab —
+        # quantized like the target so both serve in the same mode
+        dcfg = get_config(args.draft)
+        if args.reduced:
+            dcfg = dcfg.reduced()
+        dparams = R.init(jax.random.PRNGKey(args.seed + 2), dcfg)
+        if mode.enabled:
+            dparams = quantize_tree(dparams, min_size=2048)
+        draft = (dcfg, dparams)
     try:
         eng = E.Engine(cfg, params, mode=mode, num_slots=num_slots,
                        max_seq=args.prompt_len + args.gen_tokens,
@@ -264,21 +291,24 @@ def main(argv=None):
                        num_blocks=args.num_blocks or None,
                        temperature=args.temperature,
                        rng=(jax.random.PRNGKey(args.seed + 1)
-                            if args.temperature > 0 else None))
+                            if args.temperature > 0 else None),
+                       spec_k=args.spec_k, draft=draft,
+                       draft_layers=args.draft_layers or None)
     except ValueError as e:
         print(f"[engine] config rejected: {e}")
         return 1
     max_seq = eng.max_seq
     arrival_process = None
-    if args.arrival == "mmpp":
+    if args.arrival != "poisson":
         try:
             from benchmarks import traces as TR
         except ImportError:
-            print("[engine] --arrival mmpp needs benchmarks/traces.py "
-                  "on PYTHONPATH (run from the repo root with "
-                  "PYTHONPATH=src:.)")
+            print(f"[engine] --arrival {args.arrival} needs "
+                  "benchmarks/traces.py on PYTHONPATH (run from the "
+                  "repo root with PYTHONPATH=src:.)")
             return 1
-        arrival_process = TR.mmpp_process()
+        arrival_process = (TR.mmpp_process() if args.arrival == "mmpp"
+                           else TR.diurnal_process())
     frac = args.interactive_frac
     if not 0.0 <= frac <= 1.0:
         print(f"[engine] --interactive-frac must be in [0, 1]: {frac}")
@@ -321,6 +351,12 @@ def main(argv=None):
     print(f"[engine] time-to-first-token {rep.mean_ttft_s*1e3:.2f} ms mean "
           f"/ {rep.p99_ttft_s*1e3:.2f} ms p99 "
           f"(prefill chunk {rep.prefill_chunk or 'off'})")
+    if rep.spec_k:
+        print(f"[engine] speculative: k={rep.spec_k} "
+              f"({eng.dcfg.name} draft), "
+              f"{rep.accepted_per_dispatch:.2f} tokens committed per "
+              f"dispatch, {rep.latency_per_token_s*1e3:.2f} ms/token "
+              f"mean (outputs bit-for-bit the non-speculative stream)")
     if rep.block_size:
         print(f"[engine] paged KV: {rep.num_blocks} blocks x "
               f"{rep.block_size} positions, {rep.kv_hbm_bytes/1e6:.2f} MB "

@@ -185,6 +185,13 @@ def init(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
     return params
 
 
+# truncated-layer self-draft: the moe param tree has the same
+# {embed, layers (vmap-stacked), ln_f[, unembed]} shape as the dense one,
+# so the slice-the-stack view applies verbatim (expert weights ride the
+# same leading layer axis)
+draft_params = TF.draft_params
+
+
 def forward(params: dict, tokens: Array, cfg: ArchConfig, *,
             mode: QuantMode = FP, remat: bool = True) -> Array:
     x = L.embed(params["embed"], tokens)

@@ -141,6 +141,51 @@ def prime_slot(cfg: ArchConfig, params, source, n_valid, *,
                                       mode=mode)
 
 
+def supports_speculation(cfg: ArchConfig) -> bool:
+    """True when the family can serve as the TARGET (or the draft) of
+    draft-and-verify speculative decoding: its entire decode state must
+    be positional KV behind a ``valid_len`` frontier, so a rejected
+    speculative tail can be *rewound* by resetting ``cache_index`` — the
+    stale writes die by overwrite-before-read (decode-contract rule 7,
+    docs/architecture.md).  That excludes the recurrent families
+    (ssm/hybrid: ``h``/conv state advances irreversibly through rejected
+    tokens), sliding-window attention (the ring overwrite destroys the
+    positions a rewind must restore), and the prime families (their
+    cross-attention plumbing is not wired through the verify scan)."""
+    return (cfg.window is None and not needs_prime(cfg)
+            and hasattr(module_for(cfg), "draft_params"))
+
+
+def supports_self_draft(cfg: ArchConfig) -> bool:
+    """True when the family can draft for itself with a truncated-layer
+    view of its own params (no second checkpoint): it must be
+    speculation-capable AND expose ``draft_params`` — a module-level
+    slice of the vmap-stacked ``layers`` leaves."""
+    return supports_speculation(cfg)
+
+
+def draft_config(cfg: ArchConfig, n_layers: int) -> ArchConfig:
+    """The self-draft model's config: the target's, truncated to its
+    first ``n_layers`` layers."""
+    import dataclasses
+    if not 1 <= n_layers <= cfg.n_layers:
+        raise ValueError(
+            f"draft_layers must be in [1, n_layers={cfg.n_layers}], "
+            f"got {n_layers}")
+    return dataclasses.replace(cfg, name=f"{cfg.name}-draft{n_layers}",
+                               n_layers=n_layers)
+
+
+def draft_params(cfg: ArchConfig, params, n_layers: int):
+    """The self-draft model's params: the target's, with the stacked
+    ``layers`` leaves sliced to ``[:n_layers]`` (embed/norm/unembed
+    shared by reference — zero extra weight memory)."""
+    if not supports_self_draft(cfg):
+        raise ValueError(f"family {cfg.family!r} (window={cfg.window}) "
+                         f"does not support self-draft speculation")
+    return module_for(cfg).draft_params(params, n_layers)
+
+
 def cache_batch_axes(cfg: ArchConfig, cache: dict) -> dict:
     """Batch (slot) axis per cache leaf.  Families whose cache stacks
     extra leading dims (hybrid groups) override ``cache_batch_axes`` in

@@ -67,6 +67,21 @@ def init(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
     return params
 
 
+def draft_params(params: dict, n_layers: int) -> dict:
+    """Truncated-layer *self-draft* view: the first ``n_layers`` of the
+    stacked ``layers`` leaves, with embed/ln_f/unembed shared by
+    reference — no second checkpoint, no copy of the kept weights.
+    Works on quantized trees too: QTensor values AND their per-layer
+    scales carry the leading layer axis (core.quant's scannable-weights
+    convention), so a slice of either stays a valid QTensor.  At
+    ``n_layers == cfg.n_layers`` this IS the target model, which is the
+    acceptance upper-bound sanity check the speculative tests pin."""
+    out = dict(params)
+    out["layers"] = jax.tree_util.tree_map(lambda x: x[:n_layers],
+                                           params["layers"])
+    return out
+
+
 def _layer_fwd(cfg: ArchConfig, mode: QuantMode, x: Array, lp: dict,
                positions: Array) -> Array:
     acfg = attn_config(cfg)

@@ -324,6 +324,123 @@ def jit_slot_decode_step(step: Callable) -> Callable:
     return jax.jit(step, donate_argnums=(2,))
 
 
+def make_verify_step(cfg: ArchConfig, *, mode: QuantMode = FP,
+                     k: int, temperature: float = 0.0) -> Callable:
+    """One speculative *verify* tick: teacher-force up to ``k + 1`` tokens
+    per slot through the target model in ONE fused dispatch, sampling at
+    every position — the wide step draft-and-verify acceptance scores
+    against.
+
+    Returns ``step(params, tokens, cache, slot_index, n_tokens, active)
+    -> (samples, cache, slot_index)`` with ``tokens`` (S, k+1) int32 (per
+    row: the slot's next input followed by its draft proposals),
+    ``n_tokens`` (S,) int32 how many leading tokens each row really feeds
+    (1 for a non-speculating row, up to k+1 for a generating one — one
+    compiled shape whatever the mix), and ``samples`` (S, k+1) int32 the
+    sample drawn after each fed position.  With ``temperature > 0`` the
+    step takes a trailing ``rng`` and samples position ``p`` of row ``r``
+    with ``fold_in(rng, slot_index[r] + p)`` — the position-derived key
+    schedule of :func:`make_slot_decode_step`, which is what makes
+    *sampled* speculative acceptance bitwise, not just greedy.
+
+    Internally this is a ``lax.scan`` of the SAME per-token slot decode
+    step (per-row masking, paged block tables, recurrent freeze — all
+    inherited), so ``samples[r, j]`` is bit-for-bit what ``j + 1``
+    non-speculative ticks would have produced given the same fed tokens.
+    Positions past ``n_tokens[r]`` keep row ``r``'s index frozen; their
+    writes land at the row's frozen frontier and are overwritten by the
+    next real feed before any read can see them (the engine's rewind
+    rule — see docs/serving.md).  Rows with non-finite logits at any fed
+    position emit the -1 sentinel there, and the engine treats the whole
+    round as uncommitted.  Wrap with :func:`jit_verify_step` to donate
+    the cache.
+    """
+    decode = make_decode_step(cfg, mode=mode)
+
+    def _scan(params, tokens, cache, slot_index, n_tokens, active, rng):
+        def body(carry, inp):
+            cache, idx = carry
+            tok, j = inp                        # tok (S,), j ()
+            act = active & (j < n_tokens)
+            logits, new_cache = decode(
+                params, {"tokens": tok[:, None], "cache_index": idx}, cache)
+            new_cache = R.mask_inactive_slots(cfg, cache, new_cache, act)
+            if temperature > 0.0:
+                keys = jax.vmap(lambda p: jax.random.fold_in(rng, p))(idx)
+                nxt = temperature_sample_rows(logits, keys, temperature)
+            else:
+                nxt = greedy_sample(logits)
+            finite = jnp.all(
+                jnp.isfinite(logits[:, -1].astype(jnp.float32)), axis=-1)
+            nxt = jnp.where(finite, nxt, jnp.full_like(nxt, -1))
+            nxt = jnp.where(act, nxt, jnp.zeros_like(nxt))
+            return (new_cache, idx + act.astype(idx.dtype)), nxt
+
+        (cache, idx), samples = jax.lax.scan(
+            body, (cache, slot_index),
+            (jnp.swapaxes(tokens, 0, 1), jnp.arange(k + 1)))
+        return jnp.swapaxes(samples, 0, 1), cache, idx
+
+    if temperature > 0.0:
+        def step(params, tokens, cache, slot_index, n_tokens, active, rng):
+            return _scan(params, tokens, cache, slot_index, n_tokens,
+                         active, rng)
+    else:
+        def step(params, tokens, cache, slot_index, n_tokens, active):
+            return _scan(params, tokens, cache, slot_index, n_tokens,
+                         active, None)
+    return step
+
+
+def jit_verify_step(step: Callable) -> Callable:
+    """jit a verify step with the KV cache donated (argument 2)."""
+    return jax.jit(step, donate_argnums=(2,))
+
+
+def make_draft_propose_step(cfg: ArchConfig, *, mode: QuantMode = FP,
+                            k: int) -> Callable:
+    """One speculative *propose* tick: the draft model extends every
+    speculating slot by ``k`` greedy tokens in one fused dispatch.
+
+    Returns ``step(params, tokens, cache, slot_index, active) ->
+    (proposals, cache, slot_index)`` with ``tokens`` (S, 1) int32 each
+    row's committed next input and ``proposals`` (S, k) int32 the draft's
+    greedy continuations ``d_1..d_k`` (fed back token by token).  The
+    draft is always greedy whatever the target's sampling mode: its
+    proposals are *guesses* the verify step scores, so they affect only
+    the acceptance rate, never the committed output.  A draft row whose
+    logits go non-finite proposes token 0 instead of the -1 sentinel —
+    a wrong-but-harmless guess (it can only be rejected), which is why
+    draft dispatches need none of the engine's fault recovery.  Wrap
+    with :func:`jit_draft_propose_step` to donate the draft cache.
+    """
+    decode = make_decode_step(cfg, mode=mode)
+
+    def step(params, tokens, cache, slot_index, active):
+        def body(carry, _):
+            tok, cache, idx = carry
+            logits, new_cache = decode(
+                params, {"tokens": tok, "cache_index": idx}, cache)
+            new_cache = R.mask_inactive_slots(cfg, cache, new_cache, active)
+            nxt = greedy_sample(logits)
+            finite = jnp.all(
+                jnp.isfinite(logits[:, -1].astype(jnp.float32)), axis=-1)
+            nxt = jnp.where(finite & active, nxt, jnp.zeros_like(nxt))
+            return (nxt[:, None], new_cache,
+                    idx + active.astype(idx.dtype)), nxt
+
+        (_, cache, idx), props = jax.lax.scan(
+            body, (tokens, cache, slot_index), None, length=k)
+        return jnp.swapaxes(props, 0, 1), cache, idx
+
+    return step
+
+
+def jit_draft_propose_step(step: Callable) -> Callable:
+    """jit a propose step with the draft cache donated (argument 2)."""
+    return jax.jit(step, donate_argnums=(2,))
+
+
 def make_prefill_chunk_step(cfg: ArchConfig, *, mode: QuantMode = FP,
                             chunk: int) -> Callable:
     """Chunked prefill for ONE slot of the engine's pool: write ``chunk``

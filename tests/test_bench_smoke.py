@@ -30,7 +30,10 @@ ROW_KEYS = {
                "class_p99_latency_s", "class_mean_ttft_s",
                "class_p99_ttft_s", "goodput_tokens_per_s",
                "slo_attainment", "preempted", "dropped", "failed",
-               "unfinished"},
+               "unfinished",
+               # speculative decoding: draft-and-verify accounting
+               "spec_k", "draft_layers", "accepted_per_dispatch",
+               "latency_per_token_s"},
 }
 
 
@@ -55,6 +58,9 @@ def bench_doc(tmp_path_factory):
     # (sequential-reference parity + append-path kernel parity, offline)
     assert "[engine] smoke:" in r.stdout
     assert "parity OK" in r.stdout
+    # satellite: --smoke runs the speculative gate (full-depth self-draft
+    # chaos arm + garbage draft + non-spec control, all bit-for-bit)
+    assert "[spec] smoke:" in r.stdout
     return json.loads(out.read_text())
 
 
@@ -99,6 +105,16 @@ def test_rows_are_sane(bench_doc):
             else:
                 assert row["peak_blocks_used"] == 0
                 assert row["shared_block_hits"] == 0
+            # speculative accounting: apd is exactly 1.0 without a
+            # draft (one committed token per dispatch, by construction)
+            # and can only improve on it with one
+            assert row["latency_per_token_s"] > 0
+            if row["spec_k"] == 0:
+                assert row["accepted_per_dispatch"] == 1.0
+                assert row["draft_layers"] == 0
+            else:
+                assert row["accepted_per_dispatch"] >= 1.0
+                assert row["draft_layers"] >= 1
 
 
 def test_paged_engine_row_present(bench_doc):
@@ -109,6 +125,27 @@ def test_paged_engine_row_present(bench_doc):
     assert paged, "no paged engine row in the trajectory JSON"
     assert any(row["shared_block_hits"] > 0 for row in paged)
     assert any(row["prefill_tokens_skipped"] > 0 for row in paged)
+
+
+def test_speculative_rows_beat_their_pair(bench_doc):
+    """The perf story this PR ships: the speculative rows share their
+    trace with a non-speculative row at the same (arch, rate), so the
+    ticks column is directly comparable — a self-draft config must
+    commit > 1 token per verify dispatch and finish the trace in
+    strictly fewer engine ticks."""
+    eng = [r for r in bench_doc["rows"] if r["kind"] == "engine"]
+    spec = [r for r in eng if r["spec_k"] > 0]
+    assert spec, "no speculative engine row in the trajectory JSON"
+    assert any(r["accepted_per_dispatch"] > 1.0 for r in spec)
+    for row in spec:
+        pair = [r for r in eng
+                if r["spec_k"] == 0 and r["arch"] == row["arch"]
+                and r["rate"] == row["rate"]
+                and r["n_requests"] == row["n_requests"]
+                and not r["block_size"] and "+" not in r["arch"]]
+        assert pair, f"speculative row has no non-spec pair: {row['arch']}"
+        if row["accepted_per_dispatch"] > 1.0:
+            assert row["ticks"] < min(r["ticks"] for r in pair), row
 
 
 def test_engine_rows_cover_all_decode_families(bench_doc):

@@ -41,6 +41,47 @@ class TestArrivals:
         assert TR.index_of_dispersion([]) == 0.0
         assert TR.index_of_dispersion([0.1]) >= 0.0
 
+    def test_diurnal_deterministic(self):
+        proc = TR.diurnal_process()
+        assert proc(50, 100.0, 3) == proc(50, 100.0, 3)
+        assert proc(50, 100.0, 3) != proc(50, 100.0, 4)
+
+    def test_diurnal_sorted_and_sized(self):
+        times = TR.diurnal_process()(100, 200.0, 0)
+        assert len(times) == 100
+        assert all(b >= a for a, b in zip(times, times[1:]))
+
+    def test_diurnal_is_overdispersed_vs_poisson(self):
+        """Counts on windows shorter than the period are overdispersed
+        (peak slices arrive ~(1+depth)/(1-depth)x faster than troughs);
+        depth=0 degenerates to plain Poisson and IoD drops back to ~1."""
+        rate = 200.0
+        diur = TR.diurnal_process(depth=0.9, period_s=2.0)(400, rate, 0)
+        flat = TR.diurnal_process(depth=0.0, period_s=2.0)(400, rate, 0)
+        assert TR.index_of_dispersion(diur) > 2.0
+        assert TR.index_of_dispersion(flat) < 2.0
+
+    def test_diurnal_peak_half_outpaces_trough_half(self):
+        """With phase=0 the first half-period is the high-rate half of
+        the sinusoid: it must hold clearly more arrivals than the second
+        half on a period-long horizon."""
+        period = 1.0
+        times = TR.diurnal_process(depth=0.8, period_s=period)(
+            300, 300.0, 1)
+        first = sum(1 for t in times if t % period < period / 2)
+        second = sum(1 for t in times if t % period >= period / 2)
+        assert first > 1.5 * second
+
+    def test_diurnal_validates_parameters(self):
+        with pytest.raises(ValueError):
+            TR.diurnal_process(depth=1.0)
+        with pytest.raises(ValueError):
+            TR.diurnal_process(depth=-0.1)
+        with pytest.raises(ValueError):
+            TR.diurnal_process(period_s=0.0)
+        with pytest.raises(ValueError):
+            TR.diurnal_process(steps_per_period=1)
+
 
 # ---------------------------------------------------------------------------
 # heavy-tailed lengths
