@@ -145,6 +145,22 @@ def smoke(kernel_rows=None) -> int:
           f"{spec['garbage_accepted_per_dispatch']:.2f} tokens/dispatch, "
           f"non-spec control at exactly 1.00; bit-for-bit parity OK")
 
+    # multi-model gate: two families multiplexed on one engine under
+    # chaos (preemption + seeded cross-lane faults + tight per-lane
+    # block pools) must hold per-model bit-for-bit parity, drain both
+    # block pools clean, and consolidate occupancy past either
+    # dedicated engine at the same offered rates
+    mux = serving_bench.multiplex_smoke()
+    print(f"[multiplex] smoke: {mux['requests']} two-model requests "
+          f"survived {mux['faults_fired']} cross-lane faults and "
+          f"{mux['preempted']} preemptions with {mux['failed']} typed "
+          f"failures, {mux['leaked_blocks']} leaked blocks; per-model "
+          f"sequential-reference parity OK; model-fingerprinted prefix "
+          f"keys OK; multiplexed occupancy "
+          f"{mux['multiplexed_occupancy']:.1%} beats both dedicated "
+          f"engines (per-model occupancy "
+          f"{ {t: round(v, 3) for t, v in mux['model_mean_occupancy'].items()} })")
+
     print("\nsmoke OK: flops/bytes nonzero, scan trip count exact")
     return 0
 

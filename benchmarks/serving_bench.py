@@ -20,7 +20,9 @@ Row schema (stable; asserted by tests/test_bench_smoke.py)::
    "kv_hbm_bytes", "peak_blocks_used", "mean_block_util",
    "shared_block_hits", "shared_hit_rate", "prefill_tokens_skipped",
    "effective_concurrency", "spec_k", "draft_layers",
-   "accepted_per_dispatch", "latency_per_token_s"}
+   "accepted_per_dispatch", "latency_per_token_s", "model",
+   "model_p99_s", "model_mean_ttft_s", "model_goodput_tokens_per_s",
+   "model_mean_occupancy"}
 
 The ``engine`` rows are the continuous-batching section: one row per
 (family, offered rate) — p99 vs load is the Table 4 story told by the
@@ -108,6 +110,10 @@ def serving_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
     # the multi-tenant row: bursty MMPP two-class trace under per-class
     # quotas + preemption — per-class p99/ttft and goodput-under-SLO
     rows.extend(two_class_rows(arch, quant=quant))
+    # multi-model multiplexing: two dedicated engines vs one multiplexed
+    # engine on the same per-model offered rates — the +2model row's
+    # combined occupancy beats either +dedicated row's
+    rows.extend(multiplex_rows(quant=quant))
     # the speculative rows, paired with the default rate-800 row above
     # (same arch, same trace) so the accepted_per_dispatch/ticks columns
     # show what draft-and-verify buys: the full-depth self-draft is the
@@ -190,11 +196,22 @@ def engine_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
     return rows
 
 
-def _engine_row(cfg, rate, n_requests, rep, draft_layers: int = 0):
+def _engine_row(cfg, rate, n_requests, rep, draft_layers: int = 0,
+                model=None):
     """One BENCH engine row from an EngineReport (schema pinned by
-    tests/test_bench_smoke.py)."""
+    tests/test_bench_smoke.py).  ``model`` labels the row's lane story:
+    a lane tag for a dedicated single-model engine in a multiplex
+    comparison, a "+"-joined tag list for a multiplexed engine, None
+    for ordinary single-model rows."""
     return {
         "kind": "engine", "arch": cfg.name, "family": cfg.family,
+        "model": model,
+        # per-model columns (populated on multiplexed engines; empty
+        # dicts everywhere else — the keys are always present)
+        "model_p99_s": dict(rep.model_p99_latency_s),
+        "model_mean_ttft_s": dict(rep.model_mean_ttft_s),
+        "model_goodput_tokens_per_s": dict(rep.model_goodput_tokens_per_s),
+        "model_mean_occupancy": dict(rep.model_mean_occupancy),
         "rate": rate,
         "n_requests": n_requests, "num_slots": rep.num_slots,
         "p99_s": rep.p99_latency_s,
@@ -279,6 +296,168 @@ def two_class_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
     row = _engine_row(cfg, rate, n_requests, rep)
     row["arch"] = cfg.name + "+2class"
     return [row]
+
+
+def _multiplex_pair(quant: str = "w8a16"):
+    """The two lanes the multiplex BENCH/smoke stories share: a reduced
+    dense arch and a reduced MoE arch with their params (quantized per
+    ``quant``), as ``(tag, cfg, params)`` triples."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.qlinear import FP, W8A16, W8A8
+    from repro.core.quant import quantize_tree
+    from repro.models import registry as R
+
+    mode = {"fp": FP, "w8a16": W8A16, "w8a8": W8A8}[quant]
+    out = []
+    for tag, arch, seed in (("a", "starcoder2-3b", 0),
+                            ("b", "qwen2-moe-a2.7b", 1)):
+        cfg = dataclasses.replace(get_config(arch).reduced(),
+                                  kv_quant=True)
+        params = R.init(jax.random.PRNGKey(seed), cfg)
+        if mode.enabled:
+            params = quantize_tree(params, min_size=2048)
+        out.append((tag, cfg, params))
+    return mode, out
+
+
+def multiplex_rows(*, quant: str = "w8a16", rate: float = 600.0,
+                   n_requests: int = 16, num_slots: int = 4):
+    """The multi-model BENCH rows: each lane served by a dedicated
+    engine at its offered rate (arch suffix ``+dedicated``), then BOTH
+    lanes multiplexed on ONE engine at the SAME per-model offered rates
+    (suffix ``+2model``).  The multiplexed row's combined occupancy must
+    beat either dedicated row's — the whole point of leasing one slot
+    budget across models instead of static partitioning; the smoke gate
+    and tests/test_bench_smoke.py assert exactly that."""
+    from repro import engine as E
+
+    mode, pair = _multiplex_pair(quant)
+    per_model = {}
+    for tag, cfg, params in pair:
+        per_model[tag] = E.synthetic_requests(
+            n_requests, rate_per_s=rate, vocab=cfg.vocab, prompt_len=4,
+            max_new_tokens=6, seed=ord(tag), model=tag)
+    # unique rids across the merged trace; the dedicated replays serve
+    # the SAME offset-rid requests so prompts match token for token
+    per_model["b"] = [dataclasses.replace(r, rid=r.rid + 1000)
+                      for r in per_model["b"]]
+
+    rows = []
+    dedicated_occ = {}
+    for tag, cfg, params in pair:
+        eng = E.Engine(cfg, params, mode=mode, num_slots=num_slots,
+                       max_seq=16, prefill_chunk=4, block_size=4)
+        sub = [dataclasses.replace(r, model=None) for r in per_model[tag]]
+        eng.serve(sub[:num_slots], clock="wall")
+        warm = eng.serve(sub[:num_slots], clock="wall")
+        tick_s = warm.wall_s / max(warm.ticks, 1)
+        rep = eng.serve(sub, clock="virtual", tick_s=tick_s)
+        dedicated_occ[tag] = rep.mean_occupancy
+        row = _engine_row(cfg, rate, n_requests, rep, model=tag)
+        row["arch"] = cfg.name + "+dedicated"
+        rows.append(row)
+
+    meng = E.Engine(models={t: (c, p) for t, c, p in pair}, mode=mode,
+                    num_slots=num_slots, max_seq=16, prefill_chunk=4,
+                    block_size=4)
+    merged = sorted(per_model["a"] + per_model["b"],
+                    key=lambda r: r.arrival_s)
+    meng.serve(merged[:num_slots], clock="wall")
+    warm = meng.serve(merged[:num_slots], clock="wall")
+    tick_s = warm.wall_s / max(warm.ticks, 1)
+    mrep = meng.serve(merged, clock="virtual", tick_s=tick_s)
+    if mrep.mean_occupancy <= max(dedicated_occ.values()):
+        raise AssertionError(
+            f"multiplexed occupancy {mrep.mean_occupancy:.3f} does not "
+            f"beat the dedicated engines' {dedicated_occ} at the same "
+            "offered rates — slot leasing is not consolidating load")
+    row = _engine_row(pair[0][1], 2 * rate, 2 * n_requests, mrep,
+                      model="a+b")
+    row["arch"] = pair[0][1].name + "+2model"
+    rows.append(row)
+    return rows
+
+
+def multiplex_smoke() -> dict:
+    """The multi-model gate (``benchmarks/run.py --smoke``): two model
+    families multiplexed on one engine through a bursty two-model
+    two-class trace, with preemption, an under-provisioned per-lane
+    block pool, and a seeded fault plan striking across lanes.  The
+    invariants:
+
+    - per-model outputs are bit-for-bit each lane's own sequential
+      reference for every non-failed completed request (cross-model
+      interleaving, preemption, and faults are invisible in the tokens);
+    - nothing is lost (one typed result per request) and both lanes'
+      block pools drain clean (``leaked_blocks == 0`` summed);
+    - prefix keys are model-fingerprinted (the same token prompt hashes
+      to different chains on different lanes), so paged sharing cannot
+      cross models even before the lane-private pools make it
+      structurally impossible;
+    - the multiplexed occupancy consolidation holds (the
+      ``multiplex_rows`` comparison runs as part of the gate)."""
+    from benchmarks import traces as TR
+    from repro import engine as E
+
+    mode, pair = _multiplex_pair("w8a16")
+    cfgs = {t: c for t, c, _ in pair}
+    prms = {t: p for t, _, p in pair}
+    reqs = TR.two_class_trace(
+        160, rate_per_s=2000.0, vocab=0, seed=7,
+        interactive_deadline_s=1e9, batch_deadline_s=1e9,
+        prompt_len=(2, 8), max_new_tokens=(2, 6),
+        arrival=TR.mmpp_process(dwell_s=(0.05, 0.0125)),
+        models=[(t, cfgs[t].vocab) for t, _, _ in pair])
+    want = {}
+    for t in cfgs:
+        sub = [dataclasses.replace(r, model=None)
+               for r in reqs if r.model == t]
+        want[t] = E.reference_outputs(cfgs[t], prms[t], sub, max_seq=16)
+
+    eng = E.Engine(models={t: (cfgs[t], prms[t]) for t in cfgs},
+                   mode=mode, num_slots=4, max_seq=16, prefill_chunk=4,
+                   block_size=4, num_blocks=13)
+    plan = E.FaultPlan.random(seed=42, n_faults=12, max_tick=300,
+                              num_slots=8)   # global ids span 2 lanes
+    rep = eng.serve(reqs, clock="virtual", tick_s=1e-3, preemption=True,
+                    fault_plan=plan)
+    if len(rep.results) != len(reqs):
+        raise AssertionError(
+            f"multiplex smoke lost requests: {len(rep.results)}/{len(reqs)}")
+    if rep.leaked_blocks != 0:
+        raise AssertionError(f"multiplex smoke leaked {rep.leaked_blocks} "
+                             "KV blocks across lanes")
+    if rep.preempted <= 0:
+        raise AssertionError("multiplex smoke never preempted: the "
+                             "per-lane block pools are not tight enough")
+    if not plan.fired:
+        raise AssertionError("no scheduled fault fired across the lanes")
+    bad = [r.rid for r in rep.results
+           if r.status == "ok" and r.tokens != want[r.model][r.rid]]
+    if bad:
+        raise AssertionError(
+            f"multiplexed outputs diverge from per-model references for "
+            f"rids {bad[:8]} — model state is leaking across lanes")
+    probe = next(r for r in reqs
+                 if r.model == "a" and len(r.prompt) >= 4)
+    ka = eng.lanes["a"]._prefix_keys(dataclasses.replace(probe, model=None))
+    kb = eng.lanes["b"]._prefix_keys(dataclasses.replace(probe, model=None))
+    if ka == kb:
+        raise AssertionError("prefix keys are not model-fingerprinted: "
+                             "identical prompts hash equal across lanes")
+    mrows = multiplex_rows(quant="w8a16")
+    occ = {r["arch"].rsplit("+", 1)[1]: r["mean_occupancy"]
+           for r in mrows}
+    return {"requests": len(rep.results),
+            "preempted": rep.preempted,
+            "failed": rep.failed,
+            "faults_fired": len(plan.fired),
+            "leaked_blocks": rep.leaked_blocks,
+            "model_mean_occupancy": dict(rep.model_mean_occupancy),
+            "multiplexed_occupancy": occ.get("2model"),
+            "goodput_tokens_per_s": rep.goodput_tokens_per_s}
 
 
 def engine_smoke(n_requests: int = 12) -> dict:

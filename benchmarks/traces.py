@@ -176,14 +176,23 @@ def two_class_trace(n: int, *, rate_per_s: float, vocab: int,
                     prompt_len: Tuple[int, int] = (2, 12),
                     max_new_tokens: Tuple[int, int] = (2, 10),
                     alpha: float = 1.6,
-                    arrival: Optional[ArrivalProcess] = None
+                    arrival: Optional[ArrivalProcess] = None,
+                    models: Optional[Sequence[Tuple[str, int]]] = None
                     ) -> List[EngineRequest]:
     """A bursty two-class trace: MMPP arrivals (by default), bounded-
     Pareto prompt/output lengths, and per-class SLO deadlines.  Request
     ``rid`` is interactive iff ``(rid * 2654435761) % 1000 <
     interactive_frac * 1000`` — a deterministic hash split, so the class
     mix is stable under any ``n``.  Prompts are rid-derived exactly like
-    ``synthetic_requests`` (two runs see identical token streams)."""
+    ``synthetic_requests`` (two runs see identical token streams).
+
+    ``models`` makes it a multi-model trace for a multiplexed engine: a
+    sequence of ``(tag, vocab)`` pairs, request ``rid`` round-robins to
+    ``models[rid % len(models)]``, gets that lane's tag stamped on
+    ``EngineRequest.model``, and draws its prompt tokens inside that
+    lane's OWN vocab (the ``vocab`` argument is ignored for tagged
+    requests).  Arrivals, lengths, and the class split are unchanged, so
+    the trace with ``models=None`` stays byte-identical to before."""
     if not 0.0 <= interactive_frac <= 1.0:
         raise ValueError(f"interactive_frac must be in [0, 1], "
                          f"got {interactive_frac}")
@@ -198,9 +207,11 @@ def two_class_trace(n: int, *, rate_per_s: float, vocab: int,
         interactive = (rid * 2654435761) % 1000 < interactive_frac * 1000
         cls = "interactive" if interactive else "batch"
         ddl = interactive_deadline_s if interactive else batch_deadline_s
-        prompt = tuple(1 + (rid * 7 + 3 * j) % (vocab - 1)
+        tag, v = (None, vocab) if models is None \
+            else models[rid % len(models)]
+        prompt = tuple(1 + (rid * 7 + 3 * j) % (v - 1)
                        for j in range(plens[rid]))
         reqs.append(EngineRequest(
             rid=rid, prompt=prompt, max_new_tokens=glens[rid],
-            arrival_s=t, deadline_s=t + ddl, priority=cls))
+            arrival_s=t, deadline_s=t + ddl, priority=cls, model=tag))
     return reqs

@@ -31,8 +31,9 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import heapq
-from typing import (Callable, Dict, List, Mapping, Optional, Sequence,
-                    Tuple)
+from collections.abc import Mapping as _MappingABC
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple, Union)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,11 +161,19 @@ class AdmissionPolicy:
     (see ``SlotScheduler.push``) and the cohort shrinks from its tail,
     so under pressure the lowest class is dropped first — shrink *by
     class before deadline*.  A class without a quota entry is uncapped.
+
+    Quota keys generalize to tuples for multi-model multiplexing: a
+    request classed as ``(model, cls)`` is metered against the quota
+    entries for the full pair AND each component, so ``{"batch": 4}``
+    still caps batch traffic across all models while ``{"moe-a": 2}``
+    caps one model across all classes and ``{("moe-a", "batch"): 1}``
+    pins the intersection.  String-classed requests behave exactly as
+    before — the tuple path is additive.
     """
 
     def __init__(self, service_time: Callable[[int], float],
                  max_batch: int = 256, max_wait_s: float = 2e-3,
-                 class_quotas: Optional[Mapping[str, int]] = None):
+                 class_quotas: Optional[Mapping[Any, int]] = None):
         self.service_time = service_time
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
@@ -174,9 +183,9 @@ class AdmissionPolicy:
                next_arrival: Optional[float] = None,
                capacity: Optional[int] = None,
                costs: Optional[Sequence[int]] = None,
-               budget: Optional[int] = None,
-               classes: Optional[Sequence[str]] = None,
-               active_by_class: Optional[Mapping[str, int]] = None
+               budget: Union[int, Mapping[Optional[str], int], None] = None,
+               classes: Optional[Sequence[Any]] = None,
+               active_by_class: Optional[Mapping[Any, int]] = None
                ) -> Admission:
         """``deadlines``: absolute deadlines of pending requests, sorted
         ascending (an empty queue is a no-launch wait).  ``capacity``
@@ -192,12 +201,17 @@ class AdmissionPolicy:
         longer sufficient).
 
         ``classes``/``active_by_class`` switch on per-class slot quotas:
-        ``classes[i]`` is pending request i's SLO class and
-        ``active_by_class`` the slots each class already holds.  A
+        ``classes[i]`` is pending request i's SLO class — a plain string
+        or, for multi-model multiplexing, a ``(model, cls)`` tuple
+        metered against the pair and both components — and
+        ``active_by_class`` the slots each quota key already holds.  A
         request whose class quota is full is *skipped over* (not a
         barrier: later pending requests of an unblocked class still
         admit), so the cohort is returned as explicit ``picks`` indices
-        rather than a prefix length."""
+        rather than a prefix length.  When classes are tuples, ``budget``
+        may be a per-model mapping ``{model: free}`` so one model's
+        memory pressure sheds only that model's cohort tail instead of
+        starving every model behind a shared number."""
         if not deadlines:
             return Admission(False, wait_until=(
                 next_arrival if next_arrival is not None else now))
@@ -229,21 +243,38 @@ class AdmissionPolicy:
             return Admission(False, wait_until=next_arrival)
         return Admission(True, batch=b)
 
+    @staticmethod
+    def _quota_keys(c) -> Tuple:
+        """Quota keys a classed request is metered against: a string
+        class meters only itself; a ``(model, cls)`` tuple meters the
+        pair and each non-None component (deduplicated), so per-model
+        and per-class quotas compose without cross-products in config."""
+        if not isinstance(c, tuple):
+            return (c,)
+        keys = [c]
+        for part in c:
+            if part is not None and part not in keys:
+                keys.append(part)
+        return tuple(keys)
+
     def _decide_classes(self, now, deadlines, next_arrival, cap,
                         costs, budget, classes, active_by_class):
         """Class-aware cohort selection.  With no quotas configured and a
         uniform class this reduces exactly to the legacy prefix path
         (no request is ever skipped, so picks == range(b))."""
-        used: Dict[str, int] = dict(active_by_class or {})
+        used: Dict[Any, int] = dict(active_by_class or {})
         sel: List[int] = []
         for i, c in enumerate(classes):
             if len(sel) >= cap:
                 break
-            quota = self.class_quotas.get(c)
-            if quota is not None and used.get(c, 0) >= quota:
+            keys = self._quota_keys(c)
+            if any(self.class_quotas.get(k) is not None
+                   and used.get(k, 0) >= self.class_quotas[k]
+                   for k in keys):
                 continue                       # quota-blocked: skip, not stop
             sel.append(i)
-            used[c] = used.get(c, 0) + 1
+            for k in keys:
+                used[k] = used.get(k, 0) + 1
         wait = Admission(False, wait_until=(
             next_arrival if next_arrival is not None else now))
         if not sel:
@@ -255,8 +286,20 @@ class AdmissionPolicy:
             sel.pop()
             earliest = min(deadlines[i] for i in sel)
         if costs is not None and budget is not None:
-            while sel and sum(costs[i] for i in sel) > budget:
-                sel.pop()
+            if isinstance(budget, _MappingABC):
+                # per-model budgets: each model sheds its OWN cohort
+                # tail until its claim fits its pool — a starved model
+                # skips, it never barriers the others
+                def model_of(i):
+                    c = classes[i]
+                    return c[0] if isinstance(c, tuple) else None
+                for m, free in budget.items():
+                    mine = [i for i in sel if model_of(i) == m]
+                    while mine and sum(costs[i] for i in mine) > free:
+                        sel.remove(mine.pop())
+            else:
+                while sel and sum(costs[i] for i in sel) > budget:
+                    sel.pop()
             if not sel:
                 return wait
         can_wait = (

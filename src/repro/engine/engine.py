@@ -92,6 +92,11 @@ class EngineRequest:
     # slots a class may hold, and preemption only ever evicts a slot of
     # strictly lower class than the request it makes room for
     priority: str = "interactive"
+    # multi-model multiplexing: which admitted model lane serves this
+    # request (must name a tag of Engine(models={...}); None on a
+    # single-model engine).  Quotas then meter (model, class) keys —
+    # see docs/serving.md, multi-model multiplexing.
+    model: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -111,6 +116,7 @@ class RequestResult:
     priority: str = "interactive"
     preemptions: int = 0              # times evicted + exactly resumed
     deadline_s: float = float("inf")
+    model: Optional[str] = None       # serving model lane (None = single)
 
     @property
     def latency_s(self) -> float:
@@ -186,9 +192,30 @@ class EngineReport:
                                         # bonus run length with it
     latency_per_token_s: float = 0.0  # mean over ok requests of
                                       # latency_s / emitted tokens
+    # multi-model multiplexing (Engine(models={...})): per-model tails,
+    # goodput and occupancy.  Empty on a single-model engine.  Per-model
+    # occupancy is each lane's active slots over the SHARED lease budget
+    # (num_slots), so the per-model fractions sum to mean_occupancy.
+    model_p99_latency_s: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    model_mean_ttft_s: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    model_p99_ttft_s: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    model_goodput_tokens_per_s: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    model_mean_occupancy: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    model_occupancy: Dict[str, List[int]] = dataclasses.field(
+        default_factory=dict)        # per-tick active slots per lane
 
     def outputs(self) -> Dict[int, List[int]]:
         return {r.rid: r.tokens for r in self.results}
+
+    def outputs_for(self, model: Optional[str]) -> Dict[int, List[int]]:
+        """One model lane's outputs — what the differential harness
+        compares against a dedicated single-model engine."""
+        return {r.rid: r.tokens for r in self.results if r.model == model}
 
 
 @dataclasses.dataclass
@@ -207,10 +234,197 @@ class _Stash:
     retries: int
 
 
-class Engine:
-    """Continuous-batching serving engine over a slot-based KV cache."""
+class _Lane:
+    """One admitted model on the engine: its compiled step set, its
+    device cache(s), and its model-scoped host accounting (SlotPool,
+    BlockPool, block-table mirror, dispatch buffers).
 
-    def __init__(self, cfg: ArchConfig, params, *, mode: QuantMode = FP,
+    A single-model engine is exactly one lane with ``tag=None`` — every
+    legacy code path routes through it unchanged.  The multiplexed
+    engine holds one lane per entry of ``Engine(models={...})``; no
+    leaf of one lane's cache, block pool, or draft state is ever read
+    by another lane's dispatches (decode-contract rule 8: per-lane
+    pools make cross-model sharing structurally impossible, and the
+    prefix hash chain is additionally seeded with the lane tag).
+
+    Compiled steps come from the process-wide memo in
+    ``runtime.steps`` (``cached_*``), so a dedicated single-model
+    engine and a multiplexed lane over the same config share one
+    compilation — which is what keeps the differential test harness
+    cheap."""
+
+    def __init__(self, eng: "Engine", tag: Optional[str], order: int,
+                 cfg: ArchConfig, params, spec_k: int,
+                 dcfg: Optional[ArchConfig], dparams):
+        self.eng = eng
+        self.tag = tag
+        self.order = order                 # dense gid = order * S + sid
+        self.cfg, self.params = cfg, params
+        self.spec_k = spec_k               # 0 on lanes that can't draft
+        self.dcfg, self.dparams = dcfg, dparams
+        mode, temp = eng.mode, eng.temperature
+        self.step = ST.cached_slot_decode_step(cfg, mode=mode,
+                                               temperature=temp)
+        # encdec/vlm: the prime dispatch that writes a slot's cross-K/V
+        # row (second slot-resident static operand) at admission, run
+        # concurrently with other slots' decoding like chunked prefill
+        self._prime_step = (ST.cached_prime_step(cfg, mode=mode)
+                            if R.needs_prime(cfg) else None)
+        # speculative steps: the target's wide verify step replaces the
+        # fused 1-token step on every tick, the draft's propose step and
+        # its own chunked catch-up steps feed it (draft state is a plain
+        # contiguous cache — the draft never pages or shares blocks)
+        if spec_k > 0:
+            self._verify_step = ST.cached_verify_step(
+                cfg, mode=mode, k=spec_k, temperature=temp)
+            self._propose_step = ST.cached_draft_propose_step(
+                dcfg, mode=mode, k=spec_k)
+        else:
+            self._verify_step = self._propose_step = None
+        self.reset()
+
+    # -- per-serve runtime state ---------------------------------------
+
+    def reset(self) -> None:
+        """Fresh serving state: called at Engine construction and at the
+        top of every ``serve`` (a serve never trusts a previous serve's
+        device or host state)."""
+        eng = self.eng
+        S = eng.num_slots
+        self.pool = SlotPool(S, max_seq=eng.max_seq, model=self.tag)
+        self.cache = self._init_cache()
+        self.tokens = np.zeros((S, 1), np.int32)
+        self.index = np.zeros((S,), np.int32)
+        self.spec = self.spec_k > 0
+        self.draft_cache = (R.init_cache(self.dcfg, S, eng.max_seq)
+                            if self.spec else None)
+        self.krow = np.zeros((S,), np.int32)
+        self.props = self.tok_mat = self.n_tok = None
+        paged = eng.block_size is not None
+        self.bpool = (BlockPool(eng.num_blocks, eng.block_size,
+                                model=self.tag) if paged else None)
+        self.tables_np = (np.zeros((S, eng.max_blocks), np.int32)
+                          if paged else None)
+        self.tables_dirty = False
+        # per-tick dispatch scratch (rebuilt each tick by serve)
+        self.active_mask = np.zeros((S,), bool)
+        self.ready: List[int] = []
+        self.torn: List[int] = []
+        self.nxt = None
+
+    # -- compiled-step plumbing ----------------------------------------
+
+    def _init_cache(self):
+        """The pooled device cache: contiguous slot rows, or (paged mode)
+        physical KV blocks behind an all-trash block table."""
+        eng = self.eng
+        if eng.block_size:
+            return R.init_paged_cache(self.cfg, eng.num_slots,
+                                      eng.max_seq, eng.block_size,
+                                      eng.num_blocks)
+        return R.init_cache(self.cfg, eng.num_slots, eng.max_seq)
+
+    def _chunk_step(self, chunk: int) -> Callable:
+        """The compiled prefill step for one bucket size (memoized in
+        ``runtime.steps`` — at most one compilation per (config, bucket)
+        ever exists in the process)."""
+        return ST.cached_prefill_chunk_step(self.cfg, mode=self.eng.mode,
+                                            chunk=chunk)
+
+    def _draft_chunk_step(self, chunk: int) -> Callable:
+        """The draft model's compiled prefill step for one bucket size —
+        how the engine teacher-forces committed tokens the draft cache
+        has not consumed yet (admission, exact resume, full accepts)."""
+        return ST.cached_prefill_chunk_step(self.dcfg, mode=self.eng.mode,
+                                            chunk=chunk)
+
+    def _fused(self, tokens, cache, index, active):
+        args = (self.params, jnp.asarray(tokens), cache,
+                jnp.asarray(index), jnp.asarray(active))
+        if self.eng.temperature > 0.0:
+            return self.step(*args, self.eng.rng)
+        return self.step(*args)
+
+    def _verify(self, tok_mat, cache, index, n_tok, active):
+        args = (self.params, jnp.asarray(tok_mat), cache,
+                jnp.asarray(index), jnp.asarray(n_tok),
+                jnp.asarray(active))
+        if self.eng.temperature > 0.0:
+            return self._verify_step(*args, self.eng.rng)
+        return self._verify_step(*args)
+
+    # -- paged-mode admission helpers (host-side; docs/serving.md) -----
+
+    def _prefix_keys(self, req: EngineRequest) -> Tuple:
+        """Exact prefix hash chain, one key per FULL prompt block:
+        ``key_j = (key_{j-1}, block_j_tokens)`` — nested tuples compared
+        by value, so equal keys mean equal token prefixes (no hash
+        collisions by construction).  Prime families seed the chain with
+        the request's source bytes: their self-KV at any position depends
+        on the cross-attended source, so two prefixes only share when
+        source AND tokens match.  A tagged lane additionally seeds the
+        chain with its model tag — the explicit fingerprint behind the
+        no-cross-model-sharing rule (each lane's BlockPool is private
+        anyway, so this is defense in depth, not the only wall)."""
+        bs = self.eng.block_size
+        key: Tuple = ()
+        if self._prime_step is not None:
+            src = np.asarray(req.source, np.float32)
+            key = (src.shape, src.tobytes())
+        if self.tag is not None:
+            key = (("model", self.tag), key)
+        keys = []
+        for j in range(len(req.prompt) // bs):
+            key = (key, tuple(req.prompt[j * bs:(j + 1) * bs]))
+            keys.append(key)
+        return tuple(keys)
+
+    def _usable_hits(self, req: EngineRequest,
+                     keys: Optional[Tuple] = None) -> int:
+        """Leading prompt blocks already resident (registered by an
+        earlier tenant).  Capped at ``(prompt-1) // bs``: the LAST prompt
+        token always rides the fused step, and its KV write must land in
+        a privately owned block, never a shared one."""
+        if keys is None:
+            keys = self._prefix_keys(req)
+        cap = (len(req.prompt) - 1) // self.eng.block_size
+        hits = 0
+        for j in range(min(cap, len(keys))):
+            if self.bpool.lookup(keys[j]) is None:
+                break
+            hits += 1
+        return hits
+
+    def _block_cost(self, req: EngineRequest) -> int:
+        """Worst-case FRESH blocks this request claims if admitted now:
+        ceil((prompt + max_new) / bs) minus currently shareable prefix
+        blocks — what memory-aware admission prices against the pool."""
+        bs = self.eng.block_size
+        need = -(-(len(req.prompt) + req.max_new_tokens) // bs)
+        return need - self._usable_hits(req)
+
+
+class Engine:
+    """Continuous-batching serving engine over a slot-based KV cache.
+
+    Single-model (the legacy form): ``Engine(cfg, params, ...)`` — one
+    model lane tagged ``None``, every request untagged.
+
+    Multi-model multiplexing: ``Engine(models={tag: (cfg, params)},
+    ...)`` — one lane per admitted model, each with its own compiled
+    step set, device cache, slot pool, and (paged mode) block pool.
+    Requests carry ``EngineRequest.model`` naming their lane; the tick
+    loop interleaves per-lane fused dispatches, and the ``num_slots``
+    lease budget caps TOTAL active slots across lanes (each lane's pool
+    holds ``num_slots`` rows so any lane may hold the whole budget —
+    one compiled batch shape per lane, dynamic leasing between them).
+    Admission meters ``(model, class)`` quota keys through the same
+    ``AdmissionPolicy``; see docs/serving.md, multi-model multiplexing.
+    """
+
+    def __init__(self, cfg: Optional[ArchConfig] = None, params=None, *,
+                 models: Optional[Dict[str, Tuple[ArchConfig, dict]]] = None,
+                 mode: QuantMode = FP,
                  num_slots: int = 8, max_seq: int = 64,
                  policy: Optional[bt.AdmissionPolicy] = None,
                  prefill_chunk: Optional[int] = None,
@@ -220,6 +434,9 @@ class Engine:
                  spec_k: int = 0,
                  draft: Optional[Tuple[ArchConfig, dict]] = None,
                  draft_layers: Optional[int] = None):
+        if (models is None) == (cfg is None):
+            raise ValueError("exactly one of Engine(cfg, params) or "
+                             "Engine(models={tag: (cfg, params)})")
         if temperature > 0.0 and rng is None:
             raise ValueError("temperature sampling needs an rng key: "
                              "Engine(..., temperature=t, rng=key)")
@@ -233,7 +450,24 @@ class Engine:
             raise ValueError("a draft model needs spec_k >= 1: "
                              "Engine(..., spec_k=k, draft=... or "
                              "draft_layers=...)")
-        if spec_k > 0:
+        self.multi = models is not None
+        if self.multi:
+            if not models:
+                raise ValueError("models must name at least one "
+                                 "(cfg, params) lane")
+            for tag in models:
+                if not isinstance(tag, str) or not tag:
+                    raise ValueError(
+                        f"model tag must be a non-empty string, got {tag!r}")
+            if spec_k > 0 and draft is not None:
+                raise ValueError(
+                    "a multiplexed engine cannot take one explicit "
+                    "draft=(cfg, params) for every lane (vocabs differ); "
+                    "use draft_layers=n — each supporting lane self-drafts")
+            lane_cfgs = {t: cp for t, cp in models.items()}
+        else:
+            lane_cfgs = {None: (cfg, params)}
+        if spec_k > 0 and not self.multi:
             if (draft is None) == (draft_layers is None):
                 raise ValueError(
                     "speculative decoding needs exactly one of "
@@ -244,10 +478,7 @@ class Engine:
                     f"family {cfg.family!r} (window={cfg.window}) does not "
                     f"support speculative decoding: the target's decode "
                     f"state must be rewindable positional KV")
-            if draft_layers is not None:
-                dcfg = R.draft_config(cfg, draft_layers)
-                dparams = R.draft_params(cfg, params, draft_layers)
-            else:
+            if draft is not None:
                 dcfg, dparams = draft
                 if not R.supports_speculation(dcfg):
                     raise ValueError(
@@ -259,16 +490,15 @@ class Engine:
                         f"draft vocab {dcfg.vocab} != target vocab "
                         f"{cfg.vocab}: proposals would not be token-"
                         f"compatible")
-            self.dcfg, self.dparams = dcfg, dparams
-        else:
-            self.dcfg = self.dparams = None
+        if spec_k > 0 and self.multi and draft_layers is None:
+            raise ValueError("multiplexed speculation needs draft_layers=n")
         self.spec_k = spec_k
-        self.cfg, self.params, self.mode = cfg, params, mode
+        self.mode = mode
         self.temperature, self.rng = temperature, rng
         # the pool size IS the compiled batch shape: bucket it so the
-        # engine's one decode step sits on the static ladder; the cache
-        # length rounds up to 16 so the slot dimension tiles cleanly
-        # (paged mode additionally rounds to a whole number of blocks)
+        # engine's one decode step per lane sits on the static ladder;
+        # the cache length rounds up to 16 so the slot dimension tiles
+        # cleanly (paged mode additionally rounds to whole blocks)
         if num_blocks is not None and block_size is None:
             raise ValueError("num_blocks needs block_size: paged mode is "
                              "enabled by Engine(..., block_size=...)")
@@ -276,19 +506,22 @@ class Engine:
             if block_size < 1 or block_size & (block_size - 1):
                 raise ValueError(
                     f"block_size must be a power of two, got {block_size}")
-            if not R.supports_paging(cfg):
-                raise ValueError(
-                    f"family {cfg.family!r} (window={cfg.window}) does not "
-                    f"support the paged KV cache")
+            for tag, (mcfg, _) in lane_cfgs.items():
+                if not R.supports_paging(mcfg):
+                    raise ValueError(
+                        f"family {mcfg.family!r} (window={mcfg.window}"
+                        f"{'' if tag is None else f', model {tag!r}'}) does "
+                        f"not support the paged KV cache")
         self.num_slots = ST.bucket_batch(num_slots)
         align = max(16, block_size) if block_size else 16
         self.max_seq = max_seq + (-max_seq) % align
         self.block_size = block_size
         if block_size:
             self.max_blocks = self.max_seq // block_size
-            # default pool: every slot can hold a full row privately, +1
-            # for the reserved trash block — byte-parity with contiguous
-            # rows; pass a smaller num_blocks for memory-bound admission
+            # default pool (PER LANE): every slot can hold a full row
+            # privately, +1 for the reserved trash block — byte-parity
+            # with contiguous rows; pass a smaller num_blocks for
+            # memory-bound admission
             self.num_blocks = (num_blocks if num_blocks is not None
                                else self.num_slots * self.max_blocks + 1)
             if self.num_blocks < 2:
@@ -303,175 +536,89 @@ class Engine:
                               if prefill_chunk else None)
         self.policy = policy or bt.AdmissionPolicy(
             lambda b: 0.0, max_batch=self.num_slots, max_wait_s=0.0)
-        self.step = ST.jit_slot_decode_step(
-            ST.make_slot_decode_step(cfg, mode=mode,
-                                     temperature=temperature))
-        self._chunk_steps: Dict[int, Callable] = {}
-        # encdec/vlm: the prime dispatch that writes a slot's cross-K/V
-        # row (second slot-resident static operand) at admission, run
-        # concurrently with other slots' decoding like chunked prefill
-        self._prime_step = (
-            ST.jit_prime_step(ST.make_prime_step(cfg, mode=mode))
-            if R.needs_prime(cfg) else None)
-        # speculative steps: the target's wide verify step replaces the
-        # fused 1-token step on every tick, the draft's propose step and
-        # its own chunked catch-up steps feed it (draft state is a plain
-        # contiguous cache — the draft never pages or shares blocks)
-        if spec_k > 0:
-            self._verify_step = ST.jit_verify_step(ST.make_verify_step(
-                cfg, mode=mode, k=spec_k, temperature=temperature))
-            self._propose_step = ST.jit_draft_propose_step(
-                ST.make_draft_propose_step(self.dcfg, mode=mode, k=spec_k))
-            self._draft_chunk_steps: Dict[int, Callable] = {}
-            # draft catch-up dispatch cap: per-tick gaps are <= 1 (a full
-            # accept), but admission/resume rebuilds feed whole prompts
-            self._draft_cap = self.prefill_chunk or 16
-        else:
-            self._verify_step = self._propose_step = None
-            self._draft_cap = 0
-
-    def _init_cache(self):
-        """The pooled device cache: contiguous slot rows, or (paged mode)
-        physical KV blocks behind an all-trash block table."""
-        if self.block_size:
-            return R.init_paged_cache(self.cfg, self.num_slots,
-                                      self.max_seq, self.block_size,
-                                      self.num_blocks)
-        return R.init_cache(self.cfg, self.num_slots, self.max_seq)
-
-    def _chunk_step(self, chunk: int) -> Callable:
-        """The compiled prefill step for one bucket size (lazy, cached —
-        at most one compilation per power-of-two bucket ever exists)."""
-        fn = self._chunk_steps.get(chunk)
-        if fn is None:
-            fn = ST.jit_prefill_chunk_step(ST.make_prefill_chunk_step(
-                self.cfg, mode=self.mode, chunk=chunk))
-            self._chunk_steps[chunk] = fn
-        return fn
-
-    def _fused(self, tokens, cache, index, active):
-        args = (self.params, jnp.asarray(tokens), cache,
-                jnp.asarray(index), jnp.asarray(active))
-        if self.temperature > 0.0:
-            return self.step(*args, self.rng)
-        return self.step(*args)
-
-    def _draft_chunk_step(self, chunk: int) -> Callable:
-        """The draft model's compiled prefill step for one bucket size —
-        how the engine teacher-forces committed tokens the draft cache
-        has not consumed yet (admission, exact resume, full accepts)."""
-        fn = self._draft_chunk_steps.get(chunk)
-        if fn is None:
-            fn = ST.jit_prefill_chunk_step(ST.make_prefill_chunk_step(
-                self.dcfg, mode=self.mode, chunk=chunk))
-            self._draft_chunk_steps[chunk] = fn
-        return fn
-
-    def _verify(self, tok_mat, cache, index, n_tok, active):
-        args = (self.params, jnp.asarray(tok_mat), cache,
-                jnp.asarray(index), jnp.asarray(n_tok),
-                jnp.asarray(active))
-        if self.temperature > 0.0:
-            return self._verify_step(*args, self.rng)
-        return self._verify_step(*args)
+        # draft catch-up dispatch cap: per-tick gaps are <= 1 (a full
+        # accept), but admission/resume rebuilds feed whole prompts
+        self._draft_cap = (self.prefill_chunk or 16) if spec_k > 0 else 0
+        # build the lanes: per-lane speculative resolution — a
+        # multiplexed lane whose family cannot draft serves
+        # non-speculatively ("where supported"), the single-model path
+        # keeps its hard error above
+        self.lanes: Dict[Optional[str], _Lane] = {}
+        for order, (tag, (mcfg, mparams)) in enumerate(lane_cfgs.items()):
+            lk = spec_k
+            dcfg = dparams = None
+            if spec_k > 0:
+                if self.multi and not R.supports_speculation(mcfg):
+                    lk = 0
+                elif draft_layers is not None:
+                    dcfg = R.draft_config(mcfg, draft_layers)
+                    dparams = R.draft_params(mcfg, mparams, draft_layers)
+                else:
+                    dcfg, dparams = draft
+            self.lanes[tag] = _Lane(self, tag, order, mcfg, mparams,
+                                    lk, dcfg, dparams)
+        # legacy aliases: the single-model engine's config/params (and
+        # draft pair) remain reachable where old code expects them
+        lane0 = next(iter(self.lanes.values()))
+        self.cfg, self.params = lane0.cfg, lane0.params
+        self.dcfg, self.dparams = lane0.dcfg, lane0.dparams
 
     def warmup(self) -> None:
-        """Trace + compile the slot step (and, when chunked prefill is
-        on, the largest chunk bucket) on a throwaway cache so a
-        wall-clock ``serve`` charges its first tick to serving, not to
-        compilation."""
+        """Trace + compile every lane's slot step (and, when chunked
+        prefill is on, every reachable chunk bucket) on throwaway caches
+        so a wall-clock ``serve`` charges its first tick to serving, not
+        to compilation."""
         with warnings.catch_warnings():
             warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
-            cache = self._init_cache()
-            if self._prime_step is not None:
-                cache = self._prime_step(
-                    self.params,
-                    jnp.zeros((1, R.source_len(self.cfg),
-                               self.cfg.d_model), jnp.bfloat16),
-                    cache, jnp.zeros((), jnp.int32),
-                    jnp.zeros((), jnp.int32))
             S = self.num_slots
-            if self.spec_k > 0:
-                # speculative serve never dispatches the 1-token fused
-                # step: warm what it DOES run — verify, propose, and the
-                # draft's catch-up chunk buckets
-                _, cache, _ = self._verify(
-                    jnp.zeros((S, self.spec_k + 1), jnp.int32), cache,
-                    jnp.zeros((S,), jnp.int32), jnp.zeros((S,), jnp.int32),
-                    jnp.zeros((S,), bool))
-                dcache = R.init_cache(self.dcfg, S, self.max_seq)
-                _, dcache, _ = self._propose_step(
-                    self.dparams, jnp.zeros((S, 1), jnp.int32), dcache,
-                    jnp.zeros((S,), jnp.int32), jnp.zeros((S,), bool))
-                c = 1
-                while c <= self._draft_cap:
-                    dcache = self._draft_chunk_step(c)(
-                        self.dparams, jnp.zeros((c,), jnp.int32), dcache,
-                        jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            for ln in self.lanes.values():
+                cache = ln._init_cache()
+                if ln._prime_step is not None:
+                    cache = ln._prime_step(
+                        ln.params,
+                        jnp.zeros((1, R.source_len(ln.cfg),
+                                   ln.cfg.d_model), jnp.bfloat16),
+                        cache, jnp.zeros((), jnp.int32),
                         jnp.zeros((), jnp.int32))
-                    c *= 2
-            else:
-                _, cache, _ = self._fused(
-                    jnp.zeros((S, 1), jnp.int32), cache,
-                    jnp.zeros((S,), jnp.int32),
-                    jnp.zeros((S,), bool))
-            if self.prefill_chunk:
-                # every reachable bucket: remainder chunks bucket to the
-                # smaller powers of two, and a cold compile mid-serve is
-                # exactly what this warmup exists to keep off the clock
-                c = 1
-                while c <= self.prefill_chunk:
-                    cache = self._chunk_step(c)(
-                        self.params, jnp.zeros((c,), jnp.int32), cache,
-                        jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
-                        jnp.zeros((), jnp.int32))
-                    c *= 2
-
-    # ------------------------------------------------------------------
-    # paged-mode admission helpers (host-side; see docs/serving.md)
-
-    def _prefix_keys(self, req: EngineRequest) -> Tuple:
-        """Exact prefix hash chain, one key per FULL prompt block:
-        ``key_j = (key_{j-1}, block_j_tokens)`` — nested tuples compared
-        by value, so equal keys mean equal token prefixes (no hash
-        collisions by construction).  Prime families seed the chain with
-        the request's source bytes: their self-KV at any position depends
-        on the cross-attended source, so two prefixes only share when
-        source AND tokens match."""
-        bs = self.block_size
-        key: Tuple = ()
-        if self._prime_step is not None:
-            src = np.asarray(req.source, np.float32)
-            key = (src.shape, src.tobytes())
-        keys = []
-        for j in range(len(req.prompt) // bs):
-            key = (key, tuple(req.prompt[j * bs:(j + 1) * bs]))
-            keys.append(key)
-        return tuple(keys)
-
-    def _usable_hits(self, req: EngineRequest, bpool: BlockPool,
-                     keys: Optional[Tuple] = None) -> int:
-        """Leading prompt blocks already resident (registered by an
-        earlier tenant).  Capped at ``(prompt-1) // bs``: the LAST prompt
-        token always rides the fused step, and its KV write must land in
-        a privately owned block, never a shared one."""
-        if keys is None:
-            keys = self._prefix_keys(req)
-        cap = (len(req.prompt) - 1) // self.block_size
-        hits = 0
-        for j in range(min(cap, len(keys))):
-            if bpool.lookup(keys[j]) is None:
-                break
-            hits += 1
-        return hits
-
-    def _block_cost(self, req: EngineRequest, bpool: BlockPool) -> int:
-        """Worst-case FRESH blocks this request claims if admitted now:
-        ceil((prompt + max_new) / bs) minus currently shareable prefix
-        blocks — what memory-aware admission prices against the pool."""
-        bs = self.block_size
-        need = -(-(len(req.prompt) + req.max_new_tokens) // bs)
-        return need - self._usable_hits(req, bpool)
+                if ln.spec_k > 0:
+                    # speculative serve never dispatches the 1-token
+                    # fused step: warm what it DOES run — verify,
+                    # propose, and the draft's catch-up chunk buckets
+                    _, cache, _ = ln._verify(
+                        jnp.zeros((S, ln.spec_k + 1), jnp.int32), cache,
+                        jnp.zeros((S,), jnp.int32),
+                        jnp.zeros((S,), jnp.int32),
+                        jnp.zeros((S,), bool))
+                    dcache = R.init_cache(ln.dcfg, S, self.max_seq)
+                    _, dcache, _ = ln._propose_step(
+                        ln.dparams, jnp.zeros((S, 1), jnp.int32), dcache,
+                        jnp.zeros((S,), jnp.int32), jnp.zeros((S,), bool))
+                    c = 1
+                    while c <= self._draft_cap:
+                        dcache = ln._draft_chunk_step(c)(
+                            ln.dparams, jnp.zeros((c,), jnp.int32), dcache,
+                            jnp.zeros((), jnp.int32),
+                            jnp.zeros((), jnp.int32),
+                            jnp.zeros((), jnp.int32))
+                        c *= 2
+                else:
+                    _, cache, _ = ln._fused(
+                        jnp.zeros((S, 1), jnp.int32), cache,
+                        jnp.zeros((S,), jnp.int32),
+                        jnp.zeros((S,), bool))
+                if self.prefill_chunk:
+                    # every reachable bucket: remainder chunks bucket to
+                    # the smaller powers of two, and a cold compile
+                    # mid-serve is exactly what this warmup exists to
+                    # keep off the clock
+                    c = 1
+                    while c <= self.prefill_chunk:
+                        cache = ln._chunk_step(c)(
+                            ln.params, jnp.zeros((c,), jnp.int32), cache,
+                            jnp.zeros((), jnp.int32),
+                            jnp.zeros((), jnp.int32),
+                            jnp.zeros((), jnp.int32))
+                        c *= 2
 
     def serve(self, requests: Sequence[EngineRequest], *,
               clock: str = "virtual",
@@ -513,10 +660,27 @@ class Engine:
         a slot still faulting after ``max_retries`` recovery attempts
         with the typed ``failed`` status — one poisoned slot never takes
         down the cohort.
+
+        On a multiplexed engine (``Engine(models={...})``) every
+        request's ``model`` tag must name an admitted lane; the tick
+        loop then interleaves one fused dispatch per lane with live
+        slots, ``num_slots`` caps TOTAL active slots across lanes
+        (dynamic leasing), and fault injection sees dense global slot
+        ids (``lane.order * num_slots + sid``) so one seeded plan
+        strikes across models deterministically.  All per-model state —
+        cache, block pool, draft state, table mirror — stays
+        lane-private (decode-contract rule 8).
         """
         if clock not in ("virtual", "wall"):
             raise ValueError(f"clock must be 'virtual' or 'wall': {clock!r}")
         for r in requests:
+            mtag = getattr(r, "model", None)
+            if mtag not in self.lanes:
+                raise ValueError(
+                    f"request {r.rid}: model {mtag!r} is not admitted on "
+                    f"this engine (lanes: "
+                    f"{[t for t in self.lanes]})")
+            lane_r = self.lanes[mtag]
             if r.max_new_tokens <= 0:
                 raise ValueError(
                     f"request {r.rid}: max_new_tokens must be positive "
@@ -533,18 +697,19 @@ class Engine:
                     raise RequestTooLong(
                         f"request {r.rid} needs {nb} KV blocks > "
                         f"{self.num_blocks - 1} usable in the pool")
-            if self._prime_step is not None:
-                _validate_source(self.cfg, r)
+            if lane_r._prime_step is not None:
+                _validate_source(lane_r.cfg, r)
         reqs = sorted(requests, key=lambda r: r.arrival_s)
         by_rid = {r.rid: r for r in reqs}
         S = self.num_slots
-        pool = SlotPool(S, max_seq=self.max_seq)
+        lanes = list(self.lanes.values())      # index == lane.order
+        for ln in lanes:
+            ln.reset()
         sched = SlotScheduler(self.policy)
-        cache = self._init_cache()
-        tokens = np.zeros((S, 1), np.int32)
-        index = np.zeros((S,), np.int32)
         results: List[RequestResult] = []
         occupancy: List[int] = []
+        occ_by_lane: Dict[str, List[int]] = (
+            {ln.tag: [] for ln in lanes} if self.multi else {})
         admissions_while_busy = 0
         dropped = 0
         ticks = 0
@@ -554,51 +719,40 @@ class Engine:
         # 1.0 without speculation and the mean accepted+bonus run length
         # with it — the honest denominator for speculative throughput
         emit_dispatches = 0
-        spec = self.spec_k > 0
-        # the draft model's own slot-pooled cache: contiguous rows (the
-        # draft never pages — proposals are scratch, only the target's
-        # committed KV is sharable), rebuilt per serve like the target's
-        draft_cache = R.init_cache(self.dcfg, S, self.max_seq) if spec \
-            else None
-        krow_np = np.zeros((S,), np.int32)
-        props = tok_mat = n_tok_np = None
         # overload robustness state: stashed progress of preempted
         # requests (rid -> _Stash) and the fault/recovery counters
         stash: Dict[int, _Stash] = {}
         preempted = failed = unfinished = 0
         dispatch_retries = nonfinite = torn_repaired = 0
         wd = StepWatchdog() if clock == "wall" else None
-        # paged-mode state: the host block pool + the host mirror of the
-        # device block-table leaf (pushed before any dispatch reads it)
+        # paged-mode state lives per lane (lane.bpool / lane.tables_np);
+        # the aggregate counters below span lanes
         paged = self.block_size is not None
-        bpool = BlockPool(self.num_blocks, self.block_size) if paged \
-            else None
-        tables_np = (np.zeros((S, self.max_blocks), np.int32)
-                     if paged else None)
-        tables_dirty = False
         shared_hits = 0
         skipped_tokens = 0
         blocks_demanded = 0
         peak_used = 0
         util_sum = 0.0
 
-        def _register_blocks(st) -> None:
+        def total_active() -> int:
+            return sum(ln.pool.active_count for ln in lanes)
+
+        def _register_blocks(ln, st) -> None:
             # publish each prompt block for prefix sharing the moment the
             # slot's frontier passes its end (its KV writes are already
             # issued in dispatch order, so any later gather sees them)
             while (st.registered < len(st.prompt_keys)
                    and st.pos >= (st.registered + 1) * self.block_size):
-                bpool.register(st.prompt_keys[st.registered],
-                               st.block_table[st.registered])
+                ln.bpool.register(st.prompt_keys[st.registered],
+                                  st.block_table[st.registered])
                 st.registered += 1
 
-        def _release_blocks(st) -> None:
-            nonlocal tables_dirty
+        def _release_blocks(ln, st) -> None:
             for bid in st.block_table:
-                bpool.release(bid)
+                ln.bpool.release(bid)
             st.block_table, st.prompt_keys, st.registered = None, (), 0
-            tables_np[st.sid, :] = 0          # retired row scatters to trash
-            tables_dirty = True
+            ln.tables_np[st.sid, :] = 0       # retired row scatters to trash
+            ln.tables_dirty = True
 
         def _eff_req(req: EngineRequest) -> EngineRequest:
             """The request as (re-)admission sees it: a preempted request
@@ -613,7 +767,7 @@ class Engine:
                 req, prompt=req.prompt + tuple(s.generated),
                 max_new_tokens=req.max_new_tokens - len(s.generated))
 
-        def _preempt(st) -> None:
+        def _preempt(ln, st) -> None:
             """Evict a live slot with exact-resume semantics: release its
             blocks, stash host progress, requeue the original request.
             No device state survives — resume rebuilds it all."""
@@ -625,13 +779,13 @@ class Engine:
                 first_token_s=st.first_token_s, admit_s=st.admit_s,
                 preemptions=st.preemptions + 1, retries=st.retries)
             if paged and st.block_table is not None:
-                _release_blocks(st)
-            pool.free(st.sid)
-            index[st.sid] = 0
-            tokens[st.sid, 0] = 0
+                _release_blocks(ln, st)
+            ln.pool.free(st.sid)
+            ln.index[st.sid] = 0
+            ln.tokens[st.sid, 0] = 0
             sched.push(by_rid[rid])
 
-        def _fail(st) -> None:
+        def _fail(ln, st) -> None:
             """Retire a slot fault recovery gave up on (typed status)."""
             nonlocal failed
             failed += 1
@@ -640,12 +794,13 @@ class Engine:
                 arrival_s=st.arrival_s, admit_s=st.admit_s,
                 first_token_s=st.first_token_s, finish_s=now,
                 slot=st.sid, status="failed", priority=st.priority,
-                preemptions=st.preemptions, deadline_s=st.deadline_s))
+                preemptions=st.preemptions, deadline_s=st.deadline_s,
+                model=ln.tag))
             if paged and st.block_table is not None:
-                _release_blocks(st)
-            pool.free(st.sid)
-            index[st.sid] = 0
-            tokens[st.sid, 0] = 0
+                _release_blocks(ln, st)
+            ln.pool.free(st.sid)
+            ln.index[st.sid] = 0
+            ln.tokens[st.sid, 0] = 0
 
         i, now = 0, 0.0
         t0 = time.perf_counter()
@@ -655,51 +810,81 @@ class Engine:
         with warnings.catch_warnings():
             # CPU backends warn that donated buffers were not usable
             warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
-            while i < len(reqs) or sched.pending or pool.active_count:
+            while i < len(reqs) or sched.pending or total_active():
                 # 1) ingest everything that has arrived by `now`
                 while i < len(reqs) and reqs[i].arrival_s <= now:
                     sched.push(reqs[i])
                     i += 1
                 next_arrival = reqs[i].arrival_s if i < len(reqs) else None
-                # 2) admit into free slots — mid-flight, no drain barrier
+                # 2) admit into free slot leases — mid-flight, no drain
+                #    barrier; `num_slots` caps the TOTAL across lanes
                 generating = any(s.active and not s.in_prefill
-                                 for s in pool.slots)
+                                 for ln in lanes for s in ln.pool.slots)
                 if preemption and sched.pending:
                     # resource pressure + a strictly-higher-class head:
                     # evict the lowest-class generating slot (latest
                     # deadline first) until the head fits or no victim of
                     # lower class remains — equal class never preempts,
-                    # so batch can't thrash batch
+                    # so batch can't thrash batch.  Slot pressure frees a
+                    # LEASE, so victims come from any lane; pure block
+                    # pressure only helps if the victim is in the head's
+                    # own lane (block pools are lane-private, rule 8).
                     head = sched.pending[0]
+                    lane_h = self.lanes[getattr(head, "model", None)]
                     hrank = bt.priority_rank(
                         getattr(head, "priority", bt.PRIORITY_CLASSES[0]))
-                    for _ in range(S):
-                        pressed = pool.free_count == 0 or (
-                            paged and self._block_cost(_eff_req(head), bpool)
-                            > bpool.free_blocks)
-                        if not pressed:
+                    for _ in range(S * len(lanes)):
+                        slot_pressed = total_active() >= S
+                        block_pressed = (
+                            paged and lane_h._block_cost(_eff_req(head))
+                            > lane_h.bpool.free_blocks)
+                        if not (slot_pressed or block_pressed):
                             break
-                        victims = [s for s in pool.active_slots()
+                        vlanes = lanes if slot_pressed else [lane_h]
+                        victims = [(ln, s) for ln in vlanes
+                                   for s in ln.pool.active_slots()
                                    if bt.priority_rank(s.priority) > hrank]
                         if not victims:
                             break
-                        _preempt(max(victims, key=lambda s: (
-                            bt.priority_rank(s.priority), s.deadline_s,
-                            s.sid)))
+                        ln_v, st_v = max(victims, key=lambda t: (
+                            bt.priority_rank(t[1].priority), t[1].deadline_s,
+                            t[0].order, t[1].sid))
+                        _preempt(ln_v, st_v)
                 quotas_on = bool(self.policy.class_quotas)
                 abc = None
-                if quotas_on:
+                if quotas_on or self.multi:
+                    # quota denominators: on a multiplexed engine each
+                    # active slot charges its (model, class) tuple AND the
+                    # bare model and class keys, so quotas configured at
+                    # any granularity meter correctly
                     abc = {}
-                    for s in pool.active_slots():
-                        abc[s.priority] = abc.get(s.priority, 0) + 1
+                    for ln in lanes:
+                        for s in ln.pool.active_slots():
+                            if self.multi:
+                                for k in ((ln.tag, s.priority), ln.tag,
+                                          s.priority):
+                                    abc[k] = abc.get(k, 0) + 1
+                            else:
+                                abc[s.priority] = abc.get(s.priority, 0) + 1
+                if paged:
+                    budget = ({ln.tag: ln.bpool.free_blocks for ln in lanes}
+                              if self.multi else lanes[0].bpool.free_blocks)
+                else:
+                    budget = None
                 cohort = sched.admit(
-                    now, pool.free_count, next_arrival,
-                    cost_fn=((lambda r: self._block_cost(_eff_req(r), bpool))
+                    now, S - total_active(), next_arrival,
+                    cost_fn=((lambda r: self.lanes[getattr(r, "model", None)]
+                              ._block_cost(_eff_req(r)))
                              if paged else None),
-                    budget=bpool.free_blocks if paged else None,
-                    active_by_class=abc)
+                    budget=budget,
+                    active_by_class=abc,
+                    key_fn=((lambda r: (getattr(r, "model", None),
+                                        getattr(r, "priority",
+                                                bt.PRIORITY_CLASSES[0])))
+                            if self.multi else None))
                 admitted = 0
                 for req in cohort:
+                    ln = self.lanes[getattr(req, "model", None)]
                     s_res = stash.get(req.rid)
                     if drop_missed_deadlines and now > req.deadline_s:
                         # expired while queued: retire WITHOUT taking a
@@ -716,16 +901,17 @@ class Engine:
                             finish_s=now, slot=-1, dropped=True,
                             status="dropped", priority=req.priority,
                             preemptions=s_res.preemptions if s_res else 0,
-                            deadline_s=req.deadline_s))
+                            deadline_s=req.deadline_s, model=ln.tag))
                         stash.pop(req.rid, None)
                         dropped += 1
                         continue
                     admitted += 1
                     eff = _eff_req(req)
-                    st = pool.alloc(req.rid, eff.prompt, eff.max_new_tokens,
-                                    now=now, arrival_s=req.arrival_s,
-                                    deadline_s=req.deadline_s,
-                                    priority=req.priority)
+                    st = ln.pool.alloc(req.rid, eff.prompt,
+                                       eff.max_new_tokens,
+                                       now=now, arrival_s=req.arrival_s,
+                                       deadline_s=req.deadline_s,
+                                       priority=req.priority)
                     if s_res is not None:
                         # exact resume: the stashed tokens ride the prompt
                         # (teacher-forced), the generated list starts from
@@ -739,43 +925,46 @@ class Engine:
                         st.preemptions = s_res.preemptions
                         st.retries = s_res.retries
                         del stash[req.rid]
-                    index[st.sid] = 0
+                    ln.index[st.sid] = 0
                     if paged:
                         # build the slot's block table: ref every shared
                         # prefix block (their prefill chunks are skipped
                         # entirely), alloc the rest privately — the
-                        # admission decision priced exactly this claim
-                        keys = self._prefix_keys(eff)
-                        hits = self._usable_hits(eff, bpool, keys)
+                        # admission decision priced exactly this claim.
+                        # Keys are model-fingerprinted (lane._prefix_keys)
+                        # and looked up in the lane's OWN pool, so a hit
+                        # can never cross models.
+                        keys = ln._prefix_keys(eff)
+                        hits = ln._usable_hits(eff, keys)
                         need = -(-(len(eff.prompt) + eff.max_new_tokens)
                                  // self.block_size)
                         table = []
                         for j in range(hits):
-                            bid = bpool.lookup(keys[j])
-                            bpool.ref(bid)
+                            bid = ln.bpool.lookup(keys[j])
+                            ln.bpool.ref(bid)
                             table.append(bid)
                         for _ in range(need - hits):
-                            table.append(bpool.alloc())
+                            table.append(ln.bpool.alloc())
                         st.block_table = table
                         st.prompt_keys = keys
                         st.registered = hits
                         st.pos = hits * self.block_size
-                        index[st.sid] = st.pos
-                        tables_np[st.sid, :] = 0
-                        tables_np[st.sid, :len(table)] = table
-                        tables_dirty = True
+                        ln.index[st.sid] = st.pos
+                        ln.tables_np[st.sid, :] = 0
+                        ln.tables_np[st.sid, :len(table)] = table
+                        ln.tables_dirty = True
                         shared_hits += hits
                         skipped_tokens += hits * self.block_size
                         blocks_demanded += need
-                    if self._prime_step is not None:
+                    if ln._prime_step is not None:
                         # prime dispatch: write this slot's cross-K/V row
                         # (and its xlen frontier) once, concurrently with
                         # other slots' decoding — like a prefill chunk,
                         # its cost lands on this tick's clock (resume
                         # re-primes: reconstructed, never trusted)
-                        src, n_valid = _padded_source(self.cfg, req)
-                        cache = self._prime_step(
-                            self.params, src, cache,
+                        src, n_valid = _padded_source(ln.cfg, req)
+                        ln.cache = ln._prime_step(
+                            ln.params, src, ln.cache,
                             jnp.asarray(st.sid, jnp.int32), n_valid)
                     left = len(st.prompt) - 1 - st.pos
                     if self.prefill_chunk and left > 0:
@@ -786,17 +975,20 @@ class Engine:
                         # output token)
                         st.chunk_left = left
                     else:
-                        tokens[st.sid, 0] = st.next_input()
+                        ln.tokens[st.sid, 0] = st.next_input()
                 if generating:
                     admissions_while_busy += admitted
-                if paged and tables_dirty:
-                    # push the host table mirror before any dispatch this
-                    # tick gathers or scatters through it
-                    cache = dict(cache,
-                                 block_tables=jnp.asarray(tables_np))
-                    tables_dirty = False
+                if paged:
+                    # push each dirty host table mirror before any
+                    # dispatch this tick gathers or scatters through it
+                    for ln in lanes:
+                        if ln.tables_dirty:
+                            ln.cache = dict(
+                                ln.cache,
+                                block_tables=jnp.asarray(ln.tables_np))
+                            ln.tables_dirty = False
                 # 3) idle: nothing active -> jump to the next event
-                if pool.active_count == 0:
+                if total_active() == 0:
                     if next_arrival is None and not sched.pending:
                         break
                     if next_arrival is None and not cohort:
@@ -823,43 +1015,47 @@ class Engine:
                 #    bucketed chunk of teacher-forced prompt state in a
                 #    single dispatch (admission-to-first-token shrinks
                 #    from prompt_len ticks to ceil(prompt_len/chunk))
-                for st in pool.active_slots():
-                    if st.chunk_left <= 0:
-                        continue
-                    n = min(st.chunk_left, self.prefill_chunk)
-                    c = ST.bucket_batch(n)
-                    buf = np.zeros((c,), np.int32)
-                    buf[:n] = st.prompt[st.pos:st.pos + n]
-                    cache = self._chunk_step(c)(
-                        self.params, jnp.asarray(buf), cache,
-                        jnp.asarray(st.sid, jnp.int32),
-                        jnp.asarray(st.pos, jnp.int32),
-                        jnp.asarray(n, jnp.int32))
-                    st.pos += n
-                    st.chunk_left -= n
-                    index[st.sid] = st.pos
-                    if paged:
-                        _register_blocks(st)
-                    if st.chunk_left == 0:
-                        tokens[st.sid, 0] = st.prompt[st.pos]
+                for ln in lanes:
+                    for st in ln.pool.active_slots():
+                        if st.chunk_left <= 0:
+                            continue
+                        n = min(st.chunk_left, self.prefill_chunk)
+                        c = ST.bucket_batch(n)
+                        buf = np.zeros((c,), np.int32)
+                        buf[:n] = st.prompt[st.pos:st.pos + n]
+                        ln.cache = ln._chunk_step(c)(
+                            ln.params, jnp.asarray(buf), ln.cache,
+                            jnp.asarray(st.sid, jnp.int32),
+                            jnp.asarray(st.pos, jnp.int32),
+                            jnp.asarray(n, jnp.int32))
+                        st.pos += n
+                        st.chunk_left -= n
+                        ln.index[st.sid] = st.pos
+                        if paged:
+                            _register_blocks(ln, st)
+                        if st.chunk_left == 0:
+                            ln.tokens[st.sid, 0] = st.prompt[st.pos]
                 # 4.5) speculative draft: catch each generating slot's
                 #      draft cache up to its committed frontier (teacher-
                 #      forced — this is also what rebuilds the draft after
                 #      admission, preemption/resume, or slot reuse), then
                 #      propose k greedy tokens per slot in ONE fused
-                #      dispatch.  Draft dispatches see no fault injection:
-                #      a wrong proposal can only be rejected.
-                if spec:
-                    krow_np = np.zeros((S,), np.int32)
-                    for st in pool.active_slots():
+                #      dispatch per speculating lane.  Draft dispatches
+                #      see no fault injection: a wrong proposal can only
+                #      be rejected.
+                for ln in lanes:
+                    if not ln.spec:
+                        continue
+                    ln.krow = np.zeros((S,), np.int32)
+                    for st in ln.pool.active_slots():
                         if st.chunk_left > 0 or st.pos < len(st.prompt) - 1:
                             continue
-                        k_row = min(self.spec_k,
+                        k_row = min(ln.spec_k,
                                     st.max_new - len(st.generated) - 1,
                                     self.max_seq - 1 - st.pos)
                         if k_row <= 0:
                             continue
-                        krow_np[st.sid] = k_row
+                        ln.krow[st.sid] = k_row
                         P = len(st.prompt)
                         while st.draft_pos < st.pos:
                             n = min(st.pos - st.draft_pos, self._draft_cap)
@@ -869,72 +1065,66 @@ class Engine:
                                 p = st.draft_pos + t
                                 buf[t] = (st.prompt[p] if p < P
                                           else st.generated[p - P])
-                            draft_cache = self._draft_chunk_step(c)(
-                                self.dparams, jnp.asarray(buf), draft_cache,
+                            ln.draft_cache = ln._draft_chunk_step(c)(
+                                ln.dparams, jnp.asarray(buf),
+                                ln.draft_cache,
                                 jnp.asarray(st.sid, jnp.int32),
                                 jnp.asarray(st.draft_pos, jnp.int32),
                                 jnp.asarray(n, jnp.int32))
                             st.draft_pos += n
-                    d_active = krow_np > 0
+                    d_active = ln.krow > 0
                     if d_active.any():
                         d_index = np.array(
-                            [s.draft_pos for s in pool.slots], np.int32)
-                        props, draft_cache, _ = self._propose_step(
-                            self.dparams, jnp.asarray(tokens), draft_cache,
+                            [s.draft_pos for s in ln.pool.slots], np.int32)
+                        props, ln.draft_cache, _ = ln._propose_step(
+                            ln.dparams, jnp.asarray(ln.tokens),
+                            ln.draft_cache,
                             jnp.asarray(d_index), jnp.asarray(d_active))
-                        props = np.asarray(props)
+                        ln.props = np.asarray(props)
                     else:
-                        props = np.zeros((S, self.spec_k), np.int32)
-                # 5) one fused slot-masked step: every ready slot (not
-                #    mid-chunk), one token — or, speculating, one wide
-                #    verify dispatch scoring 1..k+1 tokens per ready slot
-                #    (same single compiled shape whatever the mix)
-                active = np.array(
-                    [s.active and s.chunk_left == 0 for s in pool.slots],
-                    bool)
-                ready = [int(s) for s in np.where(active)[0]]
-                torn_sids: List[int] = []
-                if fault_plan is not None and paged and ready:
+                        ln.props = np.zeros((S, ln.spec_k), np.int32)
+                # 5) one fused slot-masked step PER LANE with live slots:
+                #    every ready slot (not mid-chunk), one token — or,
+                #    speculating, one wide verify dispatch scoring 1..k+1
+                #    tokens per ready slot (same single compiled shape per
+                #    lane whatever the mix).  Fault injection addresses
+                #    slots by dense GLOBAL id (lane.order * S + sid) so a
+                #    single-lane engine sees byte-identical sid streams.
+                all_ready: List[int] = []      # global ids, lane-major
+                for ln in lanes:
+                    ln.active_mask = np.array(
+                        [s.active and s.chunk_left == 0
+                         for s in ln.pool.slots], bool)
+                    ln.ready = [int(s) for s in np.where(ln.active_mask)[0]]
+                    ln.torn = []
+                    ln.nxt = None
+                    all_ready.extend(ln.order * S + sid for sid in ln.ready)
+                if fault_plan is not None and paged and all_ready:
                     # fault: tear the victim's DEVICE table row (zero ->
                     # all-trash) just before dispatch; the host mirror
                     # stays clean, which is exactly how the post-step
                     # audit knows what to rebuild
-                    torn_sids = fault_plan.torn_rows(ticks, ready)
-                    if torn_sids:
-                        torn = tables_np.copy()
-                        for sid in torn_sids:
-                            torn[sid, :] = 0
-                        cache = dict(cache,
-                                     block_tables=jnp.asarray(torn))
-                        tables_dirty = True   # clean mirror repushed next
-                nxt = None
-                if ready and spec:
-                    # per-row verify payload: the committed next input in
-                    # column 0, the row's usable proposals after it
-                    tok_mat = np.zeros((S, self.spec_k + 1), np.int32)
-                    tok_mat[:, 0] = tokens[:, 0]
-                    for sid in ready:
-                        kr = int(krow_np[sid])
-                        if kr > 0:
-                            tok_mat[sid, 1:1 + kr] = props[sid, :kr]
-                    n_tok_np = np.where(active, 1 + krow_np, 0) \
-                        .astype(np.int32)
-                if ready:
+                    for g in fault_plan.torn_rows(ticks, all_ready):
+                        lanes[g // S].torn.append(g % S)
+                    for ln in lanes:
+                        if ln.torn:
+                            torn = ln.tables_np.copy()
+                            for sid in ln.torn:
+                                torn[sid, :] = 0
+                            ln.cache = dict(ln.cache,
+                                            block_tables=jnp.asarray(torn))
+                            ln.tables_dirty = True  # clean mirror repushed
+                if all_ready:
+                    # resolve dispatch faults FIRST, over the union of
+                    # ready global ids (the injected fault strikes the
+                    # tick's dispatch sequence, whichever lane the culprit
+                    # sits in), then run each lane's step exactly once
                     attempt = 0
-                    while True:
+                    while all_ready:
                         culprit = (fault_plan.dispatch_fault(
-                            ticks, attempt, ready)
+                            ticks, attempt, all_ready)
                             if fault_plan is not None else None)
                         if culprit is None:
-                            if spec:
-                                nxt, cache, new_index = self._verify(
-                                    tok_mat, cache, index, n_tok_np,
-                                    active)
-                            else:
-                                nxt, cache, new_index = self._fused(
-                                    tokens, cache, index, active)
-                            nxt = np.asarray(nxt)
-                            index = np.array(new_index)  # writable host copy
                             break
                         # dispatch failed: charge the culprit's retry
                         # budget; past max_retries the request is retired
@@ -942,31 +1132,59 @@ class Engine:
                         # one poisoned slot never takes down the cohort
                         dispatch_retries += 1
                         attempt += 1
-                        st = pool.slots[culprit]
+                        ln = lanes[culprit // S]
+                        sid = culprit % S
+                        st = ln.pool.slots[sid]
                         st.retries += 1
                         if st.retries > max_retries:
-                            _fail(st)
-                            active[culprit] = False
-                            ready.remove(culprit)
-                            if not ready:
-                                break
-                elif clock == "wall":
-                    jax.block_until_ready(cache)   # charge chunk time here
-                if fault_plan is not None and nxt is not None:
+                            _fail(ln, st)
+                            ln.active_mask[sid] = False
+                            ln.ready.remove(sid)
+                            all_ready.remove(culprit)
+                for ln in lanes:
+                    if not ln.ready:
+                        continue
+                    if ln.spec:
+                        # per-row verify payload: the committed next input
+                        # in column 0, the row's usable proposals after it
+                        ln.tok_mat = np.zeros((S, ln.spec_k + 1), np.int32)
+                        ln.tok_mat[:, 0] = ln.tokens[:, 0]
+                        for sid in ln.ready:
+                            kr = int(ln.krow[sid])
+                            if kr > 0:
+                                ln.tok_mat[sid, 1:1 + kr] = \
+                                    ln.props[sid, :kr]
+                        ln.n_tok = np.where(ln.active_mask, 1 + ln.krow,
+                                            0).astype(np.int32)
+                        nxt, ln.cache, new_index = ln._verify(
+                            ln.tok_mat, ln.cache, ln.index, ln.n_tok,
+                            ln.active_mask)
+                    else:
+                        nxt, ln.cache, new_index = ln._fused(
+                            ln.tokens, ln.cache, ln.index, ln.active_mask)
+                    ln.nxt = np.asarray(nxt)
+                    ln.index = np.array(new_index)   # writable host copy
+                if not all_ready and clock == "wall":
+                    # charge chunk/prime time here
+                    jax.block_until_ready([ln.cache for ln in lanes])
+                if fault_plan is not None and all_ready:
                     # fault: poison chosen slots' logits — modelled at the
                     # guard's observable surface, the -1 sentinel the
                     # in-graph finite check emits for NaN/Inf rows
-                    poisoned = fault_plan.nonfinite_slots(ticks, ready)
-                    if poisoned:
-                        nxt = np.array(nxt)          # writable copy
-                        for sid in poisoned:
-                            nxt[sid] = -1
+                    for g in fault_plan.nonfinite_slots(ticks, all_ready):
+                        ln = lanes[g // S]
+                        ln.nxt = np.array(ln.nxt)    # writable copy
+                        ln.nxt[g % S] = -1
                 ticks += 1
-                occupancy.append(pool.active_count)
+                tact = total_active()
+                occupancy.append(tact)
+                for t in occ_by_lane:
+                    occ_by_lane[t].append(self.lanes[t].pool.active_count)
                 if paged:
-                    used = bpool.used_blocks
+                    used = sum(ln.bpool.used_blocks for ln in lanes)
                     peak_used = max(peak_used, used)
-                    util_sum += used / max(1, self.num_blocks - 1)
+                    util_sum += used / max(
+                        1, (self.num_blocks - 1) * len(lanes))
                 if clock == "wall":
                     # np.asarray(nxt) above already blocked on the step
                     prev = now
@@ -979,25 +1197,26 @@ class Engine:
                         warnings.warn(f"engine tick {ticks}: {msg}",
                                       RuntimeWarning)
                 else:
-                    dt = tick_s(pool.active_count) if callable(tick_s) \
-                        else tick_s
+                    dt = tick_s(tact) if callable(tick_s) else tick_s
                     now += dt
-                # 6) host bookkeeping: teacher-force prefill, collect
-                #    samples, retire finished slots for immediate reuse
-                for sid in torn_sids:
+                # 6) host bookkeeping, lane by lane: teacher-force
+                #    prefill, collect samples, retire finished slots for
+                #    immediate lease reuse (by any lane)
+                for ln in lanes:
+                  for sid in ln.torn:
                     # the torn row sent this tick's K/V write to trash
                     # and sampled through garbage gathers: the slot's
                     # device state can no longer be trusted, so the
                     # audit repairs the table (clean mirror repush) and
                     # rebuilds the tenant from scratch via preemption —
                     # its output stays bit-for-bit (exact resume)
-                    st = pool.slots[sid]
+                    st = ln.pool.slots[sid]
                     if not st.active:
                         continue          # already retired by _fail
                     torn_repaired += 1
-                    _preempt(st)
-                for st in pool.active_slots():
-                    if st.sid in torn_sids:
+                    _preempt(ln, st)
+                  for st in ln.pool.active_slots():
+                    if st.sid in ln.torn:
                         continue
                     if drop_missed_deadlines and now > st.deadline_s:
                         # deadline miss — possibly mid-prefill, before
@@ -1010,22 +1229,22 @@ class Engine:
                             slot=st.sid, dropped=True, status="dropped",
                             priority=st.priority,
                             preemptions=st.preemptions,
-                            deadline_s=st.deadline_s))
+                            deadline_s=st.deadline_s, model=ln.tag))
                         dropped += 1
                         if paged:
-                            _release_blocks(st)
-                        pool.free(st.sid)
+                            _release_blocks(ln, st)
+                        ln.pool.free(st.sid)
                         continue
                     if st.chunk_left > 0:          # mid-chunk: no sample
                         continue
-                    if not spec:
+                    if not ln.spec:
                         st.pos += 1
                         if paged:
-                            _register_blocks(st)
+                            _register_blocks(ln, st)
                         if st.pos < len(st.prompt):    # still prefilling
-                            tokens[st.sid, 0] = st.prompt[st.pos]
+                            ln.tokens[st.sid, 0] = st.prompt[st.pos]
                             continue
-                        tok = int(nxt[st.sid])
+                        tok = int(ln.nxt[st.sid])
                         if tok < 0:
                             # the in-graph finite guard's sentinel: this
                             # slot's logits went NaN/Inf.  The sample is
@@ -1037,9 +1256,9 @@ class Engine:
                             nonfinite += 1
                             st.retries += 1
                             if st.retries > max_retries:
-                                _fail(st)
+                                _fail(ln, st)
                             else:
-                                _preempt(st)
+                                _preempt(ln, st)
                             continue
                         st.generated.append(tok)
                         gen_tokens += 1
@@ -1054,20 +1273,20 @@ class Engine:
                                 finish_s=now,
                                 slot=st.sid, priority=st.priority,
                                 preemptions=st.preemptions,
-                                deadline_s=st.deadline_s))
+                                deadline_s=st.deadline_s, model=ln.tag))
                             if paged:
-                                _release_blocks(st)
-                            pool.free(st.sid)
+                                _release_blocks(ln, st)
+                            ln.pool.free(st.sid)
                         else:
-                            tokens[st.sid, 0] = tok
+                            ln.tokens[st.sid, 0] = tok
                         continue
                     # speculative commit: walk the verified row, keeping
                     # the accepted prefix + the bonus sample, then REWIND
                     # the device index to the committed frontier — the
                     # rejected tail's KV writes die by overwrite-before-
                     # read (decode-contract rule 7)
-                    nt = int(n_tok_np[st.sid])
-                    row = nxt[st.sid]
+                    nt = int(ln.n_tok[st.sid])
+                    row = ln.nxt[st.sid]
                     if np.any(row[:nt] < 0):
                         # any sentinel in the fed range poisons the whole
                         # round: in-flight proposals are uncommitted state,
@@ -1076,18 +1295,18 @@ class Engine:
                         nonfinite += 1
                         st.retries += 1
                         if st.retries > max_retries:
-                            _fail(st)
+                            _fail(ln, st)
                         else:
-                            _preempt(st)
+                            _preempt(ln, st)
                         continue
                     pos0 = st.pos
                     committed = 0
                     for j in range(nt):
                         st.pos += 1
                         if paged:
-                            _register_blocks(st)
+                            _register_blocks(ln, st)
                         if st.pos < len(st.prompt):    # still prefilling
-                            tokens[st.sid, 0] = st.prompt[st.pos]
+                            ln.tokens[st.sid, 0] = st.prompt[st.pos]
                             break
                         tok = int(row[j])
                         st.generated.append(tok)
@@ -1096,19 +1315,19 @@ class Engine:
                         if st.first_token_s < 0:
                             st.first_token_s = now
                         if st.done() or (j + 1 < nt
-                                         and tok != int(tok_mat[st.sid,
-                                                                j + 1])):
+                                         and tok != int(ln.tok_mat[st.sid,
+                                                                   j + 1])):
                             break
-                    index[st.sid] = st.pos    # the rewind past rejections
+                    ln.index[st.sid] = st.pos  # the rewind past rejections
                     if committed:
                         emit_dispatches += 1
-                        if krow_np[st.sid] > 0:
+                        if ln.krow[st.sid] > 0:
                             # the draft consumed [f, d_1..d_{k-1}]; the
                             # committed-valid prefix of that is 1 + the
                             # accepted count (capped at k-1): gap 0 after
                             # a partial accept, 1 after a full accept
                             st.draft_pos = pos0 + 1 + min(
-                                committed - 1, self.spec_k - 1)
+                                committed - 1, ln.spec_k - 1)
                     if st.done():
                         results.append(RequestResult(
                             rid=st.rid, tokens=list(st.generated),
@@ -1116,12 +1335,12 @@ class Engine:
                             first_token_s=st.first_token_s, finish_s=now,
                             slot=st.sid, priority=st.priority,
                             preemptions=st.preemptions,
-                            deadline_s=st.deadline_s))
+                            deadline_s=st.deadline_s, model=ln.tag))
                         if paged:
-                            _release_blocks(st)
-                        pool.free(st.sid)
+                            _release_blocks(ln, st)
+                        ln.pool.free(st.sid)
                     elif committed:
-                        tokens[st.sid, 0] = st.generated[-1]
+                        ln.tokens[st.sid, 0] = st.generated[-1]
                 if ticks > limit:
                     # the cap exists to bound a stuck run; hitting it is
                     # an overload outcome, not a crash — retire everything
@@ -1129,23 +1348,25 @@ class Engine:
                     # with the typed `unfinished` status and report it
                     warnings.warn(
                         f"engine hit the {limit}-tick cap with "
-                        f"{pool.active_count} active, "
+                        f"{total_active()} active, "
                         f"{len(sched.pending)} pending and "
                         f"{len(reqs) - i} unarrived requests; retiring "
                         "them as 'unfinished'", RuntimeWarning)
-                    for st in pool.active_slots():
-                        unfinished += 1
-                        results.append(RequestResult(
-                            rid=st.rid, tokens=list(st.generated or []),
-                            arrival_s=st.arrival_s, admit_s=st.admit_s,
-                            first_token_s=st.first_token_s, finish_s=now,
-                            slot=st.sid, status="unfinished",
-                            priority=st.priority,
-                            preemptions=st.preemptions,
-                            deadline_s=st.deadline_s))
-                        if paged:
-                            _release_blocks(st)
-                        pool.free(st.sid)
+                    for ln in lanes:
+                        for st in ln.pool.active_slots():
+                            unfinished += 1
+                            results.append(RequestResult(
+                                rid=st.rid, tokens=list(st.generated or []),
+                                arrival_s=st.arrival_s, admit_s=st.admit_s,
+                                first_token_s=st.first_token_s,
+                                finish_s=now,
+                                slot=st.sid, status="unfinished",
+                                priority=st.priority,
+                                preemptions=st.preemptions,
+                                deadline_s=st.deadline_s, model=ln.tag))
+                            if paged:
+                                _release_blocks(ln, st)
+                            ln.pool.free(st.sid)
                     for req in list(sched.pending) + reqs[i:]:
                         s_res = stash.pop(req.rid, None)
                         unfinished += 1
@@ -1159,7 +1380,8 @@ class Engine:
                             finish_s=now, slot=-1, status="unfinished",
                             priority=req.priority,
                             preemptions=s_res.preemptions if s_res else 0,
-                            deadline_s=req.deadline_s))
+                            deadline_s=req.deadline_s,
+                            model=getattr(req, "model", None)))
                     sched.pending.clear()
                     i = len(reqs)
                     break
@@ -1173,7 +1395,8 @@ class Engine:
         ttft = [r.ttft_s for r in results if r.emitted]
         dur = max(now, 1e-12)
         kv_bytes = int(sum(x.size * x.dtype.itemsize
-                           for x in jax.tree_util.tree_leaves(cache)))
+                           for ln in lanes
+                           for x in jax.tree_util.tree_leaves(ln.cache)))
         # per-SLO-class tails + goodput: only a completed request that
         # met its deadline counts toward the honest metric at scale
         by_class: Dict[str, List[RequestResult]] = {}
@@ -1188,6 +1411,27 @@ class Engine:
         good_tokens = sum(len(r.tokens) for r in good)
         lat_tok = [r.latency_s / len(r.tokens) for r in results
                    if r.status == "ok" and r.tokens]
+        # per-model aggregates (multiplexed engines only; empty dicts on a
+        # single-model engine keep its report byte-identical)
+        mdl_lat: Dict[str, float] = {}
+        mdl_ttft_mean: Dict[str, float] = {}
+        mdl_ttft_p99: Dict[str, float] = {}
+        mdl_goodput: Dict[str, float] = {}
+        if self.multi:
+            by_model: Dict[str, List[RequestResult]] = \
+                {ln.tag: [] for ln in lanes}
+            for r in results:
+                by_model[r.model].append(r)
+            for m, rs in by_model.items():
+                mdl_lat[m] = bt.p99(
+                    [r.latency_s for r in rs if r.status == "ok"])
+                ts = [r.ttft_s for r in rs if r.emitted]
+                mdl_ttft_mean[m] = float(np.mean(ts)) if ts else 0.0
+                mdl_ttft_p99[m] = bt.p99(ts)
+                mdl_goodput[m] = sum(
+                    len(r.tokens) for r in rs
+                    if r.status == "ok" and r.finish_s <= r.deadline_s
+                ) / dur
         return EngineReport(
             results=results, ticks=ticks, generated_tokens=gen_tokens,
             duration_s=now, wall_s=wall,
@@ -1220,8 +1464,8 @@ class Engine:
             nonfinite_samples=nonfinite,
             torn_rows_repaired=torn_repaired,
             stuck_ticks=wd.slow_steps if wd is not None else 0,
-            leaked_blocks=((self.num_blocks - 1) - bpool.free_blocks
-                           if paged else 0),
+            leaked_blocks=(sum((self.num_blocks - 1) - ln.bpool.free_blocks
+                               for ln in lanes) if paged else 0),
             class_p99_latency_s=cls_lat,
             class_mean_ttft_s={c: (float(np.mean(ts)) if ts else 0.0)
                                for c, ts in cls_ttft.items()},
@@ -1232,7 +1476,15 @@ class Engine:
             accepted_per_dispatch=(gen_tokens / emit_dispatches
                                    if emit_dispatches else 0.0),
             latency_per_token_s=(float(np.mean(lat_tok))
-                                 if lat_tok else 0.0))
+                                 if lat_tok else 0.0),
+            model_p99_latency_s=mdl_lat,
+            model_mean_ttft_s=mdl_ttft_mean,
+            model_p99_ttft_s=mdl_ttft_p99,
+            model_goodput_tokens_per_s=mdl_goodput,
+            model_mean_occupancy={
+                t: (sum(v) / (len(v) * S) if v else 0.0)
+                for t, v in occ_by_lane.items()},
+            model_occupancy={t: list(v) for t, v in occ_by_lane.items()})
 
 
 # ---------------------------------------------------------------------------
@@ -1341,6 +1593,8 @@ def synthetic_requests(n: int, *, rate_per_s: float, vocab: int,
                        = "interactive",
                        arrival_process: Optional[
                            Callable[[int, float, int], Sequence[float]]]
+                       = None,
+                       model: Union[None, str, Callable[[int], str]]
                        = None) -> List[EngineRequest]:
     """Deterministic pseudo-Poisson request trace with synthetic prompts
     (derived from the rid, so any two runs see identical streams).
@@ -1362,6 +1616,10 @@ def synthetic_requests(n: int, *, rate_per_s: float, vocab: int,
     replaces the pseudo-Poisson arrivals with a custom process — a
     callable ``(n, rate_per_s, seed) -> arrival times`` (sorted,
     seconds), e.g. the MMPP/bursty builders in ``benchmarks/traces.py``.
+
+    ``model`` tags every request with a multiplexed engine's lane tag (a
+    string) or a per-request one (a ``rid -> tag`` callable); the
+    default ``None`` leaves requests untagged for single-model engines.
     The defaults reproduce today's traces byte-identically."""
     if not 0 <= shared_prefix_len <= prompt_len:
         raise ValueError(
@@ -1378,6 +1636,7 @@ def synthetic_requests(n: int, *, rate_per_s: float, vocab: int,
         arr = [bt.Request(arrival_s=t, deadline_s=t, rid=rid)
                for rid, t in enumerate(times)]
     cls_of = priority if callable(priority) else (lambda rid: priority)
+    mdl_of = model if callable(model) else (lambda rid: model)
     reqs = []
     for a in arr:
         prompt = tuple(
@@ -1396,5 +1655,5 @@ def synthetic_requests(n: int, *, rate_per_s: float, vocab: int,
             arrival_s=a.arrival_s,
             deadline_s=(a.arrival_s + deadline_s
                         if deadline_s != float("inf") else float("inf")),
-            source=source, priority=cls_of(a.rid)))
+            source=source, priority=cls_of(a.rid), model=mdl_of(a.rid)))
     return reqs

@@ -41,27 +41,40 @@ class SlotScheduler:
 
     def admit(self, now: float, capacity: int,
               next_arrival: Optional[float] = None, *,
-              cost_fn=None, budget: Optional[int] = None,
-              active_by_class=None) -> List:
+              cost_fn=None, budget=None,
+              active_by_class=None, key_fn=None) -> List:
         """Requests to admit right now into ``capacity`` free slots
         (possibly none: the policy may prefer to wait for more work).
 
         ``cost_fn(req) -> int`` + ``budget`` enable memory-aware
         admission (the paged KV engine): each pending request's
         worst-case block claim is priced and the policy shrinks the
-        cohort until the summed claim fits what the pool has free.
+        cohort until the summed claim fits what the pool has free
+        (``budget`` may be a per-model mapping when ``key_fn`` yields
+        ``(model, class)`` tuples — see ``AdmissionPolicy.decide``).
 
-        ``active_by_class`` (class -> slots currently held) activates
-        per-class quota admission when the policy has ``class_quotas``;
-        quota-blocked requests are skipped, not barriers, so the policy
-        returns explicit ``picks`` indices instead of a prefix length."""
+        ``active_by_class`` (quota key -> slots currently held)
+        activates per-class quota admission when the policy has
+        ``class_quotas``; quota-blocked requests are skipped, not
+        barriers, so the policy returns explicit ``picks`` indices
+        instead of a prefix length.
+
+        ``key_fn(req)`` overrides how a pending request is classed —
+        the multiplexed engine passes ``lambda r: (r.model,
+        r.priority)`` so quotas meter ``(model, class)`` keys.  Setting
+        it forces the class-aware picks path even with no quotas
+        configured (which then reduces to the legacy prefix cohort);
+        leaving it ``None`` preserves the single-model path exactly."""
         if capacity <= 0 or not self.pending:
             return []
         costs = ([cost_fn(r) for r in self.pending]
                  if cost_fn is not None else None)
-        use_classes = bool(self.policy.class_quotas)
-        classes = ([getattr(r, "priority", bt.PRIORITY_CLASSES[0])
-                    for r in self.pending] if use_classes else None)
+        use_classes = bool(self.policy.class_quotas) or key_fn is not None
+        if key_fn is not None:
+            classes = [key_fn(r) for r in self.pending]
+        else:
+            classes = ([getattr(r, "priority", bt.PRIORITY_CLASSES[0])
+                        for r in self.pending] if use_classes else None)
         act = self.policy.decide(
             now, [r.deadline_s for r in self.pending], next_arrival,
             capacity=capacity, costs=costs, budget=budget,

@@ -26,8 +26,14 @@ class RequestTooLong(ValueError):
 
 @dataclasses.dataclass
 class SlotState:
-    """One slot's tenancy: the request it serves and its progress."""
+    """One slot's tenancy: the request it serves and its progress.
+
+    ``model`` is the slot's model-lane tag (None on a single-model
+    engine): stamped at pool construction, never per-request — a pool
+    belongs to exactly one lane, so a slot can never be re-tagged to
+    another model's cache rows (decode-contract rule 8)."""
     sid: int
+    model: Optional[str] = None
     rid: int = -1
     prompt: Tuple[int, ...] = ()
     max_new: int = 0
@@ -88,10 +94,13 @@ class SlotPool:
     admission layer cannot hand a slot to a request the device cache
     cannot hold."""
 
-    def __init__(self, num_slots: int, max_seq: Optional[int] = None):
+    def __init__(self, num_slots: int, max_seq: Optional[int] = None,
+                 model: Optional[str] = None):
         self.num_slots = num_slots
         self.max_seq = max_seq
-        self.slots = [SlotState(sid=i) for i in range(num_slots)]
+        self.model = model               # lane tag; None = single-model
+        self.slots = [SlotState(sid=i, model=model)
+                      for i in range(num_slots)]
         self._free = list(range(num_slots - 1, -1, -1))   # pop() -> slot 0 first
 
     @property
@@ -153,7 +162,13 @@ class BlockPool:
     is nonzero, and ``release`` drops the hash entry the moment the last
     ref goes away so a recycled block can never be found by lookup."""
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int,
+                 model: Optional[str] = None):
+        self.model = model               # lane tag; None = single-model.
+        # A BlockPool belongs to exactly one model lane: its free list,
+        # refcounts, and prefix-hash registry are all lane-private, so
+        # paged sharing can never cross models — no key collision or
+        # refcount bug could hand one model another model's block.
         if num_blocks < 2:
             raise ValueError(f"num_blocks must be >= 2 (block 0 is the "
                              f"reserved trash block), got {num_blocks}")

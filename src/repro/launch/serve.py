@@ -39,7 +39,20 @@ bursty, ``--preemption`` lets admission evict lower-class slots and
 resume them bit-for-bit exactly, and ``--fault-seed`` injects a
 deterministic fault plan (dispatch failures, non-finite logits, torn
 block-table rows) to exercise the recovery machinery; the report then
-adds per-class p99/ttft, goodput-under-SLO, and fault counters.  The fused multi-token decode
+adds per-class p99/ttft, goodput-under-SLO, and fault counters.
+
+Multi-model multiplexing (docs/serving.md, "Multi-model multiplexing"):
+``--models a,b`` serves several registry archs as lanes of ONE engine —
+each lane keeps its own compiled steps, KV cache, and (paged) block
+pool, while ``num_slots`` is a single lease budget the lanes share
+tick by tick; ``--model-quota TAG=N`` caps one lane's concurrent slots
+through the same (model, class) quota keys ``--batch-quota`` uses.
+The report adds per-model p99/ttft/goodput/occupancy lines.
+
+  python -m repro.launch.serve --models starcoder2-3b,qwen2-moe-a2.7b \
+      --reduced --model-quota starcoder2-3b=4 --rate 200
+
+The fused multi-token decode
 loop is still timed separately (``--decode-tokens``): it remains the
 right tool for fixed-length batch completion, while the engine serves
 the ragged live stream.
@@ -47,6 +60,7 @@ the ragged live stream.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 import time
 
@@ -130,9 +144,36 @@ def measure_decode_tps(cfg, params, mode, batch, *, s_max=128,
     return b, batch * num_tokens / dt, dt
 
 
+def _parse_model_quotas(pairs):
+    """``--model-quota TAG=N`` occurrences -> ``{tag: n}`` quota keys."""
+    quotas = {}
+    for p in pairs:
+        tag, _, n = p.partition("=")
+        if not tag or not n or not n.isdigit() or int(n) < 1:
+            raise ValueError(
+                f"--model-quota wants TAG=N with N >= 1, got {p!r}")
+        quotas[tag] = int(n)
+    return quotas
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="single-model serving: one registry arch")
+    ap.add_argument("--models", default=None, metavar="A,B",
+                    help="multi-model multiplexing: comma-separated "
+                         "registry arch names served as lanes of ONE "
+                         "engine (each arch name is its lane tag; "
+                         "mutually exclusive with --arch).  Every lane "
+                         "gets its own --n-requests at --rate; the "
+                         "service curve / Table 4 batch choice is "
+                         "measured on the FIRST lane")
+    ap.add_argument("--model-quota", action="append", default=[],
+                    metavar="TAG=N",
+                    help="engine: cap one lane at N concurrently leased "
+                         "slots (repeatable; composes with "
+                         "--batch-quota through the same (model, class) "
+                         "quota keys)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--quant", default="w8a16",
                     choices=["fp", "w8a16", "w8a8"])
@@ -207,17 +248,39 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    key = jax.random.PRNGKey(args.seed)
-    params = R.init(key, cfg)
+    if (args.models is None) == (args.arch is None):
+        print("[serve] need exactly one of --arch or --models")
+        return 1
+    tags = ([t.strip() for t in args.models.split(",") if t.strip()]
+            if args.models else [args.arch])
+    if len(set(tags)) != len(tags):
+        print(f"[serve] --models tags must be unique: {args.models}")
+        return 1
+    try:
+        model_quotas = _parse_model_quotas(args.model_quota)
+    except ValueError as e:
+        print(f"[serve] {e}")
+        return 1
+    if unknown := set(model_quotas) - set(tags):
+        print(f"[serve] --model-quota names unknown lanes: "
+              f"{sorted(unknown)} (lanes: {tags})")
+        return 1
     mode = {"fp": FP, "w8a16": W8A16, "w8a8": W8A8}[args.quant]
-    if mode.enabled:
-        fp_bytes = tree_weight_bytes(params)
-        params = quantize_tree(params, min_size=2048)
-        print(f"[quant] weights {fp_bytes / 1e6:.1f} MB -> "
-              f"{tree_weight_bytes(params) / 1e6:.1f} MB ({args.quant})")
+    lanes = {}
+    for i, tag in enumerate(tags):
+        lcfg = get_config(tag)
+        if args.reduced:
+            lcfg = lcfg.reduced()
+        lparams = R.init(jax.random.PRNGKey(args.seed + i), lcfg)
+        if mode.enabled:
+            fp_bytes = tree_weight_bytes(lparams)
+            lparams = quantize_tree(lparams, min_size=2048)
+            print(f"[quant] {tag} weights {fp_bytes / 1e6:.1f} MB -> "
+                  f"{tree_weight_bytes(lparams) / 1e6:.1f} MB "
+                  f"({args.quant})")
+        lanes[tag] = (lcfg, lparams)
+    # the Table 4 curve / batch choice is measured on the first lane
+    cfg, params = lanes[tags[0]]
 
     prefill = jax.jit(ST.make_prefill_step(cfg, mode=mode))
     model, curve = measure_service_curve(prefill, params, cfg,
@@ -268,9 +331,11 @@ def main(argv=None):
     # ---- the live continuous-batching engine -------------------------
     from repro import engine as E
     num_slots = ST.bucket_batch(max(batch, 1))
-    quotas = {"batch": args.batch_quota} if args.batch_quota else None
+    quotas = dict(model_quotas)
+    if args.batch_quota:
+        quotas["batch"] = args.batch_quota
     policy = bt.AdmissionPolicy(model.service_time, max_batch=num_slots,
-                                class_quotas=quotas)
+                                class_quotas=quotas or None)
     draft = None
     if args.draft:
         # cross-model draft: its own (small) checkpoint, same vocab —
@@ -282,18 +347,20 @@ def main(argv=None):
         if mode.enabled:
             dparams = quantize_tree(dparams, min_size=2048)
         draft = (dcfg, dparams)
+    eng_kw = dict(mode=mode, num_slots=num_slots,
+                  max_seq=args.prompt_len + args.gen_tokens,
+                  policy=policy,
+                  prefill_chunk=args.prefill_chunk or None,
+                  block_size=args.block_size or None,
+                  num_blocks=args.num_blocks or None,
+                  temperature=args.temperature,
+                  rng=(jax.random.PRNGKey(args.seed + 1)
+                       if args.temperature > 0 else None),
+                  spec_k=args.spec_k, draft=draft,
+                  draft_layers=args.draft_layers or None)
     try:
-        eng = E.Engine(cfg, params, mode=mode, num_slots=num_slots,
-                       max_seq=args.prompt_len + args.gen_tokens,
-                       policy=policy,
-                       prefill_chunk=args.prefill_chunk or None,
-                       block_size=args.block_size or None,
-                       num_blocks=args.num_blocks or None,
-                       temperature=args.temperature,
-                       rng=(jax.random.PRNGKey(args.seed + 1)
-                            if args.temperature > 0 else None),
-                       spec_k=args.spec_k, draft=draft,
-                       draft_layers=args.draft_layers or None)
+        eng = (E.Engine(models=lanes, **eng_kw) if args.models
+               else E.Engine(cfg, params, **eng_kw))
     except ValueError as e:
         print(f"[engine] config rejected: {e}")
         return 1
@@ -318,13 +385,24 @@ def main(argv=None):
     priority = ("interactive" if frac >= 1.0 else
                 (lambda rid: "interactive"
                  if (rid * 2654435761) % 1000 < frac * 1000 else "batch"))
-    reqs = E.synthetic_requests(
-        args.n_requests, rate_per_s=args.rate, vocab=cfg.vocab,
-        prompt_len=args.prompt_len, max_new_tokens=args.gen_tokens,
-        deadline_s=deadline, seed=args.seed,
-        shared_prefix_len=args.shared_prefix_len,
-        source_shape=R.source_shape(cfg),
-        priority=priority, arrival_process=arrival_process)
+    # one sub-trace per lane (each lane draws prompts in its OWN vocab
+    # and carries its lane tag; rids offset per lane so the merged
+    # trace keys uniquely), merged by arrival — the single-model path
+    # is the one-lane case of the same loop, byte-identical to before
+    reqs = []
+    for i, tag in enumerate(tags):
+        lcfg, _ = lanes[tag]
+        sub = E.synthetic_requests(
+            args.n_requests, rate_per_s=args.rate, vocab=lcfg.vocab,
+            prompt_len=args.prompt_len, max_new_tokens=args.gen_tokens,
+            deadline_s=deadline, seed=args.seed + i,
+            shared_prefix_len=args.shared_prefix_len,
+            source_shape=R.source_shape(lcfg),
+            priority=priority, arrival_process=arrival_process,
+            model=tag if args.models else None)
+        reqs.extend(dataclasses.replace(r, rid=r.rid + i * args.n_requests)
+                    for r in sub)
+    reqs.sort(key=lambda r: r.arrival_s)
     plan = (E.FaultPlan.random(args.fault_seed, n_faults=args.n_faults,
                                num_slots=num_slots)
             if args.fault_seed is not None else None)
@@ -377,6 +455,19 @@ def main(argv=None):
                   f"p99 {rep.class_p99_latency_s[cls]*1e3:8.2f} ms, "
                   f"ttft {rep.class_mean_ttft_s[cls]*1e3:.2f} ms mean / "
                   f"{rep.class_p99_ttft_s[cls]*1e3:.2f} ms p99")
+    if rep.model_p99_latency_s:
+        for tag in tags:
+            if tag not in rep.model_p99_latency_s:
+                continue
+            print(f"[engine]   model {tag}: "
+                  f"p99 {rep.model_p99_latency_s[tag]*1e3:8.2f} ms, "
+                  f"ttft {rep.model_mean_ttft_s[tag]*1e3:.2f} ms mean / "
+                  f"{rep.model_p99_ttft_s[tag]*1e3:.2f} ms p99, "
+                  f"goodput {rep.model_goodput_tokens_per_s[tag]:,.0f} "
+                  f"tok/s, occupancy "
+                  f"{rep.model_mean_occupancy[tag]:.1%} of the shared "
+                  f"lease"
+                  + (f" (quota {quotas[tag]})" if tag in quotas else ""))
     if rep.preempted or rep.dropped or rep.failed or rep.unfinished:
         print(f"[engine] retirement: {rep.preempted} preemptions "
               f"(exact resume), {rep.dropped} dropped, {rep.failed} "

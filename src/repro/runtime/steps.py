@@ -594,6 +594,67 @@ def jit_prime_step(step: Callable) -> Callable:
     return jax.jit(step, donate_argnums=(2,))
 
 
+# ---------------------------------------------------------------------------
+# per-model compiled step cache (the multiplexed engine's step registry)
+# ---------------------------------------------------------------------------
+#
+# A multiplexed engine holds one compiled step SET per admitted model, and
+# the differential test harness additionally builds dedicated single-model
+# engines over the very same configs.  Memoizing the jitted builders on
+# their full specialization key — (kind, cfg, mode, static shape args);
+# both ArchConfig and QuantMode are frozen dataclasses, hence hashable —
+# means each (model, shape) pair compiles exactly once per process however
+# many Engine instances reference it.  Params stay call arguments, so
+# sharing a compiled step between engines shares no model state.
+
+_STEP_CACHE: dict = {}
+
+
+def _cached(key, build):
+    fn = _STEP_CACHE.get(key)
+    if fn is None:
+        fn = _STEP_CACHE[key] = build()
+    return fn
+
+
+def cached_slot_decode_step(cfg: ArchConfig, *, mode: QuantMode = FP,
+                            temperature: float = 0.0) -> Callable:
+    """Memoized ``jit_slot_decode_step(make_slot_decode_step(...))``."""
+    return _cached(("slot_decode", cfg, mode, temperature),
+                   lambda: jit_slot_decode_step(make_slot_decode_step(
+                       cfg, mode=mode, temperature=temperature)))
+
+
+def cached_prefill_chunk_step(cfg: ArchConfig, *, mode: QuantMode = FP,
+                              chunk: int) -> Callable:
+    """Memoized ``jit_prefill_chunk_step(make_prefill_chunk_step(...))``."""
+    return _cached(("prefill_chunk", cfg, mode, chunk),
+                   lambda: jit_prefill_chunk_step(make_prefill_chunk_step(
+                       cfg, mode=mode, chunk=chunk)))
+
+
+def cached_prime_step(cfg: ArchConfig, *, mode: QuantMode = FP) -> Callable:
+    """Memoized ``jit_prime_step(make_prime_step(...))``."""
+    return _cached(("prime", cfg, mode),
+                   lambda: jit_prime_step(make_prime_step(cfg, mode=mode)))
+
+
+def cached_verify_step(cfg: ArchConfig, *, mode: QuantMode = FP,
+                       k: int, temperature: float = 0.0) -> Callable:
+    """Memoized ``jit_verify_step(make_verify_step(...))``."""
+    return _cached(("verify", cfg, mode, k, temperature),
+                   lambda: jit_verify_step(make_verify_step(
+                       cfg, mode=mode, k=k, temperature=temperature)))
+
+
+def cached_draft_propose_step(cfg: ArchConfig, *, mode: QuantMode = FP,
+                              k: int) -> Callable:
+    """Memoized ``jit_draft_propose_step(make_draft_propose_step(...))``."""
+    return _cached(("draft_propose", cfg, mode, k),
+                   lambda: jit_draft_propose_step(make_draft_propose_step(
+                       cfg, mode=mode, k=k)))
+
+
 def greedy_sample(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
 

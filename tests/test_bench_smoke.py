@@ -33,7 +33,12 @@ ROW_KEYS = {
                "unfinished",
                # speculative decoding: draft-and-verify accounting
                "spec_k", "draft_layers", "accepted_per_dispatch",
-               "latency_per_token_s"},
+               "latency_per_token_s",
+               # multi-model multiplexing: the row's lane label plus
+               # per-model tail/goodput/occupancy columns (empty dicts
+               # on single-model rows)
+               "model", "model_p99_s", "model_mean_ttft_s",
+               "model_goodput_tokens_per_s", "model_mean_occupancy"},
 }
 
 
@@ -61,6 +66,9 @@ def bench_doc(tmp_path_factory):
     # satellite: --smoke runs the speculative gate (full-depth self-draft
     # chaos arm + garbage draft + non-spec control, all bit-for-bit)
     assert "[spec] smoke:" in r.stdout
+    # satellite: --smoke runs the multi-model gate (two families on one
+    # engine under chaos, per-model parity + occupancy consolidation)
+    assert "[multiplex] smoke:" in r.stdout
     return json.loads(out.read_text())
 
 
@@ -146,6 +154,41 @@ def test_speculative_rows_beat_their_pair(bench_doc):
         assert pair, f"speculative row has no non-spec pair: {row['arch']}"
         if row["accepted_per_dispatch"] > 1.0:
             assert row["ticks"] < min(r["ticks"] for r in pair), row
+
+
+def test_multiplexed_rows_consolidate_occupancy(bench_doc):
+    """The multi-model trajectory rows: two ``+dedicated`` rows (one
+    engine per lane) and at least one ``+2model`` row (both lanes
+    multiplexed) at the SAME per-model offered rates.  The multiplexed
+    row must carry per-model columns for both lanes and beat either
+    dedicated row's occupancy — the consolidation the shared slot lease
+    exists for."""
+    eng = [r for r in bench_doc["rows"] if r["kind"] == "engine"]
+    ded = [r for r in eng if r["arch"].endswith("+dedicated")]
+    mux = [r for r in eng if r["arch"].endswith("+2model")]
+    assert mux, "no multiplexed engine row in the trajectory JSON"
+    assert {r["model"] for r in ded} == {"a", "b"}
+    for row in ded:
+        # dedicated single-model engines have no per-model breakdown
+        assert row["model_mean_occupancy"] == {}
+        assert row["model_p99_s"] == {}
+    for row in mux:
+        assert row["model"] == "a+b"
+        assert set(row["model_mean_occupancy"]) == {"a", "b"}
+        assert set(row["model_p99_s"]) == {"a", "b"}
+        assert all(v > 0 for v in row["model_p99_s"].values())
+        assert all(v > 0 for v in
+                   row["model_goodput_tokens_per_s"].values())
+        # per-lane occupancy fractions share the leased-slot
+        # denominator, so they sum to the row's combined occupancy
+        assert sum(row["model_mean_occupancy"].values()) == \
+            pytest.approx(row["mean_occupancy"])
+        assert row["mean_occupancy"] > max(r["mean_occupancy"]
+                                           for r in ded)
+    # ordinary single-model rows stay unlabelled
+    assert all(r["model"] is None for r in eng
+               if "+dedicated" not in r["arch"]
+               and "+2model" not in r["arch"])
 
 
 def test_engine_rows_cover_all_decode_families(bench_doc):
