@@ -161,6 +161,34 @@ def smoke(kernel_rows=None) -> int:
           f"engines (per-model occupancy "
           f"{ {t: round(v, 3) for t, v in mux['model_mean_occupancy'].items()} })")
 
+    # fleet gate: 2 replicas x 2 model lanes behind the replica router
+    # on a bursty trace with preemption — routed outputs bit-for-bit
+    # each lane's sequential reference, zero leaked blocks fleet-wide,
+    # both replicas loaded
+    rt = serving_bench.router_smoke()
+    print(f"[router] smoke: {rt['requests']} two-model requests across "
+          f"{rt['replicas']} replicas "
+          f"({rt['replica_requests']}, occupancy "
+          f"{rt['replica_occupancy']}), {rt['preempted']} preemptions, "
+          f"{rt['leaked_blocks']} leaked blocks; per-model "
+          f"sequential-reference parity OK; goodput "
+          f"{rt['goodput_tokens_per_s']:.0f} tok/s")
+
+    # tensor-parallel gate: sharded executor vs single-device engine,
+    # bit-for-bit on the same trace (tp=1 conformance always; the
+    # multi-device pair needs a forced host mesh and skips gracefully)
+    sh = serving_bench.sharded_smoke()
+    if "skipped" in sh:
+        print(f"[sharded] smoke: skipped ({sh['skipped']})")
+    elif sh["multi_device"]:
+        print(f"[sharded] smoke: tp={sh['tp']} across {sh['devices']} "
+              f"devices, {sh['requests']} requests bit-identical to the "
+              f"single-device engine; parity OK")
+    else:
+        print(f"[sharded] smoke: tp=1 conformance parity OK "
+              f"({sh['requests']} requests); multi-device pair skipped "
+              f"({sh['skipped_multi']})")
+
     print("\nsmoke OK: flops/bytes nonzero, scan trip count exact")
     return 0
 

@@ -123,6 +123,9 @@ def serving_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
     rows.extend(engine_rows(arch, quant=quant, rates=(800.0,), spec_k=3))
     rows.extend(engine_rows(arch, quant=quant, rates=(800.0,), spec_k=3,
                             draft_layers=1))
+    # the fleet row: the same trace behind the replica router — two
+    # engines, occupancy-projected placement, per-replica columns
+    rows.extend(router_rows(arch, quant=quant))
     return rows
 
 
@@ -197,13 +200,20 @@ def engine_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
 
 
 def _engine_row(cfg, rate, n_requests, rep, draft_layers: int = 0,
-                model=None):
+                model=None, replicas: int = 1, tp: int = 1,
+                replica_occupancy=None):
     """One BENCH engine row from an EngineReport (schema pinned by
     tests/test_bench_smoke.py).  ``model`` labels the row's lane story:
     a lane tag for a dedicated single-model engine in a multiplex
     comparison, a "+"-joined tag list for a multiplexed engine, None
-    for ordinary single-model rows."""
+    for ordinary single-model rows.  ``replicas``/``tp``/
+    ``replica_occupancy`` are the fleet columns: 1/1/{} everywhere
+    except the ``+router`` rows built by :func:`router_rows`."""
     return {
+        # fleet columns (scale-out rows only; the defaults mean "one
+        # engine, one device" — today's rows byte-identically)
+        "replicas": replicas, "tp": tp,
+        "replica_occupancy": dict(replica_occupancy or {}),
         "kind": "engine", "arch": cfg.name, "family": cfg.family,
         "model": model,
         # per-model columns (populated on multiplexed engines; empty
@@ -378,6 +388,219 @@ def multiplex_rows(*, quant: str = "w8a16", rate: float = 600.0,
     row["arch"] = pair[0][1].name + "+2model"
     rows.append(row)
     return rows
+
+
+def _router_row(cfg, rate, n_requests, rrep, *, replicas, tp,
+                draft_layers=0):
+    """One BENCH engine row for a routed fleet: fleet-level tails and
+    throughput from the RouterReport, capacity/accounting columns summed
+    or averaged across the per-replica EngineReports, and the fleet
+    columns (``replicas``/``tp``/``replica_occupancy``) filled in."""
+    import numpy as np
+
+    from repro.core import batching as bt
+
+    reps = list(rrep.replicas.values())
+    row = _engine_row(cfg, rate, n_requests, reps[0],
+                      draft_layers=draft_layers, replicas=replicas,
+                      tp=tp, replica_occupancy=rrep.replica_occupancy)
+    mean = lambda xs: float(np.mean(xs))
+    ttfts = [r.ttft_s for r in rrep.results if r.emitted]
+    row.update({
+        "p99_s": rrep.p99_latency_s,
+        "tokens_per_s": rrep.tokens_per_s,
+        "goodput_tokens_per_s": rrep.goodput_tokens_per_s,
+        "mean_ttft_s": rrep.mean_ttft_s,
+        "p99_ttft_s": bt.p99(ttfts),
+        "ticks": sum(r.ticks for r in reps),
+        "admissions_while_busy": sum(r.admissions_while_busy
+                                     for r in reps),
+        "mean_occupancy": mean([r.mean_occupancy for r in reps]),
+        "occupancy_curve": _downsample(
+            [x for r in reps for x in r.occupancy]),
+        "kv_hbm_bytes": sum(r.kv_hbm_bytes for r in reps),
+        "peak_blocks_used": max(r.peak_blocks_used for r in reps),
+        "mean_block_util": mean([r.mean_block_util for r in reps]),
+        "shared_block_hits": sum(r.shared_block_hits for r in reps),
+        "shared_hit_rate": mean([r.shared_hit_rate for r in reps]),
+        "prefill_tokens_skipped": sum(r.prefill_tokens_skipped
+                                      for r in reps),
+        "effective_concurrency": sum(r.effective_concurrency
+                                     for r in reps),
+        "slo_attainment": mean([r.slo_attainment for r in reps]),
+        "preempted": sum(r.preempted for r in reps),
+        "dropped": sum(r.dropped for r in reps),
+        "failed": sum(r.failed for r in reps),
+        "unfinished": sum(r.unfinished for r in reps),
+        "accepted_per_dispatch": mean([r.accepted_per_dispatch
+                                       for r in reps]),
+        "latency_per_token_s": mean([r.latency_per_token_s
+                                     for r in reps]),
+    })
+    # per-class tails: the fleet's honest (conservative) view is the
+    # worst replica's tail per class
+    for key in ("class_p99_latency_s", "class_mean_ttft_s",
+                "class_p99_ttft_s"):
+        merged = {}
+        for r in reps:
+            for cls, v in getattr(r, key).items():
+                merged[cls] = max(merged.get(cls, 0.0), v)
+        row[key] = merged
+    return row
+
+
+def router_rows(arch: str = "starcoder2-3b", *, quant: str = "w8a16",
+                rate: float = 800.0, n_requests: int = 32,
+                num_slots: int = 4, replicas: int = 2):
+    """The ``+router`` BENCH row: the engine trace served by a
+    :class:`repro.engine.ReplicaRouter` over ``replicas`` identically-
+    configured engines — same virtual-clock discipline as
+    ``engine_rows`` (tick cost measured on one warmed replica, then the
+    fleet replayed deterministically), with per-replica occupancy in
+    the fleet columns."""
+    import jax
+
+    from repro import engine as E
+    from repro.configs import get_config
+    from repro.core.qlinear import FP, W8A16, W8A8
+    from repro.core.quant import quantize_tree
+    from repro.models import registry as R
+
+    mode = {"fp": FP, "w8a16": W8A16, "w8a8": W8A8}[quant]
+    cfg = dataclasses.replace(get_config(arch).reduced(), kv_quant=True)
+    params = R.init(jax.random.PRNGKey(0), cfg)
+    if mode.enabled:
+        params = quantize_tree(params, min_size=2048)
+    engines = [E.Engine(cfg, params, mode=mode, num_slots=num_slots,
+                        max_seq=16, prefill_chunk=4, block_size=4)
+               for _ in range(replicas)]
+    warm_reqs = E.synthetic_requests(num_slots, rate_per_s=1e6,
+                                     vocab=cfg.vocab, prompt_len=3,
+                                     max_new_tokens=6)
+    engines[0].serve(warm_reqs, clock="wall")
+    warm = engines[0].serve(warm_reqs, clock="wall")
+    tick_s = warm.wall_s / max(warm.ticks, 1)
+    router = E.ReplicaRouter(engines)
+    reqs = E.synthetic_requests(n_requests, rate_per_s=rate,
+                                vocab=cfg.vocab, prompt_len=3,
+                                max_new_tokens=6)
+    rrep = router.serve(reqs, clock="virtual", tick_s=tick_s)
+    if rrep.refused:
+        raise AssertionError(f"router BENCH row refused {rrep.refused} "
+                             "requests on an uncapped fleet")
+    row = _router_row(cfg, rate, n_requests, rrep, replicas=replicas,
+                      tp=1)
+    row["arch"] = cfg.name + "+router"
+    return [row]
+
+
+def router_smoke() -> dict:
+    """The fleet gate (``benchmarks/run.py --smoke``): 2 replicas x 2
+    model lanes behind the replica router, a bursty two-model two-class
+    trace with preemption and tight per-lane block pools.  The
+    invariants:
+
+    - routed outputs are bit-for-bit each lane's own sequential
+      reference (placement is invisible in the tokens: replicas share
+      no device state — decode-contract rule 9);
+    - nothing is lost (one typed result per request) and every
+      replica's block pools drain clean (``leaked_blocks == 0``
+      summed over the fleet);
+    - both replicas actually took work (the projection spreads load
+      instead of degenerating to replica 0)."""
+    from benchmarks import traces as TR
+    from repro import engine as E
+
+    mode, pair = _multiplex_pair("w8a16")
+    cfgs = {t: c for t, c, _ in pair}
+    prms = {t: p for t, _, p in pair}
+    reqs = TR.two_class_trace(
+        160, rate_per_s=2000.0, vocab=0, seed=7,
+        interactive_deadline_s=1e9, batch_deadline_s=1e9,
+        prompt_len=(2, 8), max_new_tokens=(2, 6),
+        arrival=TR.mmpp_process(dwell_s=(0.05, 0.0125)),
+        models=[(t, cfgs[t].vocab) for t, _, _ in pair])
+    want = {}
+    for t in cfgs:
+        sub = [dataclasses.replace(r, model=None)
+               for r in reqs if r.model == t]
+        want[t] = E.reference_outputs(cfgs[t], prms[t], sub, max_seq=16)
+
+    engines = [E.Engine(models={t: (cfgs[t], prms[t]) for t in cfgs},
+                        mode=mode, num_slots=4, max_seq=16,
+                        prefill_chunk=4, block_size=4, num_blocks=13)
+               for _ in range(2)]
+    router = E.ReplicaRouter(engines)
+    rep = router.serve(reqs, clock="virtual", tick_s=1e-3,
+                       preemption=True)
+    if len(rep.results) != len(reqs):
+        raise AssertionError(
+            f"router smoke lost requests: {len(rep.results)}/{len(reqs)}")
+    if rep.refused:
+        raise AssertionError(f"router smoke refused {rep.refused} "
+                             "requests on an uncapped fleet")
+    if rep.leaked_blocks != 0:
+        raise AssertionError(f"router smoke leaked {rep.leaked_blocks} "
+                             "KV blocks across the fleet")
+    if min(rep.replica_requests.values()) <= 0:
+        raise AssertionError(
+            f"router smoke starved a replica: {rep.replica_requests}")
+    bad = [r.rid for r in rep.results
+           if r.status == "ok" and r.tokens != want[r.model][r.rid]]
+    if bad:
+        raise AssertionError(
+            f"routed outputs diverge from per-model references for rids "
+            f"{bad[:8]} — placement is not invisible in the tokens")
+    return {"requests": len(rep.results),
+            "replicas": len(engines),
+            "replica_requests": dict(rep.replica_requests),
+            "replica_occupancy": {n: round(v, 3) for n, v
+                                  in rep.replica_occupancy.items()},
+            "preempted": sum(r.preempted for r in rep.replicas.values()),
+            "leaked_blocks": rep.leaked_blocks,
+            "goodput_tokens_per_s": rep.goodput_tokens_per_s}
+
+
+def sharded_smoke() -> dict:
+    """The tensor-parallel gate (``benchmarks/run.py --smoke``): the
+    sharded executor must be bit-for-bit the single-device engine on
+    the same trace.  With one visible device the tp=1 conformance pair
+    still runs (same shard_map plumbing, 1-way mesh); the multi-device
+    pair needs a forced host mesh
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=4``, set before
+    jax starts) and reports itself skipped otherwise — the full
+    per-family 200-request gates live in tests/test_sharded.py."""
+    import jax
+
+    from repro import engine as E
+    from repro.configs import get_config
+    from repro.models import registry as R
+    from repro.runtime import steps as ST
+
+    if not ST.supports_sharded_serving():
+        return {"skipped": "no jax.experimental.shard_map in this jax"}
+    ndev = len(jax.devices())
+    tp = min(4, ndev)
+    cfg = dataclasses.replace(
+        get_config("starcoder2-3b").reduced(), kv_quant=True)
+    params = R.init(jax.random.PRNGKey(0), cfg)
+    reqs = E.synthetic_requests(24, rate_per_s=2000.0, vocab=cfg.vocab,
+                                prompt_len=4, max_new_tokens=5)
+    kw = dict(num_slots=4, max_seq=16, prefill_chunk=2, block_size=4)
+    r1 = E.Engine(cfg, params, **kw).serve(reqs, tick_s=1e-3)
+    r2 = E.Engine(cfg, params, backend=E.ShardedExecutor(tp=tp),
+                  **kw).serve(reqs, tick_s=1e-3)
+    if r1.outputs() != r2.outputs():
+        raise AssertionError(
+            f"sharded executor (tp={tp}) outputs diverge from the "
+            "single-device engine — slot-axis sharding lost bit parity")
+    return {"tp": tp, "devices": ndev,
+            "requests": len(r2.results),
+            "multi_device": tp > 1,
+            "skipped_multi": (None if tp > 1 else
+                              "1 visible device; force a mesh with "
+                              "XLA_FLAGS="
+                              "--xla_force_host_platform_device_count=4")}
 
 
 def multiplex_smoke() -> dict:

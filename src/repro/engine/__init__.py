@@ -14,8 +14,15 @@ Modules:
 - ``scheduler``: admission frontend over `core.batching.AdmissionPolicy`
                  (the same decision procedure the virtual-time simulator
                  uses — property-tested identical),
-- ``engine``:    the engine itself + the sequential reference decoder the
-                 parity tests compare against bit-for-bit.
+- ``dispatch``:  the dispatch core — the per-lane tick loop, slot/block
+                 accounting, stash/exact-resume and fault plumbing —
+                 plus the ``ExecutorBackend`` seam (single-device or
+                 tensor-parallel sharded executors),
+- ``engine``:    policy + reporting over a backend, plus the sequential
+                 reference decoder the parity tests compare against
+                 bit-for-bit,
+- ``router``:    the replica tier — N engines load-balanced by projected
+                 slot occupancy behind the same admission policy.
 
 ``Engine(block_size=...)`` switches the positional KV leaves to a paged
 layout: fixed-size physical blocks behind a per-slot block table
@@ -29,17 +36,21 @@ slot preemption with bit-for-bit exact resume, and a seeded
 deterministic fault-injection harness with bounded per-slot recovery —
 see "Overload & failure semantics" in ``docs/serving.md``.
 """
+from repro.engine.dispatch import (DispatchCore, ExecutorBackend,
+                                   ShardedExecutor, SingleDeviceExecutor)
 from repro.engine.engine import (Engine, EngineReport, EngineRequest,
                                  RequestResult, reference_outputs,
                                  synthetic_requests)
 from repro.engine.faults import FAULT_KINDS, Fault, FaultPlan
+from repro.engine.router import ReplicaRouter, RouterReport
 from repro.engine.scheduler import SlotScheduler
 from repro.engine.slots import (BlockPool, RequestTooLong, SlotPool,
                                 SlotState)
 
 __all__ = [
-    "BlockPool", "Engine", "EngineReport", "EngineRequest",
-    "FAULT_KINDS", "Fault", "FaultPlan",
-    "RequestResult", "RequestTooLong", "SlotPool", "SlotScheduler",
+    "BlockPool", "DispatchCore", "Engine", "EngineReport", "EngineRequest",
+    "ExecutorBackend", "FAULT_KINDS", "Fault", "FaultPlan",
+    "ReplicaRouter", "RequestResult", "RequestTooLong", "RouterReport",
+    "ShardedExecutor", "SingleDeviceExecutor", "SlotPool", "SlotScheduler",
     "SlotState", "reference_outputs", "synthetic_requests",
 ]

@@ -49,6 +49,17 @@ the paper's static-shape discipline):
   cache contents need no scrub because every read is masked at the
   slot's own frontier.
 
+Since the dispatch-core split (docs/architecture.md), this module is
+the POLICY + REPORTING layer: request validation, admission policy and
+lane configuration, and ``EngineReport`` assembly.  The tick loop,
+slot/block accounting, stash/exact-resume, and fault plumbing live in
+``engine.dispatch.DispatchCore``; compiled steps reach the core
+through an ``ExecutorBackend`` — the single-device step set by
+default, or ``ShardedExecutor(tp=...)`` to run the same steps
+tensor-parallel under ``shard_map`` (bit-identical, slot-axis
+sharding).  ``engine.router.ReplicaRouter`` scales this out across N
+engine replicas.
+
 ``reference_outputs`` is the sequential per-token loop (batch=1, same
 decode math) the engine must match bit-for-bit under greedy sampling.
 """
@@ -57,7 +68,8 @@ from __future__ import annotations
 import dataclasses
 import time
 import warnings
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple, Union)
 
 import jax
 import jax.numpy as jnp
@@ -66,74 +78,14 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import batching as bt
 from repro.core.qlinear import FP, QuantMode
+from repro.engine.dispatch import (DispatchCore, EngineRequest,
+                                   ExecutorBackend, RequestResult,
+                                   ShardedExecutor, SingleDeviceExecutor,
+                                   _Lane, _padded_source, _validate_source)
 from repro.engine.faults import FaultPlan
-from repro.engine.scheduler import SlotScheduler
-from repro.engine.slots import BlockPool, RequestTooLong, SlotPool
-from repro.runtime.watchdog import StepWatchdog
+from repro.engine.slots import RequestTooLong
 from repro.models import registry as R
 from repro.runtime import steps as ST
-
-
-@dataclasses.dataclass(frozen=True)
-class EngineRequest:
-    rid: int
-    prompt: Tuple[int, ...]
-    max_new_tokens: int
-    arrival_s: float = 0.0
-    deadline_s: float = float("inf")
-    # encdec/vlm: the request's source embeddings (src_len, d_model) —
-    # encoder frames / vision patches a prime dispatch turns into the
-    # slot's cross-K/V row at admission.  src_len may be shorter than the
-    # static source length; the pad is masked behind the row's xlen.
-    source: Optional[np.ndarray] = dataclasses.field(
-        default=None, compare=False, repr=False)
-    # SLO class (see core.batching.PRIORITY_CLASSES): admission orders
-    # and sheds cohorts class-first, per-class slot quotas cap how many
-    # slots a class may hold, and preemption only ever evicts a slot of
-    # strictly lower class than the request it makes room for
-    priority: str = "interactive"
-    # multi-model multiplexing: which admitted model lane serves this
-    # request (must name a tag of Engine(models={...}); None on a
-    # single-model engine).  Quotas then meter (model, class) keys —
-    # see docs/serving.md, multi-model multiplexing.
-    model: Optional[str] = None
-
-
-@dataclasses.dataclass
-class RequestResult:
-    rid: int
-    tokens: List[int]
-    arrival_s: float
-    admit_s: float
-    first_token_s: float
-    finish_s: float
-    slot: int
-    dropped: bool = False             # retired before completing (deadline)
-    # typed outcome: "ok" (completed), "dropped" (deadline miss, mirrors
-    # the bool), "failed" (retired by fault recovery after max_retries),
-    # "unfinished" (still in flight when the tick cap hit)
-    status: str = "ok"
-    priority: str = "interactive"
-    preemptions: int = 0              # times evicted + exactly resumed
-    deadline_s: float = float("inf")
-    model: Optional[str] = None       # serving model lane (None = single)
-
-    @property
-    def latency_s(self) -> float:
-        return self.finish_s - self.arrival_s
-
-    @property
-    def emitted(self) -> bool:
-        """True once the request produced at least one token; ``ttft_s``
-        is meaningless (the -1.0 sentinel) until then."""
-        return self.first_token_s >= 0
-
-    @property
-    def ttft_s(self) -> float:
-        """Admission-to-first-token: what chunked prefill shrinks.  Only
-        defined when ``emitted`` — a request retired mid-prefill still
-        carries the -1.0 sentinel, which aggregates must exclude."""
-        return self.first_token_s - self.admit_s
 
 
 @dataclasses.dataclass
@@ -174,6 +126,9 @@ class EngineReport:
     torn_rows_repaired: int = 0       # block-table rows audited + rebuilt
     stuck_ticks: int = 0              # wall-clock stragglers (watchdog)
     leaked_blocks: int = 0            # pool deficit at drain (must be 0)
+    # hot-swap (Engine.retire_model / serve(control=...)): requests whose
+    # lane was retired (or never admitted) before they could enter it
+    refused: int = 0
     # per-SLO-class tails + the honest metric at scale: goodput counts
     # only completed requests that met their deadline
     class_p99_latency_s: Dict[str, float] = dataclasses.field(
@@ -218,192 +173,6 @@ class EngineReport:
         return {r.rid: r.tokens for r in self.results if r.model == model}
 
 
-@dataclasses.dataclass
-class _Stash:
-    """A preempted request's host-side progress, held between eviction
-    and re-admission.  Device state is deliberately NOT kept: resume
-    reconstructs every cache byte by teacher-forcing ``prompt +
-    generated`` through the chunked-prefill path (decode is
-    deterministic and the sampling key schedule is position-based, so
-    the rebuilt run is bit-for-bit the never-preempted run) —
-    "preempted state is reconstructed, never trusted"."""
-    generated: List[int]
-    first_token_s: float
-    admit_s: float
-    preemptions: int
-    retries: int
-
-
-class _Lane:
-    """One admitted model on the engine: its compiled step set, its
-    device cache(s), and its model-scoped host accounting (SlotPool,
-    BlockPool, block-table mirror, dispatch buffers).
-
-    A single-model engine is exactly one lane with ``tag=None`` — every
-    legacy code path routes through it unchanged.  The multiplexed
-    engine holds one lane per entry of ``Engine(models={...})``; no
-    leaf of one lane's cache, block pool, or draft state is ever read
-    by another lane's dispatches (decode-contract rule 8: per-lane
-    pools make cross-model sharing structurally impossible, and the
-    prefix hash chain is additionally seeded with the lane tag).
-
-    Compiled steps come from the process-wide memo in
-    ``runtime.steps`` (``cached_*``), so a dedicated single-model
-    engine and a multiplexed lane over the same config share one
-    compilation — which is what keeps the differential test harness
-    cheap."""
-
-    def __init__(self, eng: "Engine", tag: Optional[str], order: int,
-                 cfg: ArchConfig, params, spec_k: int,
-                 dcfg: Optional[ArchConfig], dparams):
-        self.eng = eng
-        self.tag = tag
-        self.order = order                 # dense gid = order * S + sid
-        self.cfg, self.params = cfg, params
-        self.spec_k = spec_k               # 0 on lanes that can't draft
-        self.dcfg, self.dparams = dcfg, dparams
-        mode, temp = eng.mode, eng.temperature
-        self.step = ST.cached_slot_decode_step(cfg, mode=mode,
-                                               temperature=temp)
-        # encdec/vlm: the prime dispatch that writes a slot's cross-K/V
-        # row (second slot-resident static operand) at admission, run
-        # concurrently with other slots' decoding like chunked prefill
-        self._prime_step = (ST.cached_prime_step(cfg, mode=mode)
-                            if R.needs_prime(cfg) else None)
-        # speculative steps: the target's wide verify step replaces the
-        # fused 1-token step on every tick, the draft's propose step and
-        # its own chunked catch-up steps feed it (draft state is a plain
-        # contiguous cache — the draft never pages or shares blocks)
-        if spec_k > 0:
-            self._verify_step = ST.cached_verify_step(
-                cfg, mode=mode, k=spec_k, temperature=temp)
-            self._propose_step = ST.cached_draft_propose_step(
-                dcfg, mode=mode, k=spec_k)
-        else:
-            self._verify_step = self._propose_step = None
-        self.reset()
-
-    # -- per-serve runtime state ---------------------------------------
-
-    def reset(self) -> None:
-        """Fresh serving state: called at Engine construction and at the
-        top of every ``serve`` (a serve never trusts a previous serve's
-        device or host state)."""
-        eng = self.eng
-        S = eng.num_slots
-        self.pool = SlotPool(S, max_seq=eng.max_seq, model=self.tag)
-        self.cache = self._init_cache()
-        self.tokens = np.zeros((S, 1), np.int32)
-        self.index = np.zeros((S,), np.int32)
-        self.spec = self.spec_k > 0
-        self.draft_cache = (R.init_cache(self.dcfg, S, eng.max_seq)
-                            if self.spec else None)
-        self.krow = np.zeros((S,), np.int32)
-        self.props = self.tok_mat = self.n_tok = None
-        paged = eng.block_size is not None
-        self.bpool = (BlockPool(eng.num_blocks, eng.block_size,
-                                model=self.tag) if paged else None)
-        self.tables_np = (np.zeros((S, eng.max_blocks), np.int32)
-                          if paged else None)
-        self.tables_dirty = False
-        # per-tick dispatch scratch (rebuilt each tick by serve)
-        self.active_mask = np.zeros((S,), bool)
-        self.ready: List[int] = []
-        self.torn: List[int] = []
-        self.nxt = None
-
-    # -- compiled-step plumbing ----------------------------------------
-
-    def _init_cache(self):
-        """The pooled device cache: contiguous slot rows, or (paged mode)
-        physical KV blocks behind an all-trash block table."""
-        eng = self.eng
-        if eng.block_size:
-            return R.init_paged_cache(self.cfg, eng.num_slots,
-                                      eng.max_seq, eng.block_size,
-                                      eng.num_blocks)
-        return R.init_cache(self.cfg, eng.num_slots, eng.max_seq)
-
-    def _chunk_step(self, chunk: int) -> Callable:
-        """The compiled prefill step for one bucket size (memoized in
-        ``runtime.steps`` — at most one compilation per (config, bucket)
-        ever exists in the process)."""
-        return ST.cached_prefill_chunk_step(self.cfg, mode=self.eng.mode,
-                                            chunk=chunk)
-
-    def _draft_chunk_step(self, chunk: int) -> Callable:
-        """The draft model's compiled prefill step for one bucket size —
-        how the engine teacher-forces committed tokens the draft cache
-        has not consumed yet (admission, exact resume, full accepts)."""
-        return ST.cached_prefill_chunk_step(self.dcfg, mode=self.eng.mode,
-                                            chunk=chunk)
-
-    def _fused(self, tokens, cache, index, active):
-        args = (self.params, jnp.asarray(tokens), cache,
-                jnp.asarray(index), jnp.asarray(active))
-        if self.eng.temperature > 0.0:
-            return self.step(*args, self.eng.rng)
-        return self.step(*args)
-
-    def _verify(self, tok_mat, cache, index, n_tok, active):
-        args = (self.params, jnp.asarray(tok_mat), cache,
-                jnp.asarray(index), jnp.asarray(n_tok),
-                jnp.asarray(active))
-        if self.eng.temperature > 0.0:
-            return self._verify_step(*args, self.eng.rng)
-        return self._verify_step(*args)
-
-    # -- paged-mode admission helpers (host-side; docs/serving.md) -----
-
-    def _prefix_keys(self, req: EngineRequest) -> Tuple:
-        """Exact prefix hash chain, one key per FULL prompt block:
-        ``key_j = (key_{j-1}, block_j_tokens)`` — nested tuples compared
-        by value, so equal keys mean equal token prefixes (no hash
-        collisions by construction).  Prime families seed the chain with
-        the request's source bytes: their self-KV at any position depends
-        on the cross-attended source, so two prefixes only share when
-        source AND tokens match.  A tagged lane additionally seeds the
-        chain with its model tag — the explicit fingerprint behind the
-        no-cross-model-sharing rule (each lane's BlockPool is private
-        anyway, so this is defense in depth, not the only wall)."""
-        bs = self.eng.block_size
-        key: Tuple = ()
-        if self._prime_step is not None:
-            src = np.asarray(req.source, np.float32)
-            key = (src.shape, src.tobytes())
-        if self.tag is not None:
-            key = (("model", self.tag), key)
-        keys = []
-        for j in range(len(req.prompt) // bs):
-            key = (key, tuple(req.prompt[j * bs:(j + 1) * bs]))
-            keys.append(key)
-        return tuple(keys)
-
-    def _usable_hits(self, req: EngineRequest,
-                     keys: Optional[Tuple] = None) -> int:
-        """Leading prompt blocks already resident (registered by an
-        earlier tenant).  Capped at ``(prompt-1) // bs``: the LAST prompt
-        token always rides the fused step, and its KV write must land in
-        a privately owned block, never a shared one."""
-        if keys is None:
-            keys = self._prefix_keys(req)
-        cap = (len(req.prompt) - 1) // self.eng.block_size
-        hits = 0
-        for j in range(min(cap, len(keys))):
-            if self.bpool.lookup(keys[j]) is None:
-                break
-            hits += 1
-        return hits
-
-    def _block_cost(self, req: EngineRequest) -> int:
-        """Worst-case FRESH blocks this request claims if admitted now:
-        ceil((prompt + max_new) / bs) minus currently shareable prefix
-        blocks — what memory-aware admission prices against the pool."""
-        bs = self.eng.block_size
-        need = -(-(len(req.prompt) + req.max_new_tokens) // bs)
-        return need - self._usable_hits(req)
-
-
 class Engine:
     """Continuous-batching serving engine over a slot-based KV cache.
 
@@ -420,6 +189,12 @@ class Engine:
     one compiled batch shape per lane, dynamic leasing between them).
     Admission meters ``(model, class)`` quota keys through the same
     ``AdmissionPolicy``; see docs/serving.md, multi-model multiplexing.
+
+    ``backend`` selects the executor the dispatch core runs compiled
+    steps through: the default :class:`SingleDeviceExecutor`, or
+    :class:`ShardedExecutor` for tensor-parallel slot-axis sharding
+    (bit-identical outputs; docs/serving.md, "Scaling out").  ``name``
+    labels this engine in straggler warnings and router rollups.
     """
 
     def __init__(self, cfg: Optional[ArchConfig] = None, params=None, *,
@@ -433,7 +208,9 @@ class Engine:
                  temperature: float = 0.0, rng=None,
                  spec_k: int = 0,
                  draft: Optional[Tuple[ArchConfig, dict]] = None,
-                 draft_layers: Optional[int] = None):
+                 draft_layers: Optional[int] = None,
+                 backend: Optional[ExecutorBackend] = None,
+                 name: Optional[str] = None):
         if (models is None) == (cfg is None):
             raise ValueError("exactly one of Engine(cfg, params) or "
                              "Engine(models={tag: (cfg, params)})")
@@ -495,6 +272,7 @@ class Engine:
         self.spec_k = spec_k
         self.mode = mode
         self.temperature, self.rng = temperature, rng
+        self.name = name
         # the pool size IS the compiled batch shape: bucket it so the
         # engine's one decode step per lane sits on the static ladder;
         # the cache length rounds up to 16 so the slot dimension tiles
@@ -536,9 +314,17 @@ class Engine:
                               if prefill_chunk else None)
         self.policy = policy or bt.AdmissionPolicy(
             lambda b: 0.0, max_batch=self.num_slots, max_wait_s=0.0)
+        # the executor seam: every compiled step a lane holds comes from
+        # this backend — swap it for ShardedExecutor(tp=...) and the
+        # same engine serves tensor-parallel, bit-identically
+        self.backend = backend if backend is not None \
+            else SingleDeviceExecutor()
+        self.backend.validate(self)
         # draft catch-up dispatch cap: per-tick gaps are <= 1 (a full
         # accept), but admission/resume rebuilds feed whole prompts
         self._draft_cap = (self.prefill_chunk or 16) if spec_k > 0 else 0
+        self._draft_layers = draft_layers
+        self._epoch = 0                  # bumps on every hot-swap admit
         # build the lanes: per-lane speculative resolution — a
         # multiplexed lane whose family cannot draft serves
         # non-speculatively ("where supported"), the single-model path
@@ -562,6 +348,52 @@ class Engine:
         lane0 = next(iter(self.lanes.values()))
         self.cfg, self.params = lane0.cfg, lane0.params
         self.dcfg, self.dparams = lane0.dcfg, lane0.dparams
+
+    # -- hot-swap: admit / retire a lane on a live engine ---------------
+
+    def admit_model(self, tag: str, cfg: ArchConfig, params) -> None:
+        """Admit a new model lane.  Legal mid-serve (through
+        ``serve(control=...)``): the lane appends to the lane list with
+        ``order = len(lanes)`` so fault gids and dispatch interleaving
+        of existing lanes are untouched, and its fresh pools start
+        empty — no other lane drains, stalls, or recompiles."""
+        if not self.multi:
+            raise ValueError("hot-swap needs a multiplexed engine: "
+                             "Engine(models={...})")
+        if not isinstance(tag, str) or not tag:
+            raise ValueError(f"model tag must be a non-empty string, "
+                             f"got {tag!r}")
+        if tag in self.lanes:
+            raise ValueError(f"model {tag!r} is already admitted")
+        if self.block_size is not None and not R.supports_paging(cfg):
+            raise ValueError(
+                f"family {cfg.family!r} (window={cfg.window}, model "
+                f"{tag!r}) does not support the paged KV cache")
+        lk = self.spec_k
+        dcfg = dparams = None
+        if lk > 0:
+            if not R.supports_speculation(cfg):
+                lk = 0
+            else:
+                dcfg = R.draft_config(cfg, self._draft_layers)
+                dparams = R.draft_params(cfg, params, self._draft_layers)
+        lane = _Lane(self, tag, len(self.lanes), cfg, params,
+                     lk, dcfg, dparams)
+        self._epoch += 1
+        lane.epoch = self._epoch
+        self.lanes[tag] = lane
+
+    def retire_model(self, tag: str) -> None:
+        """Mark a lane retiring: its in-flight slots finish normally
+        (their outputs stay bitwise what they would have been) but the
+        lane-epoch check in admission refuses every NEW request for it
+        with the typed ``refused`` status.  The drained lane is removed
+        when the serve ends."""
+        if tag not in self.lanes:
+            raise ValueError(
+                f"model {tag!r} is not admitted on this engine "
+                f"(lanes: {[t for t in self.lanes]})")
+        self.lanes[tag].retiring = True
 
     def warmup(self) -> None:
         """Trace + compile every lane's slot step (and, when chunked
@@ -622,21 +454,28 @@ class Engine:
 
     def serve(self, requests: Sequence[EngineRequest], *,
               clock: str = "virtual",
-              tick_s: Union[float, Callable[[int], float]] = 1e-3,
+              tick_s: Union[float, Mapping,
+                            Callable[[int], float]] = 1e-3,
               max_ticks: Optional[int] = None,
               drop_missed_deadlines: bool = False,
               preemption: bool = False,
               fault_plan: Optional[FaultPlan] = None,
-              max_retries: int = 3) -> EngineReport:
+              max_retries: int = 3,
+              control: Sequence[Tuple[float, Callable]] = ()
+              ) -> EngineReport:
         """Serve a whole request trace; return per-request outputs and
         achieved latency/throughput/occupancy metrics.
 
         ``clock="virtual"``: time advances ``tick_s`` per tick (or
         ``tick_s(active_count)`` when callable) — fully deterministic,
-        used by tests and the offline benchmark.  ``clock="wall"``: time
-        is the measured host clock — the live mode, where arrivals
-        interleave with real step latency and a rolling-median watchdog
-        flags stuck ticks (``EngineReport.stuck_ticks``).
+        used by tests and the offline benchmark.  A *Mapping* ``tick_s``
+        ({lane tag: seconds}) prices each tick as the SUM of the
+        dispatched lanes' per-lane service times, so a multiplexed tick
+        that dispatches a heavy lane costs honestly more than one that
+        only advances a light lane.  ``clock="wall"``: time is the
+        measured host clock — the live mode, where arrivals interleave
+        with real step latency and a rolling-median watchdog flags
+        stuck ticks (``EngineReport.stuck_ticks``).
 
         ``drop_missed_deadlines=True`` retires a slot the tick its
         deadline passes (possibly mid-prefill, before any token): its
@@ -661,6 +500,16 @@ class Engine:
         with the typed ``failed`` status — one poisoned slot never takes
         down the cohort.
 
+        ``control`` schedules hot-swap operations on the live serve: a
+        sequence of ``(time_s, fn)`` pairs, each ``fn(engine)`` run at
+        the first tick boundary past its time — typically closures over
+        :meth:`admit_model` / :meth:`retire_model`.  Requests whose
+        ``model`` tag is unknown at validation time are allowed through
+        when a control schedule is present (a control op may admit the
+        lane before they arrive); a request whose lane is retiring or
+        still unknown when admission reaches it is refused with the
+        typed ``refused`` status.
+
         On a multiplexed engine (``Engine(models={...})``) every
         request's ``model`` tag must name an admitted lane; the tick
         loop then interleaves one fused dispatch per lane with live
@@ -673,14 +522,28 @@ class Engine:
         """
         if clock not in ("virtual", "wall"):
             raise ValueError(f"clock must be 'virtual' or 'wall': {clock!r}")
+        if isinstance(tick_s, Mapping):
+            if clock != "virtual":
+                raise ValueError("per-lane tick_s mapping needs the "
+                                 "virtual clock")
+            missing = [t for t in self.lanes if t not in tick_s]
+            if missing:
+                raise ValueError(
+                    f"per-lane tick_s must price every lane; missing "
+                    f"{missing} (keys: {sorted(tick_s, key=repr)})")
+        for t_ctl, fn_ctl in control:
+            if not callable(fn_ctl):
+                raise ValueError(
+                    f"control entries must be (time_s, callable), got "
+                    f"({t_ctl!r}, {fn_ctl!r})")
         for r in requests:
             mtag = getattr(r, "model", None)
-            if mtag not in self.lanes:
+            lane_r = self.lanes.get(mtag)
+            if lane_r is None and not control:
                 raise ValueError(
                     f"request {r.rid}: model {mtag!r} is not admitted on "
                     f"this engine (lanes: "
                     f"{[t for t in self.lanes]})")
-            lane_r = self.lanes[mtag]
             if r.max_new_tokens <= 0:
                 raise ValueError(
                     f"request {r.rid}: max_new_tokens must be positive "
@@ -697,697 +560,30 @@ class Engine:
                     raise RequestTooLong(
                         f"request {r.rid} needs {nb} KV blocks > "
                         f"{self.num_blocks - 1} usable in the pool")
-            if lane_r._prime_step is not None:
+            if lane_r is not None and lane_r._prime_step is not None:
                 _validate_source(lane_r.cfg, r)
         reqs = sorted(requests, key=lambda r: r.arrival_s)
-        by_rid = {r.rid: r for r in reqs}
         S = self.num_slots
-        lanes = list(self.lanes.values())      # index == lane.order
-        for ln in lanes:
-            ln.reset()
-        sched = SlotScheduler(self.policy)
-        results: List[RequestResult] = []
-        occupancy: List[int] = []
-        occ_by_lane: Dict[str, List[int]] = (
-            {ln.tag: [] for ln in lanes} if self.multi else {})
-        admissions_while_busy = 0
-        dropped = 0
-        ticks = 0
-        gen_tokens = 0
-        # a row-tick that commits >= 1 token is one "emitting dispatch":
-        # accepted_per_dispatch = gen_tokens / emit_dispatches is exactly
-        # 1.0 without speculation and the mean accepted+bonus run length
-        # with it — the honest denominator for speculative throughput
-        emit_dispatches = 0
-        # overload robustness state: stashed progress of preempted
-        # requests (rid -> _Stash) and the fault/recovery counters
-        stash: Dict[int, _Stash] = {}
-        preempted = failed = unfinished = 0
-        dispatch_retries = nonfinite = torn_repaired = 0
-        wd = StepWatchdog() if clock == "wall" else None
-        # paged-mode state lives per lane (lane.bpool / lane.tables_np);
-        # the aggregate counters below span lanes
-        paged = self.block_size is not None
-        shared_hits = 0
-        skipped_tokens = 0
-        blocks_demanded = 0
-        peak_used = 0
-        util_sum = 0.0
 
-        def total_active() -> int:
-            return sum(ln.pool.active_count for ln in lanes)
+        core = DispatchCore(self)
+        out = core.run(reqs, clock=clock, tick_s=tick_s,
+                       max_ticks=max_ticks,
+                       drop_missed_deadlines=drop_missed_deadlines,
+                       preemption=preemption, fault_plan=fault_plan,
+                       max_retries=max_retries, control=control)
+        lanes = out.lanes
+        # hot-swap epilogue: a retired lane that has drained leaves the
+        # engine now (its device cache is released with the lane); the
+        # report below still covers it via the serve's lane snapshot
+        for tag in [t for t, ln in self.lanes.items()
+                    if ln.retiring and ln.pool.active_count == 0]:
+            del self.lanes[tag]
 
-        def _register_blocks(ln, st) -> None:
-            # publish each prompt block for prefix sharing the moment the
-            # slot's frontier passes its end (its KV writes are already
-            # issued in dispatch order, so any later gather sees them)
-            while (st.registered < len(st.prompt_keys)
-                   and st.pos >= (st.registered + 1) * self.block_size):
-                ln.bpool.register(st.prompt_keys[st.registered],
-                                  st.block_table[st.registered])
-                st.registered += 1
-
-        def _release_blocks(ln, st) -> None:
-            for bid in st.block_table:
-                ln.bpool.release(bid)
-            st.block_table, st.prompt_keys, st.registered = None, (), 0
-            ln.tables_np[st.sid, :] = 0       # retired row scatters to trash
-            ln.tables_dirty = True
-
-        def _eff_req(req: EngineRequest) -> EngineRequest:
-            """The request as (re-)admission sees it: a preempted request
-            resumes with its stashed tokens appended to the prompt
-            (teacher-forced through prefill — the exact-resume mechanism)
-            and its token budget reduced by the same count, so its total
-            cache claim is invariant under preemption."""
-            s = stash.get(req.rid)
-            if s is None or not s.generated:
-                return req
-            return dataclasses.replace(
-                req, prompt=req.prompt + tuple(s.generated),
-                max_new_tokens=req.max_new_tokens - len(s.generated))
-
-        def _preempt(ln, st) -> None:
-            """Evict a live slot with exact-resume semantics: release its
-            blocks, stash host progress, requeue the original request.
-            No device state survives — resume rebuilds it all."""
-            nonlocal preempted
-            preempted += 1
-            rid = st.rid                  # pool.free() scrubs it to -1
-            stash[rid] = _Stash(
-                generated=list(st.generated or []),
-                first_token_s=st.first_token_s, admit_s=st.admit_s,
-                preemptions=st.preemptions + 1, retries=st.retries)
-            if paged and st.block_table is not None:
-                _release_blocks(ln, st)
-            ln.pool.free(st.sid)
-            ln.index[st.sid] = 0
-            ln.tokens[st.sid, 0] = 0
-            sched.push(by_rid[rid])
-
-        def _fail(ln, st) -> None:
-            """Retire a slot fault recovery gave up on (typed status)."""
-            nonlocal failed
-            failed += 1
-            results.append(RequestResult(
-                rid=st.rid, tokens=list(st.generated or []),
-                arrival_s=st.arrival_s, admit_s=st.admit_s,
-                first_token_s=st.first_token_s, finish_s=now,
-                slot=st.sid, status="failed", priority=st.priority,
-                preemptions=st.preemptions, deadline_s=st.deadline_s,
-                model=ln.tag))
-            if paged and st.block_table is not None:
-                _release_blocks(ln, st)
-            ln.pool.free(st.sid)
-            ln.index[st.sid] = 0
-            ln.tokens[st.sid, 0] = 0
-
-        i, now = 0, 0.0
-        t0 = time.perf_counter()
-        limit = max_ticks if max_ticks is not None else \
-            (sum(len(r.prompt) + r.max_new_tokens for r in reqs) + 16) * 4
-
-        with warnings.catch_warnings():
-            # CPU backends warn that donated buffers were not usable
-            warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
-            while i < len(reqs) or sched.pending or total_active():
-                # 1) ingest everything that has arrived by `now`
-                while i < len(reqs) and reqs[i].arrival_s <= now:
-                    sched.push(reqs[i])
-                    i += 1
-                next_arrival = reqs[i].arrival_s if i < len(reqs) else None
-                # 2) admit into free slot leases — mid-flight, no drain
-                #    barrier; `num_slots` caps the TOTAL across lanes
-                generating = any(s.active and not s.in_prefill
-                                 for ln in lanes for s in ln.pool.slots)
-                if preemption and sched.pending:
-                    # resource pressure + a strictly-higher-class head:
-                    # evict the lowest-class generating slot (latest
-                    # deadline first) until the head fits or no victim of
-                    # lower class remains — equal class never preempts,
-                    # so batch can't thrash batch.  Slot pressure frees a
-                    # LEASE, so victims come from any lane; pure block
-                    # pressure only helps if the victim is in the head's
-                    # own lane (block pools are lane-private, rule 8).
-                    head = sched.pending[0]
-                    lane_h = self.lanes[getattr(head, "model", None)]
-                    hrank = bt.priority_rank(
-                        getattr(head, "priority", bt.PRIORITY_CLASSES[0]))
-                    for _ in range(S * len(lanes)):
-                        slot_pressed = total_active() >= S
-                        block_pressed = (
-                            paged and lane_h._block_cost(_eff_req(head))
-                            > lane_h.bpool.free_blocks)
-                        if not (slot_pressed or block_pressed):
-                            break
-                        vlanes = lanes if slot_pressed else [lane_h]
-                        victims = [(ln, s) for ln in vlanes
-                                   for s in ln.pool.active_slots()
-                                   if bt.priority_rank(s.priority) > hrank]
-                        if not victims:
-                            break
-                        ln_v, st_v = max(victims, key=lambda t: (
-                            bt.priority_rank(t[1].priority), t[1].deadline_s,
-                            t[0].order, t[1].sid))
-                        _preempt(ln_v, st_v)
-                quotas_on = bool(self.policy.class_quotas)
-                abc = None
-                if quotas_on or self.multi:
-                    # quota denominators: on a multiplexed engine each
-                    # active slot charges its (model, class) tuple AND the
-                    # bare model and class keys, so quotas configured at
-                    # any granularity meter correctly
-                    abc = {}
-                    for ln in lanes:
-                        for s in ln.pool.active_slots():
-                            if self.multi:
-                                for k in ((ln.tag, s.priority), ln.tag,
-                                          s.priority):
-                                    abc[k] = abc.get(k, 0) + 1
-                            else:
-                                abc[s.priority] = abc.get(s.priority, 0) + 1
-                if paged:
-                    budget = ({ln.tag: ln.bpool.free_blocks for ln in lanes}
-                              if self.multi else lanes[0].bpool.free_blocks)
-                else:
-                    budget = None
-                cohort = sched.admit(
-                    now, S - total_active(), next_arrival,
-                    cost_fn=((lambda r: self.lanes[getattr(r, "model", None)]
-                              ._block_cost(_eff_req(r)))
-                             if paged else None),
-                    budget=budget,
-                    active_by_class=abc,
-                    key_fn=((lambda r: (getattr(r, "model", None),
-                                        getattr(r, "priority",
-                                                bt.PRIORITY_CLASSES[0])))
-                            if self.multi else None))
-                admitted = 0
-                for req in cohort:
-                    ln = self.lanes[getattr(req, "model", None)]
-                    s_res = stash.get(req.rid)
-                    if drop_missed_deadlines and now > req.deadline_s:
-                        # expired while queued: retire WITHOUT taking a
-                        # slot — no prime or prefill dispatch is wasted
-                        # on a request that is already dead (a preempted
-                        # request keeps what it had generated)
-                        results.append(RequestResult(
-                            rid=req.rid,
-                            tokens=list(s_res.generated) if s_res else [],
-                            arrival_s=req.arrival_s,
-                            admit_s=s_res.admit_s if s_res else now,
-                            first_token_s=(s_res.first_token_s if s_res
-                                           else -1.0),
-                            finish_s=now, slot=-1, dropped=True,
-                            status="dropped", priority=req.priority,
-                            preemptions=s_res.preemptions if s_res else 0,
-                            deadline_s=req.deadline_s, model=ln.tag))
-                        stash.pop(req.rid, None)
-                        dropped += 1
-                        continue
-                    admitted += 1
-                    eff = _eff_req(req)
-                    st = ln.pool.alloc(req.rid, eff.prompt,
-                                       eff.max_new_tokens,
-                                       now=now, arrival_s=req.arrival_s,
-                                       deadline_s=req.deadline_s,
-                                       priority=req.priority)
-                    if s_res is not None:
-                        # exact resume: the stashed tokens ride the prompt
-                        # (teacher-forced), the generated list starts from
-                        # them, and ttft/admit bookkeeping survives the
-                        # eviction — alloc validated the INVARIANT claim
-                        # eff.prompt + eff.max_new == original total
-                        st.generated = list(s_res.generated)
-                        st.max_new = req.max_new_tokens
-                        st.first_token_s = s_res.first_token_s
-                        st.admit_s = s_res.admit_s
-                        st.preemptions = s_res.preemptions
-                        st.retries = s_res.retries
-                        del stash[req.rid]
-                    ln.index[st.sid] = 0
-                    if paged:
-                        # build the slot's block table: ref every shared
-                        # prefix block (their prefill chunks are skipped
-                        # entirely), alloc the rest privately — the
-                        # admission decision priced exactly this claim.
-                        # Keys are model-fingerprinted (lane._prefix_keys)
-                        # and looked up in the lane's OWN pool, so a hit
-                        # can never cross models.
-                        keys = ln._prefix_keys(eff)
-                        hits = ln._usable_hits(eff, keys)
-                        need = -(-(len(eff.prompt) + eff.max_new_tokens)
-                                 // self.block_size)
-                        table = []
-                        for j in range(hits):
-                            bid = ln.bpool.lookup(keys[j])
-                            ln.bpool.ref(bid)
-                            table.append(bid)
-                        for _ in range(need - hits):
-                            table.append(ln.bpool.alloc())
-                        st.block_table = table
-                        st.prompt_keys = keys
-                        st.registered = hits
-                        st.pos = hits * self.block_size
-                        ln.index[st.sid] = st.pos
-                        ln.tables_np[st.sid, :] = 0
-                        ln.tables_np[st.sid, :len(table)] = table
-                        ln.tables_dirty = True
-                        shared_hits += hits
-                        skipped_tokens += hits * self.block_size
-                        blocks_demanded += need
-                    if ln._prime_step is not None:
-                        # prime dispatch: write this slot's cross-K/V row
-                        # (and its xlen frontier) once, concurrently with
-                        # other slots' decoding — like a prefill chunk,
-                        # its cost lands on this tick's clock (resume
-                        # re-primes: reconstructed, never trusted)
-                        src, n_valid = _padded_source(ln.cfg, req)
-                        ln.cache = ln._prime_step(
-                            ln.params, src, ln.cache,
-                            jnp.asarray(st.sid, jnp.int32), n_valid)
-                    left = len(st.prompt) - 1 - st.pos
-                    if self.prefill_chunk and left > 0:
-                        # remaining prompt (all but the last token, minus
-                        # any shared-prefix positions already resident)
-                        # goes through the chunked prefill step; the last
-                        # token rides the fused step (its sample = first
-                        # output token)
-                        st.chunk_left = left
-                    else:
-                        ln.tokens[st.sid, 0] = st.next_input()
-                if generating:
-                    admissions_while_busy += admitted
-                if paged:
-                    # push each dirty host table mirror before any
-                    # dispatch this tick gathers or scatters through it
-                    for ln in lanes:
-                        if ln.tables_dirty:
-                            ln.cache = dict(
-                                ln.cache,
-                                block_tables=jnp.asarray(ln.tables_np))
-                            ln.tables_dirty = False
-                # 3) idle: nothing active -> jump to the next event
-                if total_active() == 0:
-                    if next_arrival is None and not sched.pending:
-                        break
-                    if next_arrival is None and not cohort:
-                        # this round consumed nothing from a non-empty
-                        # queue, the pool is idle, and nothing is left to
-                        # arrive: no future round can differ — surface
-                        # the policy bug instead of spinning (the
-                        # virtual-time twin of the run_virtual guard)
-                        raise RuntimeError(
-                            "admission declined a non-empty pending queue "
-                            f"({len(sched.pending)} requests) with an idle "
-                            "pool and no future arrival; check the policy "
-                            "/ class_quotas configuration")
-                    target = next_arrival if next_arrival is not None else now
-                    if clock == "wall":
-                        gap = target - (time.perf_counter() - t0)
-                        if gap > 0:
-                            time.sleep(min(gap, 0.05))
-                        now = time.perf_counter() - t0
-                    else:
-                        now = max(now, target)
-                    continue
-                # 4) chunked prefill: each mid-prefill slot writes one
-                #    bucketed chunk of teacher-forced prompt state in a
-                #    single dispatch (admission-to-first-token shrinks
-                #    from prompt_len ticks to ceil(prompt_len/chunk))
-                for ln in lanes:
-                    for st in ln.pool.active_slots():
-                        if st.chunk_left <= 0:
-                            continue
-                        n = min(st.chunk_left, self.prefill_chunk)
-                        c = ST.bucket_batch(n)
-                        buf = np.zeros((c,), np.int32)
-                        buf[:n] = st.prompt[st.pos:st.pos + n]
-                        ln.cache = ln._chunk_step(c)(
-                            ln.params, jnp.asarray(buf), ln.cache,
-                            jnp.asarray(st.sid, jnp.int32),
-                            jnp.asarray(st.pos, jnp.int32),
-                            jnp.asarray(n, jnp.int32))
-                        st.pos += n
-                        st.chunk_left -= n
-                        ln.index[st.sid] = st.pos
-                        if paged:
-                            _register_blocks(ln, st)
-                        if st.chunk_left == 0:
-                            ln.tokens[st.sid, 0] = st.prompt[st.pos]
-                # 4.5) speculative draft: catch each generating slot's
-                #      draft cache up to its committed frontier (teacher-
-                #      forced — this is also what rebuilds the draft after
-                #      admission, preemption/resume, or slot reuse), then
-                #      propose k greedy tokens per slot in ONE fused
-                #      dispatch per speculating lane.  Draft dispatches
-                #      see no fault injection: a wrong proposal can only
-                #      be rejected.
-                for ln in lanes:
-                    if not ln.spec:
-                        continue
-                    ln.krow = np.zeros((S,), np.int32)
-                    for st in ln.pool.active_slots():
-                        if st.chunk_left > 0 or st.pos < len(st.prompt) - 1:
-                            continue
-                        k_row = min(ln.spec_k,
-                                    st.max_new - len(st.generated) - 1,
-                                    self.max_seq - 1 - st.pos)
-                        if k_row <= 0:
-                            continue
-                        ln.krow[st.sid] = k_row
-                        P = len(st.prompt)
-                        while st.draft_pos < st.pos:
-                            n = min(st.pos - st.draft_pos, self._draft_cap)
-                            c = ST.bucket_batch(n)
-                            buf = np.zeros((c,), np.int32)
-                            for t in range(n):
-                                p = st.draft_pos + t
-                                buf[t] = (st.prompt[p] if p < P
-                                          else st.generated[p - P])
-                            ln.draft_cache = ln._draft_chunk_step(c)(
-                                ln.dparams, jnp.asarray(buf),
-                                ln.draft_cache,
-                                jnp.asarray(st.sid, jnp.int32),
-                                jnp.asarray(st.draft_pos, jnp.int32),
-                                jnp.asarray(n, jnp.int32))
-                            st.draft_pos += n
-                    d_active = ln.krow > 0
-                    if d_active.any():
-                        d_index = np.array(
-                            [s.draft_pos for s in ln.pool.slots], np.int32)
-                        props, ln.draft_cache, _ = ln._propose_step(
-                            ln.dparams, jnp.asarray(ln.tokens),
-                            ln.draft_cache,
-                            jnp.asarray(d_index), jnp.asarray(d_active))
-                        ln.props = np.asarray(props)
-                    else:
-                        ln.props = np.zeros((S, ln.spec_k), np.int32)
-                # 5) one fused slot-masked step PER LANE with live slots:
-                #    every ready slot (not mid-chunk), one token — or,
-                #    speculating, one wide verify dispatch scoring 1..k+1
-                #    tokens per ready slot (same single compiled shape per
-                #    lane whatever the mix).  Fault injection addresses
-                #    slots by dense GLOBAL id (lane.order * S + sid) so a
-                #    single-lane engine sees byte-identical sid streams.
-                all_ready: List[int] = []      # global ids, lane-major
-                for ln in lanes:
-                    ln.active_mask = np.array(
-                        [s.active and s.chunk_left == 0
-                         for s in ln.pool.slots], bool)
-                    ln.ready = [int(s) for s in np.where(ln.active_mask)[0]]
-                    ln.torn = []
-                    ln.nxt = None
-                    all_ready.extend(ln.order * S + sid for sid in ln.ready)
-                if fault_plan is not None and paged and all_ready:
-                    # fault: tear the victim's DEVICE table row (zero ->
-                    # all-trash) just before dispatch; the host mirror
-                    # stays clean, which is exactly how the post-step
-                    # audit knows what to rebuild
-                    for g in fault_plan.torn_rows(ticks, all_ready):
-                        lanes[g // S].torn.append(g % S)
-                    for ln in lanes:
-                        if ln.torn:
-                            torn = ln.tables_np.copy()
-                            for sid in ln.torn:
-                                torn[sid, :] = 0
-                            ln.cache = dict(ln.cache,
-                                            block_tables=jnp.asarray(torn))
-                            ln.tables_dirty = True  # clean mirror repushed
-                if all_ready:
-                    # resolve dispatch faults FIRST, over the union of
-                    # ready global ids (the injected fault strikes the
-                    # tick's dispatch sequence, whichever lane the culprit
-                    # sits in), then run each lane's step exactly once
-                    attempt = 0
-                    while all_ready:
-                        culprit = (fault_plan.dispatch_fault(
-                            ticks, attempt, all_ready)
-                            if fault_plan is not None else None)
-                        if culprit is None:
-                            break
-                        # dispatch failed: charge the culprit's retry
-                        # budget; past max_retries the request is retired
-                        # as `failed` and the retry goes on without it —
-                        # one poisoned slot never takes down the cohort
-                        dispatch_retries += 1
-                        attempt += 1
-                        ln = lanes[culprit // S]
-                        sid = culprit % S
-                        st = ln.pool.slots[sid]
-                        st.retries += 1
-                        if st.retries > max_retries:
-                            _fail(ln, st)
-                            ln.active_mask[sid] = False
-                            ln.ready.remove(sid)
-                            all_ready.remove(culprit)
-                for ln in lanes:
-                    if not ln.ready:
-                        continue
-                    if ln.spec:
-                        # per-row verify payload: the committed next input
-                        # in column 0, the row's usable proposals after it
-                        ln.tok_mat = np.zeros((S, ln.spec_k + 1), np.int32)
-                        ln.tok_mat[:, 0] = ln.tokens[:, 0]
-                        for sid in ln.ready:
-                            kr = int(ln.krow[sid])
-                            if kr > 0:
-                                ln.tok_mat[sid, 1:1 + kr] = \
-                                    ln.props[sid, :kr]
-                        ln.n_tok = np.where(ln.active_mask, 1 + ln.krow,
-                                            0).astype(np.int32)
-                        nxt, ln.cache, new_index = ln._verify(
-                            ln.tok_mat, ln.cache, ln.index, ln.n_tok,
-                            ln.active_mask)
-                    else:
-                        nxt, ln.cache, new_index = ln._fused(
-                            ln.tokens, ln.cache, ln.index, ln.active_mask)
-                    ln.nxt = np.asarray(nxt)
-                    ln.index = np.array(new_index)   # writable host copy
-                if not all_ready and clock == "wall":
-                    # charge chunk/prime time here
-                    jax.block_until_ready([ln.cache for ln in lanes])
-                if fault_plan is not None and all_ready:
-                    # fault: poison chosen slots' logits — modelled at the
-                    # guard's observable surface, the -1 sentinel the
-                    # in-graph finite check emits for NaN/Inf rows
-                    for g in fault_plan.nonfinite_slots(ticks, all_ready):
-                        ln = lanes[g // S]
-                        ln.nxt = np.array(ln.nxt)    # writable copy
-                        ln.nxt[g % S] = -1
-                ticks += 1
-                tact = total_active()
-                occupancy.append(tact)
-                for t in occ_by_lane:
-                    occ_by_lane[t].append(self.lanes[t].pool.active_count)
-                if paged:
-                    used = sum(ln.bpool.used_blocks for ln in lanes)
-                    peak_used = max(peak_used, used)
-                    util_sum += used / max(
-                        1, (self.num_blocks - 1) * len(lanes))
-                if clock == "wall":
-                    # np.asarray(nxt) above already blocked on the step
-                    prev = now
-                    now = time.perf_counter() - t0
-                    # stuck-tick watchdog: with static shapes, per-tick
-                    # wall time is tight — a straggler means a sick
-                    # host, not workload variance
-                    msg = wd.record(now - prev)
-                    if msg:
-                        warnings.warn(f"engine tick {ticks}: {msg}",
-                                      RuntimeWarning)
-                else:
-                    dt = tick_s(tact) if callable(tick_s) else tick_s
-                    now += dt
-                # 6) host bookkeeping, lane by lane: teacher-force
-                #    prefill, collect samples, retire finished slots for
-                #    immediate lease reuse (by any lane)
-                for ln in lanes:
-                  for sid in ln.torn:
-                    # the torn row sent this tick's K/V write to trash
-                    # and sampled through garbage gathers: the slot's
-                    # device state can no longer be trusted, so the
-                    # audit repairs the table (clean mirror repush) and
-                    # rebuilds the tenant from scratch via preemption —
-                    # its output stays bit-for-bit (exact resume)
-                    st = ln.pool.slots[sid]
-                    if not st.active:
-                        continue          # already retired by _fail
-                    torn_repaired += 1
-                    _preempt(ln, st)
-                  for st in ln.pool.active_slots():
-                    if st.sid in ln.torn:
-                        continue
-                    if drop_missed_deadlines and now > st.deadline_s:
-                        # deadline miss — possibly mid-prefill, before
-                        # any token: record with the first_token_s
-                        # sentinel intact (ttft aggregates exclude it)
-                        results.append(RequestResult(
-                            rid=st.rid, tokens=list(st.generated),
-                            arrival_s=st.arrival_s, admit_s=st.admit_s,
-                            first_token_s=st.first_token_s, finish_s=now,
-                            slot=st.sid, dropped=True, status="dropped",
-                            priority=st.priority,
-                            preemptions=st.preemptions,
-                            deadline_s=st.deadline_s, model=ln.tag))
-                        dropped += 1
-                        if paged:
-                            _release_blocks(ln, st)
-                        ln.pool.free(st.sid)
-                        continue
-                    if st.chunk_left > 0:          # mid-chunk: no sample
-                        continue
-                    if not ln.spec:
-                        st.pos += 1
-                        if paged:
-                            _register_blocks(ln, st)
-                        if st.pos < len(st.prompt):    # still prefilling
-                            ln.tokens[st.sid, 0] = st.prompt[st.pos]
-                            continue
-                        tok = int(ln.nxt[st.sid])
-                        if tok < 0:
-                            # the in-graph finite guard's sentinel: this
-                            # slot's logits went NaN/Inf.  The sample is
-                            # garbage and the cache row suspect — rebuild
-                            # deterministically via preemption (a transient
-                            # fault recomputes clean, bit-for-bit); a slot
-                            # that keeps faulting exhausts its retry budget
-                            # and is retired as `failed`
-                            nonfinite += 1
-                            st.retries += 1
-                            if st.retries > max_retries:
-                                _fail(ln, st)
-                            else:
-                                _preempt(ln, st)
-                            continue
-                        st.generated.append(tok)
-                        gen_tokens += 1
-                        emit_dispatches += 1
-                        if st.first_token_s < 0:
-                            st.first_token_s = now
-                        if st.done():
-                            results.append(RequestResult(
-                                rid=st.rid, tokens=list(st.generated),
-                                arrival_s=st.arrival_s, admit_s=st.admit_s,
-                                first_token_s=st.first_token_s,
-                                finish_s=now,
-                                slot=st.sid, priority=st.priority,
-                                preemptions=st.preemptions,
-                                deadline_s=st.deadline_s, model=ln.tag))
-                            if paged:
-                                _release_blocks(ln, st)
-                            ln.pool.free(st.sid)
-                        else:
-                            ln.tokens[st.sid, 0] = tok
-                        continue
-                    # speculative commit: walk the verified row, keeping
-                    # the accepted prefix + the bonus sample, then REWIND
-                    # the device index to the committed frontier — the
-                    # rejected tail's KV writes die by overwrite-before-
-                    # read (decode-contract rule 7)
-                    nt = int(ln.n_tok[st.sid])
-                    row = ln.nxt[st.sid]
-                    if np.any(row[:nt] < 0):
-                        # any sentinel in the fed range poisons the whole
-                        # round: in-flight proposals are uncommitted state,
-                        # so fault recovery rebuilds from the last COMMITTED
-                        # token exactly as in the non-speculative engine
-                        nonfinite += 1
-                        st.retries += 1
-                        if st.retries > max_retries:
-                            _fail(ln, st)
-                        else:
-                            _preempt(ln, st)
-                        continue
-                    pos0 = st.pos
-                    committed = 0
-                    for j in range(nt):
-                        st.pos += 1
-                        if paged:
-                            _register_blocks(ln, st)
-                        if st.pos < len(st.prompt):    # still prefilling
-                            ln.tokens[st.sid, 0] = st.prompt[st.pos]
-                            break
-                        tok = int(row[j])
-                        st.generated.append(tok)
-                        gen_tokens += 1
-                        committed += 1
-                        if st.first_token_s < 0:
-                            st.first_token_s = now
-                        if st.done() or (j + 1 < nt
-                                         and tok != int(ln.tok_mat[st.sid,
-                                                                   j + 1])):
-                            break
-                    ln.index[st.sid] = st.pos  # the rewind past rejections
-                    if committed:
-                        emit_dispatches += 1
-                        if ln.krow[st.sid] > 0:
-                            # the draft consumed [f, d_1..d_{k-1}]; the
-                            # committed-valid prefix of that is 1 + the
-                            # accepted count (capped at k-1): gap 0 after
-                            # a partial accept, 1 after a full accept
-                            st.draft_pos = pos0 + 1 + min(
-                                committed - 1, ln.spec_k - 1)
-                    if st.done():
-                        results.append(RequestResult(
-                            rid=st.rid, tokens=list(st.generated),
-                            arrival_s=st.arrival_s, admit_s=st.admit_s,
-                            first_token_s=st.first_token_s, finish_s=now,
-                            slot=st.sid, priority=st.priority,
-                            preemptions=st.preemptions,
-                            deadline_s=st.deadline_s, model=ln.tag))
-                        if paged:
-                            _release_blocks(ln, st)
-                        ln.pool.free(st.sid)
-                    elif committed:
-                        ln.tokens[st.sid, 0] = st.generated[-1]
-                if ticks > limit:
-                    # the cap exists to bound a stuck run; hitting it is
-                    # an overload outcome, not a crash — retire everything
-                    # still in flight (and everything that never got in)
-                    # with the typed `unfinished` status and report it
-                    warnings.warn(
-                        f"engine hit the {limit}-tick cap with "
-                        f"{total_active()} active, "
-                        f"{len(sched.pending)} pending and "
-                        f"{len(reqs) - i} unarrived requests; retiring "
-                        "them as 'unfinished'", RuntimeWarning)
-                    for ln in lanes:
-                        for st in ln.pool.active_slots():
-                            unfinished += 1
-                            results.append(RequestResult(
-                                rid=st.rid, tokens=list(st.generated or []),
-                                arrival_s=st.arrival_s, admit_s=st.admit_s,
-                                first_token_s=st.first_token_s,
-                                finish_s=now,
-                                slot=st.sid, status="unfinished",
-                                priority=st.priority,
-                                preemptions=st.preemptions,
-                                deadline_s=st.deadline_s, model=ln.tag))
-                            if paged:
-                                _release_blocks(ln, st)
-                            ln.pool.free(st.sid)
-                    for req in list(sched.pending) + reqs[i:]:
-                        s_res = stash.pop(req.rid, None)
-                        unfinished += 1
-                        results.append(RequestResult(
-                            rid=req.rid,
-                            tokens=list(s_res.generated) if s_res else [],
-                            arrival_s=req.arrival_s,
-                            admit_s=s_res.admit_s if s_res else -1.0,
-                            first_token_s=(s_res.first_token_s if s_res
-                                           else -1.0),
-                            finish_s=now, slot=-1, status="unfinished",
-                            priority=req.priority,
-                            preemptions=s_res.preemptions if s_res else 0,
-                            deadline_s=req.deadline_s,
-                            model=getattr(req, "model", None)))
-                    sched.pending.clear()
-                    i = len(reqs)
-                    break
-
-        wall = time.perf_counter() - t0
+        results = out.results
         results.sort(key=lambda r: r.rid)
+        now, ticks = out.now, out.ticks
+        occupancy = out.occupancy
+        paged = self.block_size is not None
         lat = [r.latency_s for r in results if r.status == "ok"]
         # a request retired before emitting a token still carries the
         # first_token_s = -1.0 sentinel: it must never leak a negative
@@ -1421,7 +617,7 @@ class Engine:
             by_model: Dict[str, List[RequestResult]] = \
                 {ln.tag: [] for ln in lanes}
             for r in results:
-                by_model[r.model].append(r)
+                by_model.setdefault(r.model, []).append(r)
             for m, rs in by_model.items():
                 mdl_lat[m] = bt.p99(
                     [r.latency_s for r in rs if r.status == "ok"])
@@ -1433,39 +629,42 @@ class Engine:
                     if r.status == "ok" and r.finish_s <= r.deadline_s
                 ) / dur
         return EngineReport(
-            results=results, ticks=ticks, generated_tokens=gen_tokens,
-            duration_s=now, wall_s=wall,
+            results=results, ticks=ticks,
+            generated_tokens=out.gen_tokens,
+            duration_s=now, wall_s=out.wall,
             p99_latency_s=bt.p99(lat),
-            tokens_per_s=gen_tokens / dur,
+            tokens_per_s=out.gen_tokens / dur,
             occupancy=occupancy,
             mean_occupancy=(sum(occupancy) / (len(occupancy) * S)
                             if occupancy else 0.0),
-            admissions_while_busy=admissions_while_busy,
+            admissions_while_busy=out.admissions_while_busy,
             num_slots=S,
             mean_ttft_s=float(np.mean(ttft)) if ttft else 0.0,
             p99_ttft_s=bt.p99(ttft),
             prefill_chunk=self.prefill_chunk,
-            dropped=dropped,
+            dropped=out.dropped,
             block_size=self.block_size,
             num_blocks=self.num_blocks,
             kv_hbm_bytes=kv_bytes,
-            peak_blocks_used=peak_used,
-            mean_block_util=(util_sum / ticks if paged and ticks else 0.0),
-            shared_block_hits=shared_hits,
-            shared_hit_rate=(shared_hits / blocks_demanded
-                             if blocks_demanded else 0.0),
-            prefill_tokens_skipped=skipped_tokens,
+            peak_blocks_used=out.peak_used,
+            mean_block_util=(out.util_sum / ticks
+                             if paged and ticks else 0.0),
+            shared_block_hits=out.shared_hits,
+            shared_hit_rate=(out.shared_hits / out.blocks_demanded
+                             if out.blocks_demanded else 0.0),
+            prefill_tokens_skipped=out.skipped_tokens,
             effective_concurrency=(sum(occupancy) / len(occupancy)
                                    if occupancy else 0.0),
-            preempted=preempted,
-            failed=failed,
-            unfinished=unfinished,
-            dispatch_retries=dispatch_retries,
-            nonfinite_samples=nonfinite,
-            torn_rows_repaired=torn_repaired,
-            stuck_ticks=wd.slow_steps if wd is not None else 0,
+            preempted=out.preempted,
+            failed=out.failed,
+            unfinished=out.unfinished,
+            dispatch_retries=out.dispatch_retries,
+            nonfinite_samples=out.nonfinite,
+            torn_rows_repaired=out.torn_repaired,
+            stuck_ticks=out.stuck_ticks,
             leaked_blocks=(sum((self.num_blocks - 1) - ln.bpool.free_blocks
                                for ln in lanes) if paged else 0),
+            refused=out.refused,
             class_p99_latency_s=cls_lat,
             class_mean_ttft_s={c: (float(np.mean(ts)) if ts else 0.0)
                                for c, ts in cls_ttft.items()},
@@ -1473,8 +672,8 @@ class Engine:
             goodput_tokens_per_s=good_tokens / dur,
             slo_attainment=(len(good) / len(results) if results else 0.0),
             spec_k=self.spec_k,
-            accepted_per_dispatch=(gen_tokens / emit_dispatches
-                                   if emit_dispatches else 0.0),
+            accepted_per_dispatch=(out.gen_tokens / out.emit_dispatches
+                                   if out.emit_dispatches else 0.0),
             latency_per_token_s=(float(np.mean(lat_tok))
                                  if lat_tok else 0.0),
             model_p99_latency_s=mdl_lat,
@@ -1483,49 +682,14 @@ class Engine:
             model_goodput_tokens_per_s=mdl_goodput,
             model_mean_occupancy={
                 t: (sum(v) / (len(v) * S) if v else 0.0)
-                for t, v in occ_by_lane.items()},
-            model_occupancy={t: list(v) for t, v in occ_by_lane.items()})
+                for t, v in out.occ_by_lane.items()},
+            model_occupancy={t: list(v)
+                             for t, v in out.occ_by_lane.items()})
 
 
 # ---------------------------------------------------------------------------
 # sequential reference + trace synthesis (shared by tests / serve / bench)
 # ---------------------------------------------------------------------------
-
-def _validate_source(cfg: ArchConfig, req: EngineRequest) -> np.ndarray:
-    """Host-side shape/length checks only (no device array is built —
-    ``serve`` validates the whole trace up front before admitting
-    anything, and builds the padded array once, at admission)."""
-    smax = R.source_len(cfg)
-    if req.source is None:
-        raise ValueError(
-            f"request {req.rid}: {cfg.family!r} serves against per-request "
-            f"source embeddings; EngineRequest.source must be "
-            f"(src_len <= {smax}, {cfg.d_model})")
-    src = np.asarray(req.source, np.float32)
-    if src.ndim != 2 or src.shape[1] != cfg.d_model:
-        raise ValueError(
-            f"request {req.rid}: source must be (src_len, {cfg.d_model}), "
-            f"got {src.shape}")
-    n = src.shape[0]
-    if not 0 < n <= smax:
-        raise ValueError(
-            f"request {req.rid}: source length {n} outside (0, {smax}]")
-    return src
-
-
-def _padded_source(cfg: ArchConfig, req: EngineRequest):
-    """One request's source embeddings padded to the static prime shape:
-    (1, source_len(cfg), d_model) bf16 plus the () int32 count of real
-    positions.  Shared by the engine's prime dispatch and the sequential
-    reference, so both prime with byte-identical inputs — the pad is
-    masked behind the row's xlen frontier at decode time."""
-    src = _validate_source(cfg, req)
-    n = src.shape[0]
-    buf = np.zeros((1, R.source_len(cfg), cfg.d_model), np.float32)
-    buf[0, :n] = src
-    return (jnp.asarray(buf, jnp.bfloat16),
-            jnp.asarray(n, jnp.int32))
-
 
 def reference_outputs(cfg: ArchConfig, params,
                       requests: Sequence[EngineRequest], *,

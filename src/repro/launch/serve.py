@@ -52,6 +52,20 @@ The report adds per-model p99/ttft/goodput/occupancy lines.
   python -m repro.launch.serve --models starcoder2-3b,qwen2-moe-a2.7b \
       --reduced --model-quota starcoder2-3b=4 --rate 200
 
+Scaling out (docs/serving.md, "Scaling out"): ``--tp N`` serves the
+slot pool through the tensor-parallel sharded executor — the same
+fused steps under ``shard_map`` on an N-way mesh axis, sharded along
+the SLOT axis so outputs stay bit-for-bit the single-device engine
+(force a CPU mesh offline with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``) — and
+``--replicas N`` puts N identically-configured engines behind the
+:class:`repro.engine.ReplicaRouter` front-end, which places each
+request on the lowest-projected-occupancy replica that its own
+admission policy would admit.
+
+  python -m repro.launch.serve --arch starcoder2-3b --reduced \
+      --replicas 2 --tp 2 --rate 400
+
 The fused multi-token decode
 loop is still timed separately (``--decode-tokens``): it remains the
 right tool for fixed-length batch completion, while the engine serves
@@ -245,6 +259,18 @@ def main(argv=None):
                          "block-table rows) to exercise recovery")
     ap.add_argument("--n-faults", type=int, default=8,
                     help="engine: faults in the seeded plan")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="fleet: serve through a ReplicaRouter over N "
+                         "identically-configured engine replicas (each "
+                         "with its own slot pool and device state; "
+                         "1 = single engine, today's path byte-"
+                         "identically)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="engine: tensor-parallel width — run the fused "
+                         "steps under shard_map on a tp-way mesh axis, "
+                         "sharded along the slot axis (bit-identical to "
+                         "tp=1; offline, force devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -347,6 +373,24 @@ def main(argv=None):
         if mode.enabled:
             dparams = quantize_tree(dparams, min_size=2048)
         draft = (dcfg, dparams)
+    if args.replicas < 1 or args.tp < 1:
+        print(f"[serve] --replicas and --tp must be >= 1 "
+              f"(got {args.replicas}, {args.tp})")
+        return 1
+    backend = None
+    if args.tp > 1:
+        if not ST.supports_sharded_serving():
+            print("[serve] --tp needs jax.experimental.shard_map "
+                  "(this jax has none); serve with --tp 1")
+            return 1
+        try:
+            backend = E.ShardedExecutor(tp=args.tp)
+        except (RuntimeError, ValueError) as e:
+            print(f"[serve] --tp rejected: {e}")
+            return 1
+        print(f"[serve] sharded executor: tp={args.tp} across "
+              f"{len(jax.devices())} visible device(s), slot-axis "
+              f"sharding (bit-identical to tp=1)")
     eng_kw = dict(mode=mode, num_slots=num_slots,
                   max_seq=args.prompt_len + args.gen_tokens,
                   policy=policy,
@@ -357,10 +401,16 @@ def main(argv=None):
                   rng=(jax.random.PRNGKey(args.seed + 1)
                        if args.temperature > 0 else None),
                   spec_k=args.spec_k, draft=draft,
-                  draft_layers=args.draft_layers or None)
+                  draft_layers=args.draft_layers or None,
+                  backend=backend)
+
+    def build_engine(name=None):
+        kw = dict(eng_kw, name=name)
+        return (E.Engine(models=lanes, **kw) if args.models
+                else E.Engine(cfg, params, **kw))
+
     try:
-        eng = (E.Engine(models=lanes, **eng_kw) if args.models
-               else E.Engine(cfg, params, **eng_kw))
+        eng = build_engine("replica0" if args.replicas > 1 else None)
     except ValueError as e:
         print(f"[engine] config rejected: {e}")
         return 1
@@ -406,6 +456,40 @@ def main(argv=None):
     plan = (E.FaultPlan.random(args.fault_seed, n_faults=args.n_faults,
                                num_slots=num_slots)
             if args.fault_seed is not None else None)
+    if args.replicas > 1:
+        # ---- the replica fleet behind the router front-end ----------
+        if plan is not None:
+            print("[serve] --fault-seed wants a single engine "
+                  "(--replicas 1): a shared FaultPlan would replay the "
+                  "same fired list on every replica")
+            return 1
+        try:
+            fleet = [eng] + [build_engine(f"replica{i}")
+                             for i in range(1, args.replicas)]
+        except ValueError as e:
+            print(f"[engine] config rejected: {e}")
+            return 1
+        router = E.ReplicaRouter(fleet)
+        for member in fleet:     # compile BEFORE the wall clock starts
+            member.warmup()
+        rrep = router.serve(reqs, clock="wall",
+                            preemption=args.preemption)
+        print(f"[router] {args.replicas} replicas x {num_slots} slots "
+              f"x {max_seq} positions (tp={args.tp}); "
+              f"{len(rrep.results)} requests, {rrep.refused} refused")
+        occ = "  ".join(f"{n}={rrep.replica_occupancy[n]:.1%}"
+                        f"({rrep.replica_requests[n]} reqs)"
+                        for n in rrep.replica_names)
+        print(f"[router] fleet p99 {rrep.p99_latency_s*1e3:.2f} ms "
+              f"(deadline {args.deadline_ms} ms); "
+              f"{rrep.tokens_per_s:,.0f} tok/s decoded, goodput "
+              f"{rrep.goodput_tokens_per_s:,.0f} tok/s; "
+              f"ttft {rrep.mean_ttft_s*1e3:.2f} ms mean")
+        print(f"[router] per-replica occupancy: {occ}")
+        if rrep.leaked_blocks:
+            print(f"[router] WARNING: {rrep.leaked_blocks} KV blocks "
+                  f"leaked across the fleet")
+        return 0
     eng.warmup()         # compile before the clock starts: the measured
     try:                                      # p99 is serving, not tracing
         rep = eng.serve(reqs, clock="wall", preemption=args.preemption,

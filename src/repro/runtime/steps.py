@@ -655,6 +655,500 @@ def cached_draft_propose_step(cfg: ArchConfig, *, mode: QuantMode = FP,
                        cfg, mode=mode, k=k)))
 
 
+# ---------------------------------------------------------------------------
+# tensor-parallel (sharded) serving steps
+# ---------------------------------------------------------------------------
+#
+# The engine's second ExecutorBackend: the SAME make_*_step builders run
+# under full-manual shard_map on a ("model",) host mesh, sharded along
+# the SLOT axis.  Every per-row float op of the fused steps is
+# batch-size-independent (no op ever crosses rows), so a shard advancing
+# its num_slots/tp rows computes bit-for-bit what the single-device step
+# computes for those rows — which is the whole point: head/expert tensor
+# parallelism needs a cross-shard psum whose float adds reassociate, and
+# bit parity with the single-device engine (the repo's gating currency)
+# would be lost.  Slot sharding costs no collectives at all, which also
+# keeps us inside the XLA 0.4.x-safe subset: the partitioner bundled
+# with JAX 0.4.x aborts on all-gather/ppermute under shard_map even in
+# forward-only code (and on any scan backward — see
+# supports_int8_grad_exchange), but forward scans with zero collectives
+# partition fine.
+#
+# Paged leaves are the one wrinkle: physical KV blocks are shared across
+# slots (hence across shards), so each shard gets a replicated COPY,
+# diverges it with its own rows' writes, and the merge outside the
+# shard_map folds the copies back by "who changed it" — sound because
+# every real block has at most one writing slot per tick (block tables
+# partition real blocks; only reserved trash block 0 takes multi-shard
+# garbage writes, and block 0 is never read).
+
+def supports_sharded_serving() -> bool:
+    """True when the installed JAX can run the sharded serving steps.
+
+    The serving twin of :func:`supports_int8_grad_exchange`, with a
+    weaker requirement: the steps are forward-only and collective-free,
+    so the 0.4.x partitioner handles them — we only need
+    ``jax.experimental.shard_map`` to exist."""
+    try:
+        from jax.experimental.shard_map import shard_map  # noqa: F401
+    except ImportError:
+        return False
+    return True
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_mesh(tp: int):
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh((tp,), ("model",))
+
+
+def _shard_map(tp: int):
+    from jax.experimental.shard_map import shard_map
+    return functools.partial(shard_map, mesh=_sharded_mesh(tp),
+                             check_rep=False)
+
+
+def _sharded_cache_specs(cfg: ArchConfig, cache: dict):
+    """Per-leaf shard_map specs for a pooled cache: slot-resident leaves
+    shard on their slot axis, the block table on its slot axis 0, paged
+    block leaves replicate in (each shard diverges a private copy) and
+    come back STACKED (leading shard axis) for the host-side merge.
+
+    Returns ``(in_specs, out_specs, paged_keys, axes)``."""
+    from jax.sharding import PartitionSpec as P
+    axes = R.cache_batch_axes(cfg, cache)
+    paxes = R.paged_block_axes(cfg, cache) if "block_tables" in cache \
+        else {}
+    in_s, out_s, paged = {}, {}, []
+    for k in cache:
+        if k == "block_tables":
+            in_s[k] = out_s[k] = P("model")
+        elif paxes.get(k) is not None:
+            in_s[k] = P()
+            out_s[k] = P("model")          # leaf[None] per shard
+            paged.append(k)
+        else:
+            sp = P(*([None] * axes[k] + ["model"]))
+            in_s[k] = out_s[k] = sp
+    return in_s, out_s, paged, axes
+
+
+def _bitwise_neq(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Elementwise "did the bytes change": float leaves compare as
+    integer bit patterns so a write of 0.0 over -0.0 (equal under IEEE
+    ``!=``) still counts as a write — the merge below must be exact to
+    the BIT, not to float equality (NaN != NaN would also misfire)."""
+    if jnp.issubdtype(a.dtype, jnp.floating):
+        w = {2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}[a.dtype.itemsize]
+        return (jax.lax.bitcast_convert_type(a, w)
+                != jax.lax.bitcast_convert_type(b, w))
+    return a != b
+
+
+def _merge_shard_writes(stacked: jax.Array, old: jax.Array) -> jax.Array:
+    """Fold per-shard copies of a replicated paged leaf: wherever shard
+    i's bytes differ from the pre-step bytes, shard i wrote there.  At
+    most one shard writes any real block per tick (block tables
+    partition real blocks across slots), so the fold order only decides
+    who wins the reserved trash block 0 — which is never read."""
+    acc = old
+    for i in range(stacked.shape[0]):
+        si = stacked[i]
+        acc = jnp.where(_bitwise_neq(si, old), si, acc)
+    return acc
+
+
+def _local_slots(cache: dict, axes: dict, paged_keys) -> int:
+    """This shard's slot count, read off a slot-resident leaf's shape
+    (inside shard_map every leaf is already the local block)."""
+    if "block_tables" in cache:
+        return cache["block_tables"].shape[0]
+    for k, v in cache.items():
+        if k not in paged_keys:
+            return v.shape[axes[k]]
+    raise ValueError("cache has no slot-resident leaf")
+
+
+class _StructMemo:
+    """jit-compiled sharded step per cache STRUCTURE (leaf names + slot
+    axes): the engine's cache structure is fixed per lane, so this holds
+    one entry per (lane family, paged-ness) — the same bounded-compile
+    discipline as the batch ladder."""
+
+    def __init__(self, build):
+        self.build = build
+        self.fns: dict = {}
+
+    def __call__(self, cfg, cache):
+        axes = R.cache_batch_axes(cfg, cache)
+        key = (tuple(sorted(cache)), tuple(sorted(axes.items())))
+        fn = self.fns.get(key)
+        if fn is None:
+            fn = self.fns[key] = self.build(cfg, cache)
+        return fn
+
+
+def _rep_and_row(tp: int):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = _sharded_mesh(tp)
+    return NamedSharding(mesh, P()), NamedSharding(mesh, P("model"))
+
+
+def make_sharded_slot_decode_step(cfg: ArchConfig, *, mode: QuantMode = FP,
+                                  temperature: float = 0.0,
+                                  tp: int = 1) -> Callable:
+    """Tensor-parallel :func:`make_slot_decode_step`: same signature,
+    bit-identical outputs, each shard advancing ``num_slots / tp`` rows
+    with the params replicated.  The pool size must divide by ``tp``
+    (``ShardedExecutor.validate`` enforces it)."""
+    base = make_slot_decode_step(cfg, mode=mode, temperature=temperature)
+    has_rng = temperature > 0.0
+
+    def build(cfg_, cache0):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        in_c, out_c, paged, _ = _sharded_cache_specs(cfg_, cache0)
+        row = P("model")
+
+        def inner(params, tokens, cache, slot_index, active, *rng):
+            with S.manual_axes({"model"}):
+                nxt, new_cache, idx = base(params, tokens, cache,
+                                           slot_index, active, *rng)
+            new_cache = {k: (v[None] if k in paged else v)
+                         for k, v in new_cache.items()}
+            return nxt, new_cache, idx
+
+        in_specs = (P(), row, in_c, row, row) + ((P(),) if has_rng else ())
+        fn = _shard_map(tp)(inner, in_specs=in_specs,
+                            out_specs=(row, out_c, row))
+
+        if has_rng:
+            def outer(params, tokens, cache, slot_index, active, rng):
+                nxt, nc, idx = fn(params, tokens, cache, slot_index,
+                                  active, rng)
+                for k in paged:
+                    nc[k] = _merge_shard_writes(nc[k], cache[k])
+                return nxt, nc, idx
+        else:
+            def outer(params, tokens, cache, slot_index, active):
+                nxt, nc, idx = fn(params, tokens, cache, slot_index,
+                                  active)
+                for k in paged:
+                    nc[k] = _merge_shard_writes(nc[k], cache[k])
+                return nxt, nc, idx
+
+        rep, rowsh = _rep_and_row(tp)
+        mesh = _sharded_mesh(tp)
+        csh_in = {k: NamedSharding(mesh, s) for k, s in in_c.items()}
+        csh_out = {k: (rep if k in paged else NamedSharding(mesh, out_c[k]))
+                   for k in out_c}
+        in_sh = (rep, rowsh, csh_in, rowsh, rowsh) \
+            + ((rep,) if has_rng else ())
+        # no donation: the paged merge reads the pre-step cache bytes,
+        # so the buffer cannot be reused in place (and the non-paged
+        # case keeps the same policy for one uniform compile path)
+        return jax.jit(outer, in_shardings=in_sh,
+                       out_shardings=(rowsh, csh_out, rowsh))
+
+    memo = _StructMemo(build)
+
+    if has_rng:
+        def step(params, tokens, cache, slot_index, active, rng):
+            return memo(cfg, cache)(params, tokens, cache, slot_index,
+                                    active, rng)
+    else:
+        def step(params, tokens, cache, slot_index, active):
+            return memo(cfg, cache)(params, tokens, cache, slot_index,
+                                    active)
+    return step
+
+
+def make_sharded_verify_step(cfg: ArchConfig, *, mode: QuantMode = FP,
+                             k: int, temperature: float = 0.0,
+                             tp: int = 1) -> Callable:
+    """Tensor-parallel :func:`make_verify_step` — the wide speculative
+    verify scan, slot-axis sharded.  The scan is forward-only and
+    collective-free, so it stays inside the 0.4.x-safe subset."""
+    base = make_verify_step(cfg, mode=mode, k=k, temperature=temperature)
+    has_rng = temperature > 0.0
+
+    def build(cfg_, cache0):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        in_c, out_c, paged, _ = _sharded_cache_specs(cfg_, cache0)
+        row = P("model")
+
+        def inner(params, tokens, cache, slot_index, n_tokens, active,
+                  *rng):
+            with S.manual_axes({"model"}):
+                samples, new_cache, idx = base(params, tokens, cache,
+                                               slot_index, n_tokens,
+                                               active, *rng)
+            new_cache = {kk: (v[None] if kk in paged else v)
+                         for kk, v in new_cache.items()}
+            return samples, new_cache, idx
+
+        in_specs = (P(), row, in_c, row, row, row) \
+            + ((P(),) if has_rng else ())
+        fn = _shard_map(tp)(inner, in_specs=in_specs,
+                            out_specs=(row, out_c, row))
+
+        if has_rng:
+            def outer(params, tokens, cache, slot_index, n_tokens,
+                      active, rng):
+                samples, nc, idx = fn(params, tokens, cache, slot_index,
+                                      n_tokens, active, rng)
+                for kk in paged:
+                    nc[kk] = _merge_shard_writes(nc[kk], cache[kk])
+                return samples, nc, idx
+        else:
+            def outer(params, tokens, cache, slot_index, n_tokens,
+                      active):
+                samples, nc, idx = fn(params, tokens, cache, slot_index,
+                                      n_tokens, active)
+                for kk in paged:
+                    nc[kk] = _merge_shard_writes(nc[kk], cache[kk])
+                return samples, nc, idx
+
+        rep, rowsh = _rep_and_row(tp)
+        mesh = _sharded_mesh(tp)
+        csh_in = {kk: NamedSharding(mesh, s) for kk, s in in_c.items()}
+        csh_out = {kk: (rep if kk in paged
+                        else NamedSharding(mesh, out_c[kk]))
+                   for kk in out_c}
+        in_sh = (rep, rowsh, csh_in, rowsh, rowsh, rowsh) \
+            + ((rep,) if has_rng else ())
+        return jax.jit(outer, in_shardings=in_sh,
+                       out_shardings=(rowsh, csh_out, rowsh))
+
+    memo = _StructMemo(build)
+
+    if has_rng:
+        def step(params, tokens, cache, slot_index, n_tokens, active, rng):
+            return memo(cfg, cache)(params, tokens, cache, slot_index,
+                                    n_tokens, active, rng)
+    else:
+        def step(params, tokens, cache, slot_index, n_tokens, active):
+            return memo(cfg, cache)(params, tokens, cache, slot_index,
+                                    n_tokens, active)
+    return step
+
+
+def make_sharded_draft_propose_step(cfg: ArchConfig, *,
+                                    mode: QuantMode = FP, k: int,
+                                    tp: int = 1) -> Callable:
+    """Tensor-parallel :func:`make_draft_propose_step`.  The draft cache
+    is always contiguous (never paged), so this is pure slot sharding
+    with no merge."""
+    base = make_draft_propose_step(cfg, mode=mode, k=k)
+
+    def build(cfg_, cache0):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        in_c, out_c, paged, _ = _sharded_cache_specs(cfg_, cache0)
+        row = P("model")
+
+        def inner(params, tokens, cache, slot_index, active):
+            with S.manual_axes({"model"}):
+                props, new_cache, idx = base(params, tokens, cache,
+                                             slot_index, active)
+            new_cache = {kk: (v[None] if kk in paged else v)
+                         for kk, v in new_cache.items()}
+            return props, new_cache, idx
+
+        fn = _shard_map(tp)(inner, in_specs=(P(), row, in_c, row, row),
+                            out_specs=(row, out_c, row))
+
+        def outer(params, tokens, cache, slot_index, active):
+            props, nc, idx = fn(params, tokens, cache, slot_index, active)
+            for kk in paged:
+                nc[kk] = _merge_shard_writes(nc[kk], cache[kk])
+            return props, nc, idx
+
+        rep, rowsh = _rep_and_row(tp)
+        mesh = _sharded_mesh(tp)
+        csh_in = {kk: NamedSharding(mesh, s) for kk, s in in_c.items()}
+        csh_out = {kk: (rep if kk in paged
+                        else NamedSharding(mesh, out_c[kk]))
+                   for kk in out_c}
+        return jax.jit(outer,
+                       in_shardings=(rep, rowsh, csh_in, rowsh, rowsh),
+                       out_shardings=(rowsh, csh_out, rowsh))
+
+    memo = _StructMemo(build)
+
+    def step(params, tokens, cache, slot_index, active):
+        return memo(cfg, cache)(params, tokens, cache, slot_index, active)
+    return step
+
+
+def make_sharded_prefill_chunk_step(cfg: ArchConfig, *,
+                                    mode: QuantMode = FP, chunk: int,
+                                    tp: int = 1) -> Callable:
+    """Tensor-parallel :func:`make_prefill_chunk_step`: a single-slot
+    dispatch, so exactly ONE shard owns the target row.  Every shard
+    runs the base step on its clamped local row (static shapes — no
+    shard may skip work); the owner's writes are kept via the in-range
+    mask, and for paged leaves the owner's whole diverged copy is
+    selected outside the shard_map (non-owners corrupted a wrong local
+    row's blocks in their private copies, which are discarded)."""
+    base = make_prefill_chunk_step(cfg, mode=mode, chunk=chunk)
+
+    def build(cfg_, cache0):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        in_c, out_c, paged, axes = _sharded_cache_specs(cfg_, cache0)
+
+        def inner(params, tokens, cache, sid, start, n_valid):
+            local_S = _local_slots(cache, axes, paged)
+            off = jax.lax.axis_index("model") * local_S
+            lsid = sid - off
+            in_r = (lsid >= 0) & (lsid < local_S)
+            lsid_c = jnp.clip(lsid, 0, local_S - 1)
+            with S.manual_axes({"model"}):
+                new_cache = base(params, tokens, cache, lsid_c, start,
+                                 n_valid)
+            out = {}
+            for kk, v in new_cache.items():
+                if kk in paged:
+                    out[kk] = v[None]
+                else:
+                    out[kk] = jnp.where(in_r, v, cache[kk])
+            return out
+
+        fn = _shard_map(tp)(inner,
+                            in_specs=(P(), P(), in_c, P(), P(), P()),
+                            out_specs=out_c)
+
+        def outer(params, tokens, cache, sid, start, n_valid):
+            nc = fn(params, tokens, cache, sid, start, n_valid)
+            if paged:
+                local_S = _global_slots(cfg_, cache, axes, paged) // tp
+                owner = jnp.asarray(sid, jnp.int32) // local_S
+                for kk in paged:
+                    nc[kk] = jax.lax.dynamic_index_in_dim(
+                        nc[kk], owner, 0, keepdims=False)
+            return nc
+
+        rep, _ = _rep_and_row(tp)
+        mesh = _sharded_mesh(tp)
+        csh_in = {kk: NamedSharding(mesh, s) for kk, s in in_c.items()}
+        csh_out = {kk: (rep if kk in paged
+                        else NamedSharding(mesh, out_c[kk]))
+                   for kk in out_c}
+        return jax.jit(outer,
+                       in_shardings=(rep, rep, csh_in, rep, rep, rep),
+                       out_shardings=csh_out)
+
+    memo = _StructMemo(build)
+
+    def step(params, tokens, cache, sid, start, n_valid):
+        return memo(cfg, cache)(params, tokens, cache, sid, start, n_valid)
+    return step
+
+
+def _global_slots(cfg: ArchConfig, cache: dict, axes: dict,
+                  paged_keys) -> int:
+    """Global pool size, read off an UNsharded cache (host side)."""
+    if "block_tables" in cache:
+        return cache["block_tables"].shape[0]
+    for k, v in cache.items():
+        if k not in paged_keys:
+            return v.shape[axes[k]]
+    raise ValueError("cache has no slot-resident leaf")
+
+
+def make_sharded_prime_step(cfg: ArchConfig, *, mode: QuantMode = FP,
+                            tp: int = 1) -> Callable:
+    """Tensor-parallel :func:`make_prime_step`.  Prime writes only
+    slot-resident leaves (cross K/V + xlen), so each shard runs the
+    encoder replicated, scatters into its clamped local row, and the
+    in-range mask keeps the owner's write — no paged merge needed."""
+    base = make_prime_step(cfg, mode=mode)
+
+    def build(cfg_, cache0):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        in_c, out_c_all, paged, axes = _sharded_cache_specs(cfg_, cache0)
+        # prime never touches paged leaves: pass them through untouched
+        # and REPLICATED (every shard returns identical bytes, so the
+        # unchecked-replication out_spec is valid) — no stack, no merge
+        out_c = {k: (P() if k in paged else out_c_all[k])
+                 for k in out_c_all}
+        in_cp = {k: (P() if k in paged else in_c[k]) for k in in_c}
+
+        def inner(params, source, cache, sid, n_valid):
+            local_S = _local_slots(cache, axes, paged)
+            off = jax.lax.axis_index("model") * local_S
+            lsid = sid - off
+            in_r = (lsid >= 0) & (lsid < local_S)
+            lsid_c = jnp.clip(lsid, 0, local_S - 1)
+            with S.manual_axes({"model"}):
+                new_cache = base(params, source, cache, lsid_c, n_valid)
+            return {k: (v if k in paged
+                        else jnp.where(in_r, v, cache[k]))
+                    for k, v in new_cache.items()}
+
+        fn = _shard_map(tp)(inner, in_specs=(P(), P(), in_cp, P(), P()),
+                            out_specs=out_c)
+
+        def outer(params, source, cache, sid, n_valid):
+            return fn(params, source, cache, sid, n_valid)
+
+        rep, _ = _rep_and_row(tp)
+        mesh = _sharded_mesh(tp)
+        csh_in = {k: NamedSharding(mesh, s) for k, s in in_cp.items()}
+        csh_out = {k: NamedSharding(mesh, s) for k, s in out_c.items()}
+        return jax.jit(outer,
+                       in_shardings=(rep, rep, csh_in, rep, rep),
+                       out_shardings=csh_out)
+
+    memo = _StructMemo(build)
+
+    def step(params, source, cache, sid, n_valid):
+        return memo(cfg, cache)(params, source, cache, sid, n_valid)
+    return step
+
+
+def cached_sharded_slot_decode_step(cfg: ArchConfig, *,
+                                    mode: QuantMode = FP,
+                                    temperature: float = 0.0,
+                                    tp: int = 1) -> Callable:
+    """Memoized :func:`make_sharded_slot_decode_step` (key includes tp)."""
+    return _cached(("sharded_slot_decode", cfg, mode, temperature, tp),
+                   lambda: make_sharded_slot_decode_step(
+                       cfg, mode=mode, temperature=temperature, tp=tp))
+
+
+def cached_sharded_prefill_chunk_step(cfg: ArchConfig, *,
+                                      mode: QuantMode = FP, chunk: int,
+                                      tp: int = 1) -> Callable:
+    """Memoized :func:`make_sharded_prefill_chunk_step`."""
+    return _cached(("sharded_prefill_chunk", cfg, mode, chunk, tp),
+                   lambda: make_sharded_prefill_chunk_step(
+                       cfg, mode=mode, chunk=chunk, tp=tp))
+
+
+def cached_sharded_prime_step(cfg: ArchConfig, *, mode: QuantMode = FP,
+                              tp: int = 1) -> Callable:
+    """Memoized :func:`make_sharded_prime_step`."""
+    return _cached(("sharded_prime", cfg, mode, tp),
+                   lambda: make_sharded_prime_step(cfg, mode=mode, tp=tp))
+
+
+def cached_sharded_verify_step(cfg: ArchConfig, *, mode: QuantMode = FP,
+                               k: int, temperature: float = 0.0,
+                               tp: int = 1) -> Callable:
+    """Memoized :func:`make_sharded_verify_step`."""
+    return _cached(("sharded_verify", cfg, mode, k, temperature, tp),
+                   lambda: make_sharded_verify_step(
+                       cfg, mode=mode, k=k, temperature=temperature, tp=tp))
+
+
+def cached_sharded_draft_propose_step(cfg: ArchConfig, *,
+                                      mode: QuantMode = FP, k: int,
+                                      tp: int = 1) -> Callable:
+    """Memoized :func:`make_sharded_draft_propose_step`."""
+    return _cached(("sharded_draft_propose", cfg, mode, k, tp),
+                   lambda: make_sharded_draft_propose_step(
+                       cfg, mode=mode, k=k, tp=tp))
+
+
 def greedy_sample(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
 

@@ -23,6 +23,10 @@ class StepWatchdog:
     window: int = 32
     threshold: float = 2.0
     warmup_steps: int = 3          # ignore compile-dominated first steps
+    # who this watchdog watches: a multi-replica run (engine/router.py)
+    # labels each engine's watchdog so straggler warnings attribute to
+    # the right replica instead of an anonymous "engine tick N"
+    name: Optional[str] = None
     _times: List[float] = dataclasses.field(default_factory=list)
     _seen: int = 0
     slow_steps: int = 0
@@ -36,7 +40,8 @@ class StepWatchdog:
             med = statistics.median(self._times)
             if step_seconds > self.threshold * med:
                 self.slow_steps += 1
-                return (f"straggler: step took {step_seconds:.3f}s "
+                tag = f"[{self.name}] " if self.name else ""
+                return (f"{tag}straggler: step took {step_seconds:.3f}s "
                         f"({step_seconds / med:.1f}x median {med:.3f}s)")
         self._times.append(step_seconds)
         if len(self._times) > self.window:

@@ -38,7 +38,10 @@ ROW_KEYS = {
                # per-model tail/goodput/occupancy columns (empty dicts
                # on single-model rows)
                "model", "model_p99_s", "model_mean_ttft_s",
-               "model_goodput_tokens_per_s", "model_mean_occupancy"},
+               "model_goodput_tokens_per_s", "model_mean_occupancy",
+               # scale-out: replica/tensor-parallel fleet columns
+               # (1/1/{} on ordinary single-engine rows)
+               "replicas", "tp", "replica_occupancy"},
 }
 
 
@@ -69,6 +72,12 @@ def bench_doc(tmp_path_factory):
     # satellite: --smoke runs the multi-model gate (two families on one
     # engine under chaos, per-model parity + occupancy consolidation)
     assert "[multiplex] smoke:" in r.stdout
+    # satellite: --smoke runs the fleet gate (2 replicas x 2 models
+    # behind the router, per-model parity, zero leaked blocks)
+    assert "[router] smoke:" in r.stdout
+    # satellite: --smoke runs the sharded-executor parity gate (tp=1
+    # conformance always; multi-device skips gracefully on 1 device)
+    assert "[sharded] smoke:" in r.stdout
     return json.loads(out.read_text())
 
 
@@ -189,6 +198,26 @@ def test_multiplexed_rows_consolidate_occupancy(bench_doc):
     assert all(r["model"] is None for r in eng
                if "+dedicated" not in r["arch"]
                and "+2model" not in r["arch"])
+
+
+def test_router_row_carries_fleet_columns(bench_doc):
+    """The ``+router`` trajectory row: the same engine trace behind the
+    replica router.  It must carry the fleet columns (replicas, tp,
+    per-replica occupancy for every replica) while every ordinary row
+    keeps the single-engine defaults — the schema change is invisible
+    outside the fleet rows."""
+    eng = [r for r in bench_doc["rows"] if r["kind"] == "engine"]
+    routed = [r for r in eng if r["arch"].endswith("+router")]
+    assert routed, "no +router engine row in the trajectory JSON"
+    for row in routed:
+        assert row["replicas"] >= 2 and row["tp"] >= 1
+        assert len(row["replica_occupancy"]) == row["replicas"]
+        assert all(0 < v <= 1 for v in row["replica_occupancy"].values())
+        assert row["p99_s"] > 0 and row["tokens_per_s"] > 0
+    for row in eng:
+        if not row["arch"].endswith("+router"):
+            assert row["replicas"] == 1 and row["tp"] == 1
+            assert row["replica_occupancy"] == {}
 
 
 def test_engine_rows_cover_all_decode_families(bench_doc):
